@@ -1,0 +1,88 @@
+"""Shared benchmark plumbing: stack construction, workload presets, CSV rows.
+
+Every ``figN_*.py`` module exposes ``rows() -> list[dict]`` (machine-readable
+results) and ``main()`` (prints a human table + the aggregate CSV line the
+harness collects).  ``benchmarks.run`` executes all of them.
+"""
+
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+from typing import Dict, List, Optional
+
+ARTIFACTS = Path(__file__).parent / "artifacts"
+ARTIFACTS.mkdir(exist_ok=True)
+
+
+def emit(name: str, rows: List[Dict]) -> None:
+    """Persist benchmark rows as a JSONL artifact."""
+    path = ARTIFACTS / f"{name}.jsonl"
+    with open(path, "w") as f:
+        for r in rows:
+            f.write(json.dumps(r) + "\n")
+    print(f"[{name}] {len(rows)} rows -> {path}")
+
+
+def print_table(rows: List[Dict], cols: Optional[List[str]] = None) -> None:
+    if not rows:
+        print("(no rows)")
+        return
+    cols = cols or list(rows[0].keys())
+    widths = {c: max(len(c), *(len(_fmt(r.get(c))) for r in rows)) for c in cols}
+    print("  ".join(c.ljust(widths[c]) for c in cols))
+    for r in rows:
+        print("  ".join(_fmt(r.get(c)).ljust(widths[c]) for c in cols))
+
+
+def _fmt(v) -> str:
+    if isinstance(v, float):
+        if v == 0:
+            return "0"
+        if abs(v) >= 1e4 or abs(v) < 1e-3:
+            return f"{v:.3e}"
+        return f"{v:.4g}"
+    return str(v)
+
+
+def paper_parallelism(arch: str) -> dict:
+    """The paper's §6.1 deployment configs."""
+    return {
+        "llama3_8b": dict(tp=1, pp=1, ep=1),
+        "llama3_70b": dict(tp=4, pp=1, ep=1),
+        "qwen3_30b_a3b": dict(tp=1, pp=1, ep=2),
+    }.get(arch, dict(tp=1, pp=1, ep=1))
+
+
+def sharegpt_workload(n=100, qps=2.0, seed=0, **kw):
+    from repro.serving.workload import WorkloadConfig, synthesize
+    base = dict(num_requests=n, qps=qps, prompt_len_mean=220.0,
+                output_len_mean=180.0, seed=seed)
+    base.update(kw)
+    return synthesize(WorkloadConfig(**base))
+
+
+def small_workload(n=40, qps=20.0, seed=0, **kw):
+    """CPU-runnable workload for real-mode fidelity benchmarks."""
+    from repro.serving.workload import WorkloadConfig, synthesize
+    base = dict(num_requests=n, qps=qps, prompt_len_mean=24.0,
+                output_len_mean=8.0, max_prompt_len=96, max_output_len=16,
+                vocab_size=500, seed=seed)
+    base.update(kw)
+    return synthesize(WorkloadConfig(**base))
+
+
+def run_stack(model_cfg, engine_cfg, mode, reqs, *, predictor=None,
+              model=None, params=None, max_len=256, timeout=600.0,
+              use_worker_group=True):
+    from repro.serving.benchmark import BenchmarkRunner
+    from repro.serving.stack import build_stack
+    stack = build_stack(model_cfg, engine_cfg, mode, predictor=predictor,
+                        model=model, params=params, max_len=max_len,
+                        use_worker_group=use_worker_group)
+    try:
+        return BenchmarkRunner(stack.engine, reqs,
+                               transport=stack.transport).run(timeout=timeout)
+    finally:
+        stack.shutdown()

@@ -1,0 +1,114 @@
+"""Fig. 6 — end-to-end accuracy: Revati (emulate) vs real execution.
+
+The paper compares emulated TTFT/TPOT distributions against real GPU
+execution on three models.  On this CPU-only container "real execution" is
+the actual JAX model running on CPU (reduced same-family configs — the
+control plane is identical at any scale); the emulator's TablePredictor is
+calibrated from a *disjoint* profiling workload, then both modes replay the
+same evaluation stream.
+
+Derived column: p50/p90/p99 relative error between the real and emulated
+TTFT/TPOT distributions — the paper's claim is <5% at the median.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from benchmarks.common import emit, print_table, small_workload
+from repro.configs import get_reduced_config
+from repro.core.predictor import LinearPredictor
+from repro.models.transformer import build_model
+from repro.serving.benchmark import BenchmarkRunner, compare_distributions
+from repro.serving.scheduler import EngineConfig
+from repro.serving.stack import build_stack
+
+ARCHS = ["qwen2_5_3b", "granite_8b", "mixtral_8x7b"]
+
+
+def engine_cfg(**kw):
+    base = dict(policy="vllm", max_num_seqs=8, max_batched_tokens=64,
+                block_size=4, num_blocks=4096)
+    base.update(kw)
+    return EngineConfig(**base)
+
+
+def run_real(arch: str, reqs, *, max_len=256):
+    import jax
+    cfg = get_reduced_config(arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0), jnp.float32)
+    stack = build_stack(cfg, engine_cfg(), "real", model=model,
+                        params=params, max_len=max_len, max_seqs=8)
+    try:
+        res = BenchmarkRunner(stack.engine, reqs).run(timeout=900)
+        samples = list(stack.runner.samples)
+        return res, samples
+    finally:
+        stack.shutdown()
+
+
+def run_emulated(arch: str, reqs, predictor):
+    cfg = get_reduced_config(arch)
+    stack = build_stack(cfg, engine_cfg(), "emulate", predictor=predictor,
+                        use_worker_group=False)
+    try:
+        return BenchmarkRunner(stack.engine, reqs,
+                               transport=stack.transport).run(timeout=900)
+    finally:
+        stack.shutdown()
+
+
+def measure(arch: str, n: int = 30) -> dict:
+    # calibration workload (disjoint seed) -> operator-linear predictor
+    calib = small_workload(n=max(10, n // 2), qps=15.0, seed=123)
+    _, samples = run_real(arch, calib)
+    table = LinearPredictor()      # Vidur-style operator-linear fit
+    table.fit(samples)
+
+    # evaluation: same stream through real (twice: noise floor) and emulated
+    res_real, _ = run_real(arch, small_workload(n=n, qps=15.0, seed=7))
+    res_real2, _ = run_real(arch, small_workload(n=n, qps=15.0, seed=7))
+    res_emu = run_emulated(arch, small_workload(n=n, qps=15.0, seed=7), table)
+
+    ttft = compare_distributions(res_real.ttft, res_emu.ttft)
+    tpot = compare_distributions(res_real.tpot, res_emu.tpot)
+    noise = compare_distributions(res_real.ttft, res_real2.ttft)
+    return {
+        "arch": arch,
+        "n": n,
+        "real_ttft_p50_ms": round(res_real.ttft.p50 * 1e3, 3),
+        "emu_ttft_p50_ms": round(res_emu.ttft.p50 * 1e3, 3),
+        "ttft_p50_err": round(ttft["median_rel_err"], 4),
+        "ttft_p99_err": round(ttft["p99_rel_err"], 4),
+        "tpot_p50_err": round(tpot["median_rel_err"], 4),
+        "tpot_p99_err": round(tpot["p99_rel_err"], 4),
+        # run-to-run variability of *real* execution on this shared 1-core
+        # container — the measurement noise floor any predictor is bound by
+        # (the paper's dedicated H200s have ~stable kernel times instead)
+        "real_noise_floor": round(noise["median_rel_err"], 4),
+        "real_wall_s": round(res_real.wall_seconds, 2),
+        "emu_wall_s": round(res_emu.wall_seconds, 2),
+        "speedup_vs_real": round(
+            res_real.wall_seconds / max(res_emu.wall_seconds, 1e-9), 2),
+    }
+
+
+def rows(n: int = 30) -> list:
+    return [measure(a, n) for a in ARCHS]
+
+
+def main(n: int = 30) -> list:
+    out = rows(n)
+    print_table(out)
+    emit("fig6_accuracy", out)
+    worst = max(r["ttft_p50_err"] for r in out)
+    floor = max(r["real_noise_floor"] for r in out)
+    print(f"fig6: worst median TTFT error {worst:.2%} vs a real-vs-real "
+          f"run-to-run noise floor of {floor:.2%} on this shared 1-core "
+          f"container (paper: <5% on dedicated H200s)")
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,60 @@
+"""Figs. 9-10 — accuracy & speedup vs request arrival rate (0.5-8 QPS).
+
+The paper fixes batch time at 20 ms (excluding predictor error) and sweeps
+Poisson arrival rates; Revati holds <5% TTFT error across the board while
+speedup shrinks slightly at high load (more CPU work per virtual second).
+
+Derived: ttft_p50_err and speedup_x per QPS.
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import emit, print_table, sharegpt_workload, run_stack
+from repro.configs import get_config
+from repro.core.predictor import StaticPredictor
+from repro.serving.benchmark import compare_distributions
+from repro.serving.scheduler import EngineConfig
+
+QPS_SWEEP = [0.5, 1.0, 2.0, 4.0, 8.0]
+BATCH_S = 20e-3                      # fixed, per the paper's setup
+
+
+def measure(qps: float, n: int = 40) -> dict:
+    cfg = get_config("llama3_8b")
+    ecfg = EngineConfig(policy="vllm", max_num_seqs=64,
+                        max_batched_tokens=512, block_size=16,
+                        num_blocks=32768, chip="h200-sxm")
+    pred = StaticPredictor(BATCH_S)
+    reqs = lambda: sharegpt_workload(n=n, qps=qps, seed=3,
+                                     prompt_len_mean=180, output_len_mean=40)
+    res_sleep = run_stack(cfg, ecfg, "sleep", reqs(), predictor=pred,
+                          timeout=3600)
+    res_emu = run_stack(cfg, ecfg, "emulate", reqs(), predictor=pred,
+                        use_worker_group=False)
+    ttft = compare_distributions(res_sleep.ttft, res_emu.ttft)
+    return {
+        "qps": qps,
+        "ttft_p50_err": round(ttft["median_rel_err"], 4),
+        "ttft_p99_err": round(ttft["p99_rel_err"], 4),
+        "sleep_wall_s": round(res_sleep.wall_seconds, 2),
+        "emu_wall_s": round(res_emu.wall_seconds, 2),
+        "speedup_x": round(res_sleep.wall_seconds
+                           / max(res_emu.wall_seconds, 1e-9), 1),
+    }
+
+
+def rows(n: int = 40) -> list:
+    return [measure(q, n) for q in QPS_SWEEP]
+
+
+def main(n: int = 40) -> list:
+    out = rows(n)
+    print_table(out)
+    emit("fig9_arrival_rate", out)
+    print("fig9/10: <5% TTFT error across rates; speedup dips slightly at "
+          "high QPS (more CPU work per virtual second) — paper §6.3")
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,119 @@
+"""Benchmark harness entry point: one suite per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run            # full suite
+    PYTHONPATH=src python -m benchmarks.run --quick    # reduced sizes
+    PYTHONPATH=src python -m benchmarks.run --only fig3,roofline
+
+Prints a ``name,us_per_call,derived`` CSV summary at the end: ``us_per_call``
+is the benchmark's own wall time in microseconds (what one evaluation of that
+paper artifact costs on this container), ``derived`` the headline metric.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def _fig3(quick):
+    from benchmarks import fig3_cpu_gpu_split as m
+    rows = m.main(n=40 if quick else 100)
+    return f"min_gpu_frac={min(r['gpu_frac'] for r in rows):.4f}"
+
+
+def _fig6(quick):
+    from benchmarks import fig6_accuracy as m
+    rows = m.main(n=16 if quick else 30)
+    worst = max(r["ttft_p50_err"] for r in rows)
+    floor = max(r["real_noise_floor"] for r in rows)
+    return f"worst_ttft_p50_err={worst:.4f},noise_floor={floor:.4f}"
+
+
+def _fig7(quick):
+    from benchmarks import fig7_speedup as m
+    rows = m.main(n=30 if quick else 60)
+    return (f"speedup={min(r['speedup_x'] for r in rows)}-"
+            f"{max(r['speedup_x'] for r in rows)}x")
+
+
+def _fig8(quick):
+    from benchmarks import fig8_batch_duration as m
+    rows = m.main(n=30 if quick else 50)
+    return (f"max_speedup={max(r['speedup_x'] for r in rows)}x,"
+            f"worst_err={max(r['ttft_p50_err'] for r in rows):.4f}")
+
+
+def _fig9(quick):
+    from benchmarks import fig9_arrival_rate as m
+    rows = m.main(n=24 if quick else 40)
+    return f"worst_ttft_p50_err={max(r['ttft_p50_err'] for r in rows):.4f}"
+
+
+def _table1(quick):
+    from benchmarks import table1_features as m
+    rows = m.main()
+    return f"features_ok={sum(1 for r in rows if r['supported'])}/{len(rows)}"
+
+
+def _roofline(quick):
+    from benchmarks import roofline as m
+    rows = m.rows()
+    if not rows:
+        return "no_dryrun_artifacts"
+    from benchmarks.common import emit, print_table
+    print_table(rows)
+    emit("roofline", rows)
+    bounds = {}
+    for r in rows:
+        bounds[r["bound"]] = bounds.get(r["bound"], 0) + 1
+    return f"cells={len(rows)}," + ",".join(
+        f"{k}={v}" for k, v in sorted(bounds.items()))
+
+
+SUITES = [
+    ("fig3_cpu_gpu_split", _fig3),
+    ("fig6_accuracy", _fig6),
+    ("fig7_speedup", _fig7),
+    ("fig8_batch_duration", _fig8),
+    ("fig9_arrival_rate", _fig9),
+    ("table1_features", _table1),
+    ("roofline", _roofline),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default="",
+                    help="comma-separated suite substrings")
+    args = ap.parse_args()
+    only = [s for s in args.only.split(",") if s]
+
+    results = []
+    failed = []
+    for name, fn in SUITES:
+        if only and not any(o in name for o in only):
+            continue
+        print(f"\n=== {name} " + "=" * max(0, 60 - len(name)))
+        t0 = time.time()
+        try:
+            derived = fn(args.quick)
+        except Exception as e:  # noqa: BLE001
+            traceback.print_exc()
+            failed.append(name)
+            derived = f"FAILED:{type(e).__name__}"
+        us = (time.time() - t0) * 1e6
+        results.append((name, us, derived))
+
+    print("\nname,us_per_call,derived")
+    for name, us, derived in results:
+        print(f"{name},{us:.0f},{derived}")
+    if failed:
+        print(f"FAILED suites: {failed}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

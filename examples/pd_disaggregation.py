@@ -1,0 +1,106 @@
+"""Prefill/decode disaggregation under emulation (paper Table 1, §2.1).
+
+Two unmodified engines — a prefill stage and a decode stage — share one
+Timekeeper; completed prefills migrate their KV cache over an emulated
+link whose transfer occupies virtual time.  Compares co-located vs
+disaggregated TTFT/TPOT, the deployment question from Mitra et al. the
+paper cites (prefill-heavy RAG loads favour disaggregation).
+
+    PYTHONPATH=src python examples/pd_disaggregation.py
+"""
+
+from repro.configs import get_config
+from repro.core.client import LocalTransport, TimeJumpClient
+from repro.core.timekeeper import Timekeeper
+from repro.serving.benchmark import BenchmarkRunner, LatencyStats
+from repro.serving.disagg import DisaggConfig, DisaggregatedCluster
+from repro.serving.engine import LLMEngine
+from repro.serving.model_runner import TimeWarpModelRunner
+from repro.serving.scheduler import EngineConfig
+from repro.serving.stack import build_stack, default_predictor
+from repro.serving.workload import WorkloadConfig, synthesize
+
+MODEL = get_config("llama3_8b")
+
+
+def rag_workload(seed=0):
+    """Prefill-heavy (RAG-like): long prompts, short answers."""
+    return synthesize(WorkloadConfig(
+        num_requests=60, qps=2.0, prompt_len_mean=1600, output_len_mean=60,
+        max_prompt_len=4096, seed=seed))
+
+
+def engine_cfg(**kw):
+    base = dict(policy="vllm", max_num_seqs=64, max_batched_tokens=512,
+                block_size=16, num_blocks=32768, chip="h200-sxm")
+    base.update(kw)
+    return EngineConfig(**base)
+
+
+def run_colocated():
+    stack = build_stack(MODEL, engine_cfg(), "emulate",
+                        use_worker_group=False)
+    try:
+        return BenchmarkRunner(stack.engine, rag_workload(),
+                               transport=stack.transport).run(timeout=600)
+    finally:
+        stack.shutdown()
+
+
+def run_disaggregated():
+    tk = Timekeeper(jitter_cooldown=0.0)
+    tr = LocalTransport(tk)
+
+    def make_engine(name):
+        pred = default_predictor(MODEL, engine_cfg())
+        runner = TimeWarpModelRunner(
+            pred, TimeJumpClient(tr, f"{name}-w", auto_register=False))
+        return LLMEngine(engine_cfg(), runner, tk.clock, name=name)
+
+    cluster = DisaggregatedCluster(
+        MODEL, make_engine("prefill"), make_engine("decode"),
+        DisaggConfig(kv_link_bandwidth=50e9), transport=tr)
+    cluster.start()
+    reqs = rag_workload()
+    # dispatcher-as-Actor: jump virtual time to each Poisson arrival
+    dispatcher = TimeJumpClient(tr, "dispatcher")
+    t0 = tk.clock.now()
+    try:
+        for r in sorted(reqs, key=lambda r: r.arrival_time):
+            dispatcher.jump_to(t0 + r.arrival_time)
+            r.arrival_time = tk.clock.now()
+            cluster.submit(r)
+    finally:
+        dispatcher.deregister()
+    ok = cluster.wait_until_complete(len(reqs), timeout=600)
+    assert ok, "disaggregated cluster did not drain"
+    fin = cluster.finished
+    ttft = LatencyStats.of([r.ttft() for r in fin if r.ttft() is not None])
+    tpot = LatencyStats.of([r.tpot() for r in fin
+                            if r.tpot() is not None and r.num_generated > 1])
+    xfer = LatencyStats.of([r.kv_transfer_time for r in fin])
+    cluster.stop()
+    tk.close()
+    return ttft, tpot, xfer
+
+
+def main() -> None:
+    print("co-located (prefill + decode on one engine) ...")
+    co = run_colocated()
+    print("disaggregated (separate prefill/decode engines, KV over link) ...")
+    ttft, tpot, xfer = run_disaggregated()
+
+    print("\n                 co-located    disaggregated")
+    print(f"TTFT p50 (s)     {co.ttft.p50:10.3f}    {ttft.p50:10.3f}")
+    print(f"TTFT p99 (s)     {co.ttft.p99:10.3f}    {ttft.p99:10.3f}")
+    print(f"TPOT p50 (ms)    {co.tpot.p50 * 1e3:10.2f}    {tpot.p50 * 1e3:10.2f}")
+    print(f"TPOT p99 (ms)    {co.tpot.p99 * 1e3:10.2f}    {tpot.p99 * 1e3:10.2f}")
+    print(f"\nKV transfer p50 {xfer.p50 * 1e3:.2f} ms over the 50 GB/s link "
+          f"(occupies virtual time, preserving causality)")
+    print("decode TPOT tail improves when prefill chunks no longer share "
+          "the decode engine's steps — the Mitra et al. trade-off, "
+          "reproduced for free by running the real control planes.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,146 @@
+"""Actor/Observer client API for the virtual time protocol (Algorithm 1).
+
+An *Actor* performs operations with predictable durations (a GPU worker about
+to "execute" a batch, a benchmark dispatcher waiting until the next arrival).
+Instead of sleeping, it calls :meth:`TimeJumpClient.time_jump`, which advances
+*virtual* time by ``Δt`` while consuming as little *wall* time as the barrier
+protocol allows::
+
+    t_target <- GetVirtualTime() + Δt          # compute absolute target once
+    while GetVirtualTime() < t_target:
+        SendTimeJumpRequest(t_target); WaitForAck()
+        t_remaining <- t_target - GetVirtualTime()
+        if t_remaining > 0:
+            WaitForClockUpdate(timeout=t_remaining)   # degradation timeout
+
+A single call may span several barrier rounds (the Timekeeper advances to the
+*minimum* target each round); the loop re-requests the unchanged absolute
+target until reached.  The timeout makes the protocol degrade to sleep-based
+emulation rather than deadlock or mis-order: after ``t_remaining`` wall
+seconds, virtual time has advanced by the same amount (Eq. 1) and the loop
+condition releases the caller.
+
+*Observers* never block time; they read :meth:`now` (and may timestamp events
+they consume).
+"""
+
+from __future__ import annotations
+
+import threading
+from typing import Optional, Protocol
+
+from .clock import VirtualClock
+
+__all__ = ["ActorTransport", "TimeJumpClient", "Observer", "LocalTransport"]
+
+
+class ActorTransport(Protocol):
+    """Minimal surface an actor needs: a clock view + the fan-in request path."""
+
+    clock: VirtualClock
+
+    def send_jump_request(self, actor_id: str, t_target: float) -> int:
+        """Submit a jump request; returns the epoch to wait past (the ack)."""
+        ...
+
+    def register_actor(self, actor_id: str) -> None: ...
+
+    def deregister_actor(self, actor_id: str) -> None: ...
+
+
+class LocalTransport:
+    """In-process transport: direct function calls into the Timekeeper.
+
+    The request path is a method call (fan-in), the update path is the shared
+    clock's condition broadcast (fan-out) — the same asymmetry as the paper's
+    ZeroMQ deployment, collapsed to zero serialization cost.
+    """
+
+    def __init__(self, timekeeper):
+        self._tk = timekeeper
+        self.clock: VirtualClock = timekeeper.clock
+
+    def send_jump_request(self, actor_id: str, t_target: float) -> int:
+        return self._tk.request_jump(actor_id, t_target)
+
+    def register_actor(self, actor_id: str) -> None:
+        self._tk.register_actor(actor_id)
+
+    def deregister_actor(self, actor_id: str) -> None:
+        self._tk.deregister_actor(actor_id)
+
+
+class TimeJumpClient:
+    """Actor-side implementation of TIMEJUMP(Δt) (Algorithm 1)."""
+
+    def __init__(self, transport: ActorTransport, actor_id: str, *, auto_register: bool = True):
+        self._transport = transport
+        self.actor_id = actor_id
+        self._registered = False
+        if auto_register:
+            self.register()
+
+    # ---------------------------------------------------------- lifecycle --
+    def register(self) -> None:
+        if not self._registered:
+            self._transport.register_actor(self.actor_id)
+            self._registered = True
+
+    def deregister(self) -> None:
+        if self._registered:
+            self._transport.deregister_actor(self.actor_id)
+            self._registered = False
+
+    def __enter__(self) -> "TimeJumpClient":
+        self.register()
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.deregister()
+
+    # ----------------------------------------------------------- protocol --
+    def now(self) -> float:
+        return self._transport.clock.now()
+
+    def time_jump(self, dt: float) -> float:
+        """Advance virtual time by ``dt`` seconds; returns the new virtual time.
+
+        ``dt <= 0`` is a no-op returning the current time (a zero-duration
+        operation needs no coordination — wall time already flowed while the
+        caller computed).
+        """
+        clock = self._transport.clock
+        if dt <= 0:
+            return clock.now()
+        t_target = clock.now() + dt  # compute absolute target once (l.1)
+        while True:
+            now, _ = clock.snapshot()
+            if now >= t_target:  # loop guard (l.2)
+                return now
+            # Fan-in request + ack: the epoch to wait past.  If the barrier
+            # resolved inside this call, the epoch has already moved on and
+            # wait_for_update returns immediately.
+            epoch = self._transport.send_jump_request(self.actor_id, t_target)
+            t_remaining = t_target - clock.now()
+            if t_remaining > 0:
+                # Degradation timeout: worst case we ride wall time to the
+                # target (sleep-based emulation) — slow, never incorrect.
+                clock.wait_for_update(epoch, timeout=t_remaining)
+
+    def jump_to(self, t_target: float) -> float:
+        """Advance virtual time to an absolute target (dispatcher convenience)."""
+        return self.time_jump(t_target - self.now())
+
+
+class Observer:
+    """Reactive client: reads virtual time, never blocks its progression."""
+
+    def __init__(self, clock: VirtualClock, name: str = "observer"):
+        self._clock = clock
+        self.name = name
+
+    def now(self) -> float:
+        return self._clock.now()
+
+    def timestamp(self) -> float:
+        return self._clock.now()

@@ -1,0 +1,199 @@
+"""The Timekeeper: barrier-based virtual time coordination (paper §4.2).
+
+The Timekeeper manages virtual time across connected clients.  Clients are
+*Actors* (active drivers with predictable operation durations — GPU workers,
+the benchmark dispatcher) or *Observers* (reactive components that only
+timestamp events).  Only Actors participate in barrier rounds, which is what
+keeps coordination overhead minimal.
+
+Protocol (Algorithm 2)::
+
+    pending <- {}, offset <- 0
+    loop:
+        (c, t_target) <- ReceiveRequest()
+        pending[c] <- t_target
+        if |pending| == numActors:          # all actors at the barrier
+            t_min <- min(pending.values())  # minimum-target rule => causality
+            offset <- max(offset, t_min - t_wall)
+            BroadcastClockUpdate(offset)
+            pending <- {}
+
+Design constraints honoured (paper §4.2.1):
+
+* **No rollback** — virtual time only moves forward; the minimum-target rule
+  guarantees no Actor's clock jumps past an event another Actor still has to
+  produce.
+* **No event-scheduling control** — the Timekeeper never tells a process what
+  to do; it only answers jump requests.  CPU work between jumps consumes
+  virtual time at wall rate automatically (Eq. 1).
+* **Graceful degradation** — if a barrier never resolves (straggler, lost
+  message), clients time out after their remaining *wall* delta, by which
+  point virtual time has advanced by the same amount.  Worst case is
+  sleep-based emulation: slow, never wrong.
+
+Elasticity: actors may register/deregister between rounds (engine scale-up /
+drain).  Deregistration re-evaluates the barrier so a departing actor cannot
+wedge the clock.
+"""
+
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass, field
+from typing import Callable, Dict, Optional, Set
+
+from .clock import VirtualClock, WallSource
+
+__all__ = ["Timekeeper", "TimekeeperStats"]
+
+
+@dataclass
+class TimekeeperStats:
+    """Counters exposed for benchmarks (barrier pressure, acceleration)."""
+
+    rounds: int = 0                 # barrier resolutions
+    requests: int = 0               # jump requests received
+    virtual_advanced: float = 0.0   # seconds of offset added (time skipped)
+    cooldown_waits: int = 0         # jitter cooldowns applied
+    registered_peak: int = 0
+
+    def as_dict(self) -> dict:
+        return {
+            "rounds": self.rounds,
+            "requests": self.requests,
+            "virtual_advanced_s": self.virtual_advanced,
+            "cooldown_waits": self.cooldown_waits,
+            "registered_peak": self.registered_peak,
+        }
+
+
+class Timekeeper:
+    """Central coordinator for virtual time jumps.
+
+    Thread-safe; with the in-process transport, barrier resolution executes in
+    the thread of the last-arriving request (there is no dedicated server
+    thread to context-switch through — the fan-in path *is* the caller).  The
+    socket transport (``repro.core.transport``) wraps this same object with an
+    I/O thread per connection plus a broadcast path, mirroring the paper's
+    split between the I/O thread and the barrier thread.
+
+    Parameters
+    ----------
+    clock:
+        Shared :class:`VirtualClock`.  In-process clients read it directly;
+        socket clients hold replicas updated by broadcasts.
+    jitter_cooldown:
+        The bounded-jitter model of §4.2.1: a ``J``-duration wall-clock
+        cooldown between consecutive clock advances so Observers never read a
+        virtual time "from the future" of an in-flight message.  The paper
+        finds J ≈ 500 µs sufficient; tests set 0 for speed.
+    """
+
+    def __init__(
+        self,
+        clock: Optional[VirtualClock] = None,
+        *,
+        jitter_cooldown: float = 500e-6,
+    ):
+        self.clock = clock or VirtualClock()
+        self.jitter_cooldown = float(jitter_cooldown)
+        self._lock = threading.Lock()
+        self._actors: Set[str] = set()
+        self._pending: Dict[str, float] = {}
+        self._last_advance_wall = -float("inf")
+        self._broadcast_hooks: list[Callable[[float, int], None]] = []
+        self.stats = TimekeeperStats()
+        self._closed = False
+
+    # --------------------------------------------------------- lifecycle --
+    def register_actor(self, actor_id: str) -> None:
+        with self._lock:
+            if self._closed:
+                raise RuntimeError("Timekeeper is closed")
+            self._actors.add(actor_id)
+            self.stats.registered_peak = max(
+                self.stats.registered_peak, len(self._actors)
+            )
+
+    def deregister_actor(self, actor_id: str) -> None:
+        """Remove an actor; re-evaluate the barrier so departure never wedges
+        the remaining actors (elastic scale-down / clean shutdown)."""
+        with self._lock:
+            self._actors.discard(actor_id)
+            self._pending.pop(actor_id, None)
+            self._maybe_resolve_locked()
+
+    def close(self) -> None:
+        with self._lock:
+            self._closed = True
+            self._actors.clear()
+            self._pending.clear()
+        # Final epoch bump releases any straggling waiters immediately.
+        self.clock.advance_to(-float("inf"))
+
+    @property
+    def num_actors(self) -> int:
+        with self._lock:
+            return len(self._actors)
+
+    def add_broadcast_hook(self, hook: Callable[[float, int], None]) -> None:
+        """Fan-out path: called as hook(offset, epoch) after each resolution.
+
+        The socket transport uses this to push updates to remote replicas;
+        in-process clients share ``self.clock`` and need no hook.
+        """
+        with self._lock:
+            self._broadcast_hooks.append(hook)
+
+    # ---------------------------------------------------------- protocol --
+    def request_jump(self, actor_id: str, t_target: float) -> int:
+        """Fan-in path: store the request; resolve the barrier if complete.
+
+        Returns the clock epoch observed *before* any resolution triggered by
+        this request — the client waits for the epoch to move past this value
+        (this closes the ack/broadcast race in Algorithm 1 lines 3–4: if the
+        barrier resolves during this call, the epoch has already moved and the
+        client's wait returns immediately).
+        """
+        with self._lock:
+            if actor_id not in self._actors:
+                raise KeyError(
+                    f"actor {actor_id!r} is not registered with the Timekeeper"
+                )
+            epoch_before = self.clock.epoch
+            self._pending[actor_id] = t_target
+            self.stats.requests += 1
+            self._maybe_resolve_locked()
+            return epoch_before
+
+    # ---------------------------------------------------------- internal --
+    def _maybe_resolve_locked(self) -> None:
+        """Algorithm 2 lines 5–12.  Caller holds ``self._lock``."""
+        if not self._actors:
+            return
+        if not all(a in self._pending for a in self._actors):
+            return
+
+        # Jitter cooldown (§4.2.1 "Handling Message Jitter"): enforce >= J of
+        # wall time between consecutive advances so any message produced under
+        # the previous offset has been delivered before observers can read a
+        # post-jump timestamp.
+        if self.jitter_cooldown > 0:
+            now_wall = self.clock.wall.time()
+            wait = self._last_advance_wall + self.jitter_cooldown - now_wall
+            if wait > 0:
+                self.stats.cooldown_waits += 1
+                # Brief sleep with the lock held: J is ~500 µs and incoming
+                # requests would be barrier-blocked behind this round anyway.
+                self.clock.wall.sleep(wait)
+
+        t_min = min(self._pending[a] for a in self._actors)
+        before = self.clock.offset
+        self.clock.advance_to(t_min)  # epoch bump + notify, even if offset flat
+        after, epoch = self.clock.offset, self.clock.epoch
+        self.stats.virtual_advanced += after - before
+        self.stats.rounds += 1
+        self._last_advance_wall = self.clock.wall.time()
+        self._pending.clear()
+        for hook in self._broadcast_hooks:
+            hook(after, epoch)

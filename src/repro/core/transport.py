@@ -1,0 +1,298 @@
+"""Multi-process transport for the virtual time protocol.
+
+The paper's deployment runs the benchmark runner and the inference engine as
+separate OS processes wired to the Timekeeper over ZeroMQ (§5), with a
+dedicated I/O thread for serialization/sockets and a background thread for
+barrier state.  ZeroMQ is not available offline, so this module implements the
+same architecture on stdlib TCP sockets:
+
+* **fan-in** — each client connection gets a reader thread on the server;
+  jump requests are applied to the shared :class:`Timekeeper` and acked
+  with the pre-resolution epoch.
+* **fan-out** — barrier resolutions enqueue one ``(offset, epoch)`` record;
+  a single broadcast thread serializes it *once* and writes it to every
+  connection (constant serialization cost per round, per §4.2).
+
+Framing: 4-byte big-endian length prefix + msgpack body.
+
+Clients hold a *replica* :class:`VirtualClock` driven by clock-update frames.
+Server and clients must share a wall epoch, so both sides default to
+:class:`UnixWallSource` (``time.time`` — host-shared; cross-host adds NTP skew
+as bounded timestamp error).
+"""
+
+from __future__ import annotations
+
+import queue
+import socket
+import struct
+import threading
+import uuid
+from typing import Dict, Optional
+
+import msgpack
+
+from .clock import UnixWallSource, VirtualClock
+from .timekeeper import Timekeeper
+
+__all__ = ["TimekeeperServer", "SocketTransport"]
+
+_LEN = struct.Struct(">I")
+
+
+def _send_frame(sock: socket.socket, obj: dict) -> None:
+    body = msgpack.packb(obj, use_bin_type=True)
+    sock.sendall(_LEN.pack(len(body)) + body)
+
+
+def _recv_frame(sock: socket.socket) -> Optional[dict]:
+    header = _recv_exact(sock, _LEN.size)
+    if header is None:
+        return None
+    (length,) = _LEN.unpack(header)
+    body = _recv_exact(sock, length)
+    if body is None:
+        return None
+    return msgpack.unpackb(body, raw=False)
+
+
+def _recv_exact(sock: socket.socket, n: int) -> Optional[bytes]:
+    buf = b""
+    while len(buf) < n:
+        try:
+            chunk = sock.recv(n - len(buf))
+        except OSError:
+            return None
+        if not chunk:
+            return None
+        buf += chunk
+    return buf
+
+
+class TimekeeperServer:
+    """TCP front-end for a :class:`Timekeeper` (the paper's Timekeeper service)."""
+
+    def __init__(
+        self,
+        timekeeper: Optional[Timekeeper] = None,
+        host: str = "127.0.0.1",
+        port: int = 0,
+        *,
+        jitter_cooldown: float = 500e-6,
+    ):
+        self.timekeeper = timekeeper or Timekeeper(
+            VirtualClock(UnixWallSource()), jitter_cooldown=jitter_cooldown
+        )
+        self._listener = socket.create_server((host, port))
+        self.address = self._listener.getsockname()
+        self._conns: Dict[int, socket.socket] = {}
+        self._conn_lock = threading.Lock()
+        self._bcast_q: "queue.Queue[Optional[tuple[float, int]]]" = queue.Queue()
+        self.timekeeper.add_broadcast_hook(
+            lambda off, ep: self._bcast_q.put((off, ep))
+        )
+        self._stop = threading.Event()
+        self._accept_thread = threading.Thread(
+            target=self._accept_loop, name="timekeeper-accept", daemon=True
+        )
+        self._bcast_thread = threading.Thread(
+            target=self._broadcast_loop, name="timekeeper-broadcast", daemon=True
+        )
+        self._accept_thread.start()
+        self._bcast_thread.start()
+
+    # ---------------------------------------------------------- fan-out ---
+    def _broadcast_loop(self) -> None:
+        while not self._stop.is_set():
+            item = self._bcast_q.get()
+            if item is None:
+                return
+            offset, epoch = item
+            # Serialize once, write to all (constant cost per round).
+            body = msgpack.packb(
+                {"op": "clock", "offset": offset, "epoch": epoch},
+                use_bin_type=True,
+            )
+            frame = _LEN.pack(len(body)) + body
+            with self._conn_lock:
+                conns = list(self._conns.items())
+            for cid, conn in conns:
+                try:
+                    conn.sendall(frame)
+                except OSError:
+                    self._drop(cid)
+
+    # ----------------------------------------------------------- fan-in ---
+    def _accept_loop(self) -> None:
+        cid = 0
+        while not self._stop.is_set():
+            try:
+                conn, _ = self._listener.accept()
+            except OSError:
+                return
+            conn.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+            cid += 1
+            with self._conn_lock:
+                self._conns[cid] = conn
+            threading.Thread(
+                target=self._serve_conn,
+                args=(cid, conn),
+                name=f"timekeeper-conn-{cid}",
+                daemon=True,
+            ).start()
+
+    def _serve_conn(self, cid: int, conn: socket.socket) -> None:
+        actors_here: set[str] = set()
+        tk = self.timekeeper
+        try:
+            while True:
+                msg = _recv_frame(conn)
+                if msg is None:
+                    break
+                op = msg["op"]
+                if op == "jump":
+                    try:
+                        epoch = tk.request_jump(msg["actor"], msg["target"])
+                        reply = {"op": "jump_ack", "rid": msg["rid"], "epoch": epoch}
+                    except KeyError as e:
+                        reply = {"op": "error", "rid": msg["rid"], "error": str(e)}
+                    _send_frame(conn, reply)
+                elif op == "register":
+                    tk.register_actor(msg["actor"])
+                    actors_here.add(msg["actor"])
+                    _send_frame(
+                        conn,
+                        {
+                            "op": "register_ack",
+                            "rid": msg["rid"],
+                            "offset": tk.clock.offset,
+                            "epoch": tk.clock.epoch,
+                        },
+                    )
+                elif op == "deregister":
+                    tk.deregister_actor(msg["actor"])
+                    actors_here.discard(msg["actor"])
+                    _send_frame(conn, {"op": "deregister_ack", "rid": msg["rid"]})
+                elif op == "time":
+                    _send_frame(
+                        conn,
+                        {
+                            "op": "time_ack",
+                            "rid": msg["rid"],
+                            "offset": tk.clock.offset,
+                            "epoch": tk.clock.epoch,
+                        },
+                    )
+        finally:
+            # Connection death == actor death: deregister so the barrier is
+            # never wedged by a crashed worker (fault tolerance).
+            for actor in actors_here:
+                tk.deregister_actor(actor)
+            self._drop(cid)
+
+    def _drop(self, cid: int) -> None:
+        with self._conn_lock:
+            conn = self._conns.pop(cid, None)
+        if conn is not None:
+            try:
+                conn.close()
+            except OSError:
+                pass
+
+    def close(self) -> None:
+        self._stop.set()
+        self._bcast_q.put(None)
+        try:
+            self._listener.close()
+        except OSError:
+            pass
+        with self._conn_lock:
+            for conn in self._conns.values():
+                try:
+                    conn.close()
+                except OSError:
+                    pass
+            self._conns.clear()
+        self.timekeeper.close()
+
+
+class SocketTransport:
+    """Client-side transport: replica clock + request/reply over one socket.
+
+    Satisfies the :class:`repro.core.client.ActorTransport` protocol, so
+    :class:`TimeJumpClient` works unchanged over it.  Thread-safe: multiple
+    actors in one process may share a transport.
+    """
+
+    def __init__(self, address: tuple[str, int]):
+        self._sock = socket.create_connection(address)
+        self._sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        self.clock = VirtualClock(UnixWallSource())
+        self._send_lock = threading.Lock()
+        self._replies: Dict[str, "queue.Queue[dict]"] = {}
+        self._replies_lock = threading.Lock()
+        self._reader = threading.Thread(
+            target=self._read_loop, name="timekeeper-client-reader", daemon=True
+        )
+        self._reader.start()
+
+    # ------------------------------------------------------------ plumbing --
+    def _read_loop(self) -> None:
+        while True:
+            msg = _recv_frame(self._sock)
+            if msg is None:
+                return
+            if msg["op"] == "clock":
+                # Fan-out path: install the broadcast into the replica clock.
+                self.clock.apply_update(msg["offset"], msg["epoch"])
+                continue
+            rid = msg.get("rid")
+            if rid is None:
+                continue
+            with self._replies_lock:
+                q = self._replies.get(rid)
+            if q is not None:
+                q.put(msg)
+
+    def _rpc(self, msg: dict, timeout: float = 30.0) -> dict:
+        rid = uuid.uuid4().hex
+        msg["rid"] = rid
+        q: "queue.Queue[dict]" = queue.Queue(maxsize=1)
+        with self._replies_lock:
+            self._replies[rid] = q
+        try:
+            with self._send_lock:
+                _send_frame(self._sock, msg)
+            reply = q.get(timeout=timeout)
+        finally:
+            with self._replies_lock:
+                self._replies.pop(rid, None)
+        if reply["op"] == "error":
+            raise KeyError(reply["error"])
+        return reply
+
+    # -------------------------------------------------- ActorTransport API --
+    def register_actor(self, actor_id: str) -> None:
+        reply = self._rpc({"op": "register", "actor": actor_id})
+        self.clock.apply_update(reply["offset"], reply["epoch"])
+
+    def deregister_actor(self, actor_id: str) -> None:
+        self._rpc({"op": "deregister", "actor": actor_id})
+
+    def send_jump_request(self, actor_id: str, t_target: float) -> int:
+        return self._rpc({"op": "jump", "actor": actor_id, "target": t_target})[
+            "epoch"
+        ]
+
+    def observer_time(self) -> float:
+        """One-shot observer query (also refreshes the replica)."""
+        reply = self._rpc({"op": "time"})
+        self.clock.apply_update(reply["offset"], reply["epoch"])
+        return self.clock.now()
+
+    def close(self) -> None:
+        try:
+            self._sock.shutdown(socket.SHUT_RDWR)
+        except OSError:
+            pass
+        self._sock.close()

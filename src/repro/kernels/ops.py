@@ -1,0 +1,52 @@
+"""Dispatch layer: Pallas kernels on TPU, pure-jnp references elsewhere.
+
+``repro.models.layers`` and the serving engine's real-mode runner call these;
+on this CPU-only container the references execute (bit-identical semantics),
+while on TPU the Pallas kernels take over.  ``force`` overrides for tests
+("kernel" runs the Pallas body under interpret=True on CPU).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+from . import ref
+from .flash_attention import flash_attention as _flash_kernel
+from .paged_attention import paged_attention as _paged_kernel
+from .ssd_scan import ssd_scan as _ssd_kernel
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def flash_attention(q, k, v, *, causal=True, window=None,
+                    softmax_scale=None, force: Optional[str] = None):
+    use_kernel = force == "kernel" or (force is None and _on_tpu())
+    if use_kernel:
+        return _flash_kernel(
+            q, k, v, causal=causal, window=window,
+            softmax_scale=softmax_scale, interpret=not _on_tpu())
+    return ref.flash_attention_ref(
+        q, k, v, causal=causal, window=window, softmax_scale=softmax_scale)
+
+
+def paged_attention(q, k_pages, v_pages, block_tables, context_lens, *,
+                    softmax_scale=None, force: Optional[str] = None):
+    use_kernel = force == "kernel" or (force is None and _on_tpu())
+    if use_kernel:
+        return _paged_kernel(
+            q, k_pages, v_pages, block_tables, context_lens,
+            softmax_scale=softmax_scale, interpret=not _on_tpu())
+    return ref.paged_attention_ref(
+        q, k_pages, v_pages, block_tables, context_lens,
+        softmax_scale=softmax_scale)
+
+
+def ssd_scan(xdt, dA, Bm, Cm, *, chunk: int = 128, force: Optional[str] = None):
+    use_kernel = force == "kernel" or (force is None and _on_tpu())
+    if use_kernel:
+        return _ssd_kernel(xdt, dA, Bm, Cm, chunk=chunk, interpret=not _on_tpu())
+    return ref.ssd_scan_ref(xdt, dA, Bm, Cm)

@@ -1,0 +1,291 @@
+"""Production mesh + partitioning rules for every architecture × shape.
+
+Mesh geometry (assignment-mandated):
+
+* single pod:  (16, 16)      axes ("data", "model")      — 256 chips
+* multi-pod:   (2, 16, 16)   axes ("pod", "data", "model") — 512 chips
+
+Sharding strategy (name-based rules with divisibility fallback — a dimension
+is sharded only when it divides evenly; otherwise the rule falls through to
+the next candidate dimension or replication):
+
+* **TP ("model")**: attention heads (falling back to head_dim when the head
+  count doesn't divide, e.g. whisper 8H / recurrentgemma 10H), FFN width,
+  MoE expert dim (dbrx 16e, qwen3 128e; mixtral's 8e falls back to expert-FFN
+  width), vocab for embeddings, SSD inner width.
+* **FSDP ("data" [+ "pod"])** — training only: parameter + optimizer-state
+  dim sharded over the batch axes (ZeRO-3; XLA inserts per-layer
+  all-gathers).  Serving replicates dense weights across "data" (weights are
+  read-only and latency-critical) except MoE expert tensors, which stay
+  data-sharded so dbrx-132B fits 16 GB chips.
+* **Batch ("pod"+"data")**: token batches, KV caches, recurrent states.
+  ``long_500k`` (batch=1) shards the KV *sequence* dim over "data" instead
+  (context-parallel decode).
+
+All rules are *right-aligned* on trailing dimensions, so the same table
+serves stacked scan parameters (L, ...), unstacked per-layer trees, and
+cache pytrees.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.config import ModelConfig
+
+__all__ = [
+    "make_production_mesh",
+    "param_shardings",
+    "cache_shardings",
+    "batch_shardings",
+    "MeshAxes",
+]
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+class MeshAxes:
+    """Resolved axis names/sizes for a mesh (pod axis optional)."""
+
+    def __init__(self, mesh: Mesh):
+        self.mesh = mesh
+        self.names = mesh.axis_names
+        self.sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        self.model = "model" if "model" in self.names else None
+        self.data = "data" if "data" in self.names else None
+        self.pod = "pod" if "pod" in self.names else None
+
+    @property
+    def batch_axes(self) -> Tuple[str, ...]:
+        return tuple(a for a in (self.pod, self.data) if a)
+
+    def batch_size(self) -> int:
+        n = 1
+        for a in self.batch_axes:
+            n *= self.sizes[a]
+        return n
+
+    def model_size(self) -> int:
+        return self.sizes.get("model", 1)
+
+
+def _divides(dim: int, n: int) -> bool:
+    return n > 0 and dim % n == 0
+
+
+class _SpecBuilder:
+    """Builds a PartitionSpec right-aligned on a concrete shape, assigning
+    each mesh axis at most once and only onto evenly-divisible dims."""
+
+    def __init__(self, shape: Sequence[int], ax: MeshAxes):
+        self.shape = tuple(shape)
+        self.ax = ax
+        self.spec: list = [None] * len(shape)
+        self.used: set = set()
+
+    def try_assign(self, pos: int, axis) -> bool:
+        """pos: negative index from the right.  axis: name or tuple."""
+        if axis is None:
+            return False
+        axes = (axis,) if isinstance(axis, str) else tuple(axis)
+        axes = tuple(a for a in axes if a and a not in self.used)
+        if not axes:
+            return False
+        idx = len(self.shape) + pos
+        if idx < 0 or self.spec[idx] is not None:
+            return False
+        total = 1
+        for a in axes:
+            total *= self.ax.sizes[a]
+        if not _divides(self.shape[idx], total):
+            return False
+        self.spec[idx] = axes[0] if len(axes) == 1 else axes
+        self.used.update(axes)
+        return True
+
+    def first(self, candidates) -> None:
+        """Assign the first workable (pos, axis) candidate."""
+        for pos, axis in candidates:
+            if self.try_assign(pos, axis):
+                return
+
+    def build(self) -> P:
+        return P(*self.spec)
+
+
+def _leaf_name(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        elif hasattr(p, "name"):
+            parts.append(str(p.name))
+    return "/".join(parts)
+
+
+# --------------------------------------------------------------------------
+# parameter rules
+# --------------------------------------------------------------------------
+
+def _param_spec(name: str, shape: Tuple[int, ...], ax: MeshAxes,
+                mode: str) -> P:
+    """mode: 'train' (FSDP over batch axes) or 'serve' (dense replicated)."""
+    b = _SpecBuilder(shape, ax)
+    model = ax.model
+    fsdp = ax.batch_axes if mode == "train" else ()
+    fsdp = fsdp if fsdp else None
+    leaf = name.rsplit("/", 1)[-1]
+    nd = len(shape)
+
+    is_moe = "/moe/" in name or name.endswith(("moe/w_in", "moe/w_out"))
+    moe_data = ax.batch_axes or None      # MoE experts: data-shard even in serve
+
+    if leaf in ("embed", "unembed"):
+        # embed (V, d) / unembed (d, V): shard vocab over model, other over fsdp
+        vpos = -2 if leaf == "embed" else -1
+        dpos = -1 if leaf == "embed" else -2
+        b.first([(vpos, model)])
+        b.first([(dpos, fsdp)])
+    elif leaf == "pos_embed":
+        pass  # replicate
+    elif leaf in ("wq", "wk", "wv"):       # (d, H, Dh)
+        b.first([(-2, model), (-1, model)])
+        b.first([(-3, fsdp)])
+    elif leaf == "wo" and nd >= 3 and "attn" in name:   # (H, Dh, d)
+        b.first([(-3, model), (-2, model)])
+        b.first([(-1, fsdp)])
+    elif leaf in ("wi", "wg"):             # (d, F)
+        b.first([(-1, model)])
+        b.first([(-2, fsdp)])
+    elif leaf == "wo":                     # mlp (F, d)
+        b.first([(-2, model)])
+        b.first([(-1, fsdp)])
+    elif leaf == "router":                 # (d, E)
+        b.first([(-2, fsdp)])
+    elif leaf == "w_in" and is_moe:        # (E, d, n*ff)
+        if not b.try_assign(-3, model):    # EP when expert count divides
+            b.first([(-1, model)])
+        b.first([(-2, moe_data)])
+    elif leaf == "w_out" and is_moe:       # (E, ff, d)
+        if not b.try_assign(-3, model):
+            b.first([(-2, model)])
+        b.first([(-1, moe_data)])
+    elif leaf == "w_in":                   # ssd (d, X)
+        b.first([(-1, model)])
+        b.first([(-2, fsdp)])
+    elif leaf == "w_out":                  # ssd/rglru (w, d)
+        b.first([(-2, model)])
+        b.first([(-1, fsdp)])
+    elif leaf in ("w_x", "w_gate_in"):     # rglru (d, w)
+        b.first([(-1, model)])
+        b.first([(-2, fsdp)])
+    elif leaf in ("w_a", "w_i"):           # rglru gates (w, w)
+        b.first([(-1, model)])
+        b.first([(-2, fsdp)])
+    # conv kernels, norms, biases, Λ/A_log/D/dt_bias: replicated
+    return b.build()
+
+
+def param_shardings(mesh: Mesh, params_tree: Any, mode: str = "train") -> Any:
+    """NamedSharding tree matching ``params_tree`` (arrays or SDS)."""
+    ax = MeshAxes(mesh)
+
+    def one(path, leaf):
+        spec = _param_spec(_leaf_name(path), leaf.shape, ax, mode)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(one, params_tree)
+
+
+# --------------------------------------------------------------------------
+# cache rules
+# --------------------------------------------------------------------------
+
+def _cache_spec(name: str, shape: Tuple[int, ...], ax: MeshAxes,
+                *, shard_batch: bool, seq_shard: bool = False) -> P:
+    b = _SpecBuilder(shape, ax)
+    model = ax.model
+    batch = ax.batch_axes or None
+    leaf = name.rsplit("/", 1)[-1]
+    if leaf in ("k", "v", "cross_k", "cross_v"):   # (..., B, S, H, D)
+        if shard_batch:
+            b.first([(-4, batch)])
+        else:
+            b.first([(-3, ax.data)])               # context parallel on seq
+        if seq_shard:
+            # §Perf "kv_seq_shard": decode contexts sharded over "model" on
+            # the sequence dim.  The score contraction then stays local per
+            # S-shard; only the softmax max/sum statistics and the (B,H,D)
+            # output partial-sums cross chips — O(B·H·D) instead of the
+            # O(B·H·S) per-layer score all-reduce that head_dim sharding
+            # forces (head_dim is the fallback when Hkv < |model|).
+            b.first([(-3, model)])
+        b.first([(-2, model), (-1, model)])
+    elif leaf == "kv_pos":                          # (..., B, S)
+        if shard_batch:
+            b.first([(-2, batch)])
+        else:
+            b.first([(-1, ax.data)])
+        if seq_shard:
+            b.first([(-1, model)])
+    elif leaf == "state" and len(shape) >= 4:       # ssd (..., B, H, N, P)
+        if shard_batch:
+            b.first([(-4, batch)])
+        b.first([(-3, model)])
+    elif leaf == "state":                           # rglru (..., B, W)
+        if shard_batch:
+            b.first([(-2, batch)])
+        b.first([(-1, model)])
+    elif leaf == "conv":                            # (..., B, K-1, C)
+        if shard_batch:
+            b.first([(-3, batch)])
+        b.first([(-1, model)])
+    elif leaf == "cache_len":                       # (B,)
+        if shard_batch:
+            b.first([(-1, batch)])
+    return b.build()
+
+
+def cache_shardings(mesh: Mesh, cache_tree: Any, *, batch: int,
+                    seq_shard: bool = False) -> Any:
+    ax = MeshAxes(mesh)
+    shard_batch = _divides(batch, ax.batch_size())
+
+    def one(path, leaf):
+        spec = _cache_spec(_leaf_name(path), leaf.shape, ax,
+                           shard_batch=shard_batch, seq_shard=seq_shard)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(one, cache_tree)
+
+
+# --------------------------------------------------------------------------
+# batch (token input) rules
+# --------------------------------------------------------------------------
+
+def batch_shardings(mesh: Mesh, batch_tree: Any, *, batch: int) -> Any:
+    """tokens/labels (B, S); frontend_embeds (B, F, d); positions (B, S)."""
+    ax = MeshAxes(mesh)
+    shard_batch = _divides(batch, ax.batch_size())
+
+    def one(path, leaf):
+        b = _SpecBuilder(leaf.shape, ax)
+        if shard_batch and len(leaf.shape) >= 1:
+            b.try_assign(-len(leaf.shape), ax.batch_axes)
+        return NamedSharding(mesh, b.build())
+
+    return jax.tree_util.tree_map_with_path(one, batch_tree)
+
+
+def replicated(mesh: Mesh, tree: Any) -> Any:
+    return jax.tree.map(lambda _: NamedSharding(mesh, P()), tree)

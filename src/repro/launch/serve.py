@@ -1,0 +1,99 @@
+"""Serving driver CLI: run any registry architecture through the engine in
+any execution mode.
+
+    # GPU-free emulated evaluation of a 70B deployment:
+    PYTHONPATH=src python -m repro.launch.serve --arch llama3_70b \
+        --mode emulate --tp 4 --qps 2 --num-requests 100
+
+    # strawman sleep-based emulation (paper §3.2):
+    PYTHONPATH=src python -m repro.launch.serve --arch llama3_8b --mode sleep
+
+    # actually execute a reduced model on CPU (ground truth):
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen2_5_3b --mode real
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3_8b")
+    ap.add_argument("--mode", default="emulate",
+                    choices=["emulate", "sleep", "real"])
+    ap.add_argument("--policy", default="vllm", choices=["vllm", "sglang"])
+    ap.add_argument("--chip", default="h200-sxm")
+    ap.add_argument("--tp", type=int, default=1)
+    ap.add_argument("--pp", type=int, default=1)
+    ap.add_argument("--ep", type=int, default=1)
+    ap.add_argument("--max-num-seqs", type=int, default=64)
+    ap.add_argument("--chunk", type=int, default=512,
+                    help="max batched tokens (chunked-prefill budget)")
+    ap.add_argument("--num-requests", type=int, default=100)
+    ap.add_argument("--qps", type=float, default=2.0)
+    ap.add_argument("--prompt-mean", type=float, default=220.0)
+    ap.add_argument("--output-mean", type=float, default=180.0)
+    ap.add_argument("--shared-prefix", type=int, default=0)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--json", action="store_true", help="machine output")
+    args = ap.parse_args()
+
+    from repro.configs import get_config, get_reduced_config
+    from repro.serving.benchmark import BenchmarkRunner
+    from repro.serving.scheduler import EngineConfig
+    from repro.serving.stack import build_stack
+    from repro.serving.workload import WorkloadConfig, synthesize
+
+    engine_cfg = EngineConfig(
+        policy=args.policy, max_num_seqs=args.max_num_seqs,
+        max_batched_tokens=args.chunk, block_size=16, num_blocks=32768,
+        chip=args.chip, tp=args.tp, pp=args.pp, ep=args.ep)
+
+    kw = {}
+    if args.mode == "real":
+        import jax
+        import jax.numpy as jnp
+        from repro.models.transformer import build_model
+        model_cfg = get_reduced_config(args.arch)
+        engine_cfg = EngineConfig(
+            policy=args.policy, max_num_seqs=8, max_batched_tokens=64,
+            block_size=4, num_blocks=4096)
+        model = build_model(model_cfg)
+        kw = dict(model=model,
+                  params=model.init(jax.random.key(0), jnp.float32),
+                  max_len=512, max_seqs=8)
+        print(f"real mode: reduced {model_cfg.arch_id} "
+              f"({model_cfg.param_count():,} params) executing on "
+              f"{jax.default_backend()}")
+    else:
+        model_cfg = get_config(args.arch)
+
+    stack = build_stack(model_cfg, engine_cfg, args.mode, **kw)
+    wl = WorkloadConfig(
+        num_requests=args.num_requests, qps=args.qps,
+        prompt_len_mean=args.prompt_mean, output_len_mean=args.output_mean,
+        shared_prefix_len=args.shared_prefix, seed=args.seed,
+        **({"max_prompt_len": 96, "max_output_len": 16, "vocab_size": 500,
+            "prompt_len_mean": 24, "output_len_mean": 8}
+           if args.mode == "real" else {}))
+    reqs = synthesize(wl)
+    try:
+        res = BenchmarkRunner(stack.engine, reqs,
+                              transport=stack.transport).run(timeout=3600)
+    finally:
+        stack.shutdown()
+
+    summary = dict(arch=args.arch, mode=args.mode, policy=args.policy,
+                   **res.summary())
+    if args.json:
+        print(json.dumps(summary))
+    else:
+        for k, v in summary.items():
+            print(f"  {k:24s} {v:,.3f}" if isinstance(v, float)
+                  else f"  {k:24s} {v}")
+
+
+if __name__ == "__main__":
+    main()

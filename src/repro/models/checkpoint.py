@@ -1,0 +1,77 @@
+"""Checkpointing for training state (params + optimizer + step metadata).
+
+Orbax is not available offline, so checkpoints are flat ``.npz`` archives
+keyed by pytree key-paths, plus a JSON sidecar for scalars.  Writes are
+atomic (tmp file + rename) so a node failure mid-write never corrupts the
+latest checkpoint — the restart path picks the newest *complete* step.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import re
+from pathlib import Path
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+
+PyTree = Any
+
+_SAFE = re.compile(r"[^A-Za-z0-9_.]+")
+
+
+def _flatten(tree: PyTree) -> dict:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(_SAFE.sub("_", str(getattr(p, "key", getattr(p, "idx", p))))
+                       for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save_checkpoint(ckpt_dir: str | Path, step: int, params: PyTree,
+                    opt_state: PyTree, *, extra: Optional[dict] = None) -> Path:
+    ckpt_dir = Path(ckpt_dir)
+    ckpt_dir.mkdir(parents=True, exist_ok=True)
+    final = ckpt_dir / f"step_{step:08d}.npz"
+    tmp = ckpt_dir / f".tmp_step_{step:08d}.npz"
+    blobs = {}
+    for prefix, tree in (("params", params), ("opt", opt_state)):
+        for k, v in _flatten(tree).items():
+            blobs[f"{prefix}/{k}"] = v
+    with open(tmp, "wb") as f:
+        np.savez(f, **blobs)
+    meta = {"step": step, **(extra or {})}
+    (ckpt_dir / f"step_{step:08d}.json").write_text(json.dumps(meta))
+    os.replace(tmp, final)          # atomic publish
+    return final
+
+
+def latest_step(ckpt_dir: str | Path) -> Optional[int]:
+    ckpt_dir = Path(ckpt_dir)
+    if not ckpt_dir.exists():
+        return None
+    steps = [int(p.stem.split("_")[1]) for p in ckpt_dir.glob("step_*.npz")]
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(ckpt_dir: str | Path, step: int, params_like: PyTree,
+                       opt_like: PyTree) -> Tuple[PyTree, PyTree, dict]:
+    """Restore into the structure of (params_like, opt_like) templates."""
+    ckpt_dir = Path(ckpt_dir)
+    data = np.load(ckpt_dir / f"step_{step:08d}.npz")
+    meta = json.loads((ckpt_dir / f"step_{step:08d}.json").read_text())
+
+    def rebuild(prefix: str, tree: PyTree) -> PyTree:
+        flat_keys = list(_flatten(tree).keys())
+        leaves, treedef = jax.tree_util.tree_flatten(tree)
+        new_leaves = []
+        for key, leaf in zip(flat_keys, leaves):
+            arr = data[f"{prefix}/{key}"]
+            assert arr.shape == tuple(leaf.shape), (key, arr.shape, leaf.shape)
+            new_leaves.append(arr.astype(leaf.dtype))
+        return jax.tree_util.tree_unflatten(treedef, new_leaves)
+
+    return rebuild("params", params_like), rebuild("opt", opt_like), meta

@@ -1,0 +1,176 @@
+"""Benchmark runner: dispatches a request stream and collects latency
+distributions (paper Fig. 4's left-hand process).
+
+The **request dispatcher is an Actor**: between arrivals it jumps virtual
+time to the next dispatch timestamp instead of sleeping — this is the other
+half of the paper's integration (the benchmark-runner patch).  The **output
+processor is an Observer**: request completion timestamps are read from the
+shared virtual clock without participating in barriers.
+
+In real/sleep modes the dispatcher degrades transparently: with no
+Timekeeper attached it wall-sleeps to each arrival (the exact strawman
+behaviour), so one code path drives all three modes.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.client import TimeJumpClient
+from repro.core.clock import VirtualClock
+
+from .engine import LLMEngine
+from .request import Request
+
+
+@dataclass
+class LatencyStats:
+    mean: float
+    p50: float
+    p90: float
+    p99: float
+    values: List[float] = field(repr=False, default_factory=list)
+
+    @staticmethod
+    def of(values: Sequence[float]) -> "LatencyStats":
+        if not values:
+            return LatencyStats(0.0, 0.0, 0.0, 0.0, [])
+        arr = np.asarray(values, dtype=np.float64)
+        return LatencyStats(
+            float(arr.mean()),
+            float(np.percentile(arr, 50)),
+            float(np.percentile(arr, 90)),
+            float(np.percentile(arr, 99)),
+            list(map(float, arr)),
+        )
+
+
+@dataclass
+class BenchmarkResult:
+    ttft: LatencyStats
+    tpot: LatencyStats
+    e2e: LatencyStats
+    makespan_virtual: float
+    wall_seconds: float
+    num_requests: int
+    throughput_tokens_per_s: float
+    engine_cpu_overhead: float
+    engine_device_time: float
+
+    @property
+    def speedup(self) -> float:
+        """Virtual seconds simulated per wall second."""
+        return self.makespan_virtual / self.wall_seconds if self.wall_seconds else 0.0
+
+    def summary(self) -> dict:
+        return {
+            "num_requests": self.num_requests,
+            "ttft_p50_ms": self.ttft.p50 * 1e3,
+            "ttft_p90_ms": self.ttft.p90 * 1e3,
+            "ttft_p99_ms": self.ttft.p99 * 1e3,
+            "tpot_p50_ms": self.tpot.p50 * 1e3,
+            "tpot_p90_ms": self.tpot.p90 * 1e3,
+            "e2e_p50_s": self.e2e.p50,
+            "makespan_virtual_s": self.makespan_virtual,
+            "wall_s": self.wall_seconds,
+            "speedup_x": self.speedup,
+            "throughput_tok_s": self.throughput_tokens_per_s,
+        }
+
+
+class BenchmarkRunner:
+    def __init__(
+        self,
+        engine: LLMEngine,
+        requests: List[Request],
+        *,
+        transport=None,              # Timekeeper transport (emulate mode)
+        name: str = "bench",
+    ):
+        self.engine = engine
+        self.requests = sorted(requests, key=lambda r: r.arrival_time)
+        self.transport = transport
+        self.name = name
+        self.clock: VirtualClock = engine.clock
+
+    # ---------------------------------------------------------- dispatch --
+    def _dispatch_loop(self) -> None:
+        client: Optional[TimeJumpClient] = None
+        if self.transport is not None:
+            client = TimeJumpClient(self.transport, f"{self.name}-dispatcher")
+        t0 = self.clock.now()
+        try:
+            for req in self.requests:
+                target = t0 + req.arrival_time
+                if client is not None:
+                    client.jump_to(target)        # Actor: jump, don't sleep
+                else:
+                    dt = target - self.clock.now()
+                    if dt > 0:
+                        self.clock.wall.sleep(dt)  # real/sleep modes
+                req.arrival_time = self.clock.now()
+                self.engine.submit(req)
+        finally:
+            if client is not None:
+                client.deregister()
+
+    # --------------------------------------------------------------- run --
+    def run(self, timeout: float = 600.0) -> BenchmarkResult:
+        wall0 = time.monotonic()
+        v0 = self.clock.now()
+        dispatcher = threading.Thread(
+            target=self._dispatch_loop, name=f"{self.name}-dispatch", daemon=True)
+        started_here = False
+        if self.engine._thread is None:
+            self.engine.start()
+            started_here = True
+        dispatcher.start()
+        ok = self.engine.wait_until_complete(len(self.requests), timeout=timeout)
+        dispatcher.join(timeout=10)
+        wall = time.monotonic() - wall0
+        v1 = self.clock.now()
+        if started_here:
+            self.engine.stop()
+        if not ok:
+            raise TimeoutError(
+                f"benchmark timed out: {len(self.engine.finished)}/"
+                f"{len(self.requests)} finished")
+        return self._collect(wall, v1 - v0)
+
+    def _collect(self, wall: float, makespan: float) -> BenchmarkResult:
+        reqs = self.engine.finished
+        ttft = LatencyStats.of([r.ttft() for r in reqs if r.ttft() is not None])
+        tpot = LatencyStats.of([r.tpot() for r in reqs
+                                if r.tpot() is not None and r.num_generated > 1])
+        e2e = LatencyStats.of([r.e2e_latency() for r in reqs
+                               if r.e2e_latency() is not None])
+        total_tokens = sum(r.num_generated for r in reqs)
+        cpu = sum(s.cpu_overhead_wall for s in self.engine.step_log)
+        dev = sum(s.device_time for s in self.engine.step_log)
+        return BenchmarkResult(
+            ttft=ttft, tpot=tpot, e2e=e2e,
+            makespan_virtual=makespan,
+            wall_seconds=wall,
+            num_requests=len(reqs),
+            throughput_tokens_per_s=total_tokens / makespan if makespan else 0.0,
+            engine_cpu_overhead=cpu,
+            engine_device_time=dev,
+        )
+
+
+def compare_distributions(a: LatencyStats, b: LatencyStats) -> Dict[str, float]:
+    """Percentile-wise relative error between two latency distributions
+    (the paper's Fig. 6/8 accuracy metric: <5% across the CDF)."""
+    out = {}
+    for q in (50, 75, 90, 95, 99):
+        va = float(np.percentile(a.values, q)) if a.values else 0.0
+        vb = float(np.percentile(b.values, q)) if b.values else 0.0
+        denom = max(abs(va), 1e-9)
+        out[f"p{q}_rel_err"] = abs(va - vb) / denom
+    out["median_rel_err"] = out["p50_rel_err"]
+    return out

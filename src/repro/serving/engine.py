@@ -1,0 +1,244 @@
+"""The LLM serving engine: continuous batching over any model runner.
+
+One engine = one scheduler + block manager + prefix cache + model runner.
+The *same control-plane code* runs in all three modes (the paper's central
+claim — no re-implementation, mode changes swap only the runner):
+
+  mode="real"    RealModelRunner      — actual JAX execution (ground truth)
+  mode="emulate" TimeWarpModelRunner  — Revati time-warp emulation
+  mode="sleep"   SleepModelRunner     — strawman wall-clock sleep baseline
+
+Engine-as-Actor: the engine loop's CPU work (scheduling, bookkeeping)
+consumes virtual time at wall rate (Eq. 1); device work is jumped by the
+runner.  When idle, the engine *parks* (deregisters its actors) so the
+benchmark dispatcher alone drives virtual time; ``submit`` unparks it.
+
+Fault tolerance: ``snapshot()``/``restore()`` serialise the complete
+control-plane state (queues, block tables, radix tree, request progress,
+virtual-clock offset) so an emulation can checkpoint/restart across process
+failures — requests in flight resume exactly (emulated modes; real mode
+would also need device state).  See tests/test_fault_tolerance.py.
+"""
+
+from __future__ import annotations
+
+import pickle
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+from repro.core.clock import VirtualClock
+
+from .kv_cache import BlockManager
+from .prefix_cache import RadixPrefixCache
+from .request import Request, RequestState
+from .scheduler import EngineConfig, Scheduler, SchedulerOutput
+
+
+@dataclass
+class StepRecord:
+    t_start: float
+    t_end: float
+    num_prefill_tokens: int
+    num_decode: int
+    batch_size: int
+    cpu_overhead_wall: float     # scheduler+bookkeeping wall seconds
+    device_time: float           # executed/jumped seconds
+
+
+class LLMEngine:
+    def __init__(
+        self,
+        cfg: EngineConfig,
+        runner,
+        clock: VirtualClock,
+        *,
+        name: str = "engine",
+    ):
+        self.cfg = cfg
+        self.runner = runner
+        self.clock = clock
+        self.name = name
+        self.bm = BlockManager(cfg.num_blocks, cfg.block_size)
+        self.prefix_cache = RadixPrefixCache(
+            self.bm,
+            enable=cfg.enable_prefix_caching,
+            host_tier_blocks=cfg.host_tier_blocks,
+            host_write_policy=cfg.host_write_policy,
+        )
+        self.scheduler = Scheduler(cfg, self.bm, self.prefix_cache)
+        self._inbox: List[Request] = []
+        self._lock = threading.Lock()
+        self._wake = threading.Event()
+        self._stop = threading.Event()
+        self._idle = threading.Event()
+        self.finished: List[Request] = []
+        self.step_log: List[StepRecord] = []
+        self._finish_cond = threading.Condition()
+        self._thread: Optional[threading.Thread] = None
+        # Called in the engine thread, synchronously with completion —
+        # BEFORE the engine's next barrier participation.  PD disaggregation
+        # uses this to register the KV-mover actor race-free (§4.3).
+        self.on_finish = None
+
+    # ------------------------------------------------------------- intake --
+    def submit(self, req: Request) -> None:
+        """Thread-safe request submission (benchmark dispatcher calls this).
+
+        The runner is unparked *synchronously in the caller's thread*, under
+        the same lock the engine's park decision takes: by the time submit
+        returns, the engine's actors are registered with the Timekeeper, so
+        the dispatcher's next TIMEJUMP cannot resolve a barrier without them
+        (that race would skip virtual time over the request's processing and
+        corrupt TTFT — see tests/test_system.py fidelity tests)."""
+        with self._lock:
+            self._inbox.append(req)
+            self.runner.unpark()
+        self._wake.set()
+
+    def submit_many(self, reqs: List[Request]) -> None:
+        with self._lock:
+            self._inbox.extend(reqs)
+            self.runner.unpark()
+        self._wake.set()
+
+    # -------------------------------------------------------------- loop --
+    def start(self) -> "LLMEngine":
+        self._thread = threading.Thread(
+            target=self.run_loop, name=f"{self.name}-loop", daemon=True)
+        self._thread.start()
+        return self
+
+    def stop(self) -> None:
+        self._stop.set()
+        self._wake.set()
+        if self._thread is not None:
+            self._thread.join(timeout=30)
+        self.runner.shutdown()
+
+    def run_loop(self) -> None:
+        while not self._stop.is_set():
+            with self._lock:
+                new = self._inbox
+                self._inbox = []
+            for req in new:
+                self.scheduler.add_request(req)
+
+            if not self.scheduler.has_work():
+                # Park: deregister actors so we never wedge the Timekeeper
+                # barrier while idle; dispatcher arrivals wake us.  The park
+                # decision races with submit(): take the inbox lock so a
+                # concurrent submit either lands before (we skip parking) or
+                # after (its synchronous unpark re-registers us).
+                with self._lock:
+                    if self._inbox:
+                        continue
+                    self.runner.park()
+                self._idle.set()
+                self._wake.wait(timeout=0.05)
+                self._wake.clear()
+                continue
+            with self._lock:
+                self.runner.unpark()
+            self._idle.clear()
+
+            self.step()
+        # drain: mark idle so waiters exit
+        self._idle.set()
+
+    def step(self) -> List[Request]:
+        """One engine iteration: schedule -> execute -> bookkeep."""
+        cpu_t0 = time.monotonic()
+        t_start = self.clock.now()
+        out = self.scheduler.schedule(t_start)
+        if out.is_empty:
+            # can happen under total memory pressure; let time flow
+            return []
+        for req in out.preempted:
+            release = getattr(self.runner, "release", None)
+            if release:
+                release(req.request_id)
+        cpu_sched = time.monotonic() - cpu_t0
+        # snapshot batch composition BEFORE bookkeeping mutates request state
+        n_prefill_tokens = sum(
+            s.num_new_tokens for s in out.batch if s.is_prefill)
+        n_decode = sum(1 for s in out.batch if not s.is_prefill)
+
+        tokens = self.runner.execute(out)
+
+        cpu_t1 = time.monotonic()
+        now = self.clock.now()
+        finished = self.scheduler.on_step_complete(out, tokens, now)
+        for req in finished:
+            release = getattr(self.runner, "release", None)
+            if release:
+                release(req.request_id)
+        if finished:
+            if self.on_finish is not None:
+                self.on_finish(finished)
+            with self._finish_cond:
+                self.finished.extend(finished)
+                self._finish_cond.notify_all()
+        cpu_post = time.monotonic() - cpu_t1
+
+        self.step_log.append(StepRecord(
+            t_start=t_start,
+            t_end=now,
+            num_prefill_tokens=n_prefill_tokens,
+            num_decode=n_decode,
+            batch_size=len(out.batch),
+            cpu_overhead_wall=cpu_sched + cpu_post,
+            device_time=now - t_start,
+        ))
+        return finished
+
+    # ----------------------------------------------------------- waiting --
+    def wait_until_complete(self, expected: int, timeout: float = 600.0) -> bool:
+        deadline = time.monotonic() + timeout
+        with self._finish_cond:
+            while len(self.finished) < expected:
+                remaining = deadline - time.monotonic()
+                if remaining <= 0:
+                    return False
+                self._finish_cond.wait(timeout=min(remaining, 1.0))
+        return True
+
+    # ---------------------------------------------------- fault tolerance --
+    def snapshot(self) -> bytes:
+        """Serialise the full control-plane state (emulated modes).
+
+        Captured mid-run between steps; restoring into a fresh engine resumes
+        every in-flight request (running requests are re-queued for
+        recompute, mirroring a real node-failure restart where device state
+        is lost but the request log survives)."""
+        with self._lock:
+            state = {
+                "cfg": self.cfg,
+                "clock_offset": self.clock.offset,
+                "waiting": list(self.scheduler.waiting),
+                "running": list(self.scheduler.running),
+                "inbox": list(self._inbox),
+                "finished": list(self.finished),
+                "step_log": list(self.step_log),
+            }
+            return pickle.dumps(state)
+
+    @staticmethod
+    def restore(blob: bytes, runner, clock: VirtualClock,
+                name: str = "engine-restored") -> "LLMEngine":
+        state = pickle.loads(blob)
+        eng = LLMEngine(state["cfg"], runner, clock, name=name)
+        clock.advance_to(clock.wall.time() + state["clock_offset"])
+        # Device KV state died with the failure: running requests are
+        # re-queued for recompute-from-scratch (idempotent replay).
+        for req in state["running"]:
+            req.reset_for_recompute()
+            req.state = RequestState.WAITING
+            eng.scheduler.waiting.append(req)
+        for req in state["waiting"]:
+            eng.scheduler.waiting.append(req)
+        eng._inbox = list(state["inbox"])
+        eng.finished = list(state["finished"])
+        eng.step_log = list(state["step_log"])
+        return eng

@@ -1,0 +1,339 @@
+"""Model runners: where the serving engine crosses into "device" execution.
+
+This boundary is the JAX analogue of vLLM/SGLang's CUDA call sites, and the
+*only* place Revati integration touches the engine (the paper's "<25 lines to
+onboard a serving system" — here it is the :class:`TimeWarpModelRunner`):
+
+* :class:`RealModelRunner` — executes the actual JAX model (ground truth for
+  the fidelity benchmarks; CPU here, TPU in production).  Also doubles as
+  the profiler that fits the :class:`~repro.core.predictor.TablePredictor`.
+* :class:`TimeWarpModelRunner` — Revati: predicts the step duration and
+  requests a TIMEJUMP instead of executing.  Weights and KV pool are
+  ComputeBuffers in the VirtualDeviceContext (split-state memory model);
+  returned token values are constants — a successful run proves the control
+  plane never consumed phantom data.
+* :class:`SleepModelRunner` — the paper's strawman: predict, then *sleep* the
+  wall clock for the duration (correct but slow; Figs. 8–10 baseline).
+
+All runners share the BatchSpec translation, so predictor inputs are
+identical across modes by construction.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core.client import TimeJumpClient
+from repro.core.clock import VirtualClock
+from repro.core.emulation import VirtualDeviceContext
+from repro.core.predictor import BatchSpec, RuntimePredictor, SeqSpec
+
+from .scheduler import ScheduledSeq, SchedulerOutput
+
+DUMMY_TOKEN = 0  # emulated modes: values are never consumed by control flow
+
+
+def batch_spec_of(out: SchedulerOutput) -> BatchSpec:
+    seqs = []
+    for s in out.batch:
+        req = s.request
+        seqs.append(SeqSpec(
+            new_tokens=s.num_new_tokens,
+            context_len=req.context_len + s.num_new_tokens,
+            cached_prefix=req.cached_prefix_len if s.is_prefill else 0,
+        ))
+    return BatchSpec.make(tuple(seqs))
+
+
+def _producing(out: SchedulerOutput) -> List[ScheduledSeq]:
+    """Sequences that emit a token this step (decode + final prefill chunk)."""
+    res = []
+    for s in out.batch:
+        req = s.request
+        if not s.is_prefill:
+            res.append(s)
+        elif req.num_prefilled + s.num_new_tokens >= req.prompt_len:
+            res.append(s)
+    return res
+
+
+class TimeWarpModelRunner:
+    """Revati's device-side integration: ~20 effective lines of engine patch.
+
+    Each ``execute`` asks the predictor "how long would this batch take on
+    the target hardware?" and jumps virtual time by the answer through the
+    Timekeeper.  With ``workers`` set, the jump is performed by every worker
+    of the TP group plus a collective barrier (NCCL-as-barrier, §4.3).
+    """
+
+    def __init__(
+        self,
+        predictor: RuntimePredictor,
+        client: Optional[TimeJumpClient] = None,
+        *,
+        workers: Optional["object"] = None,   # repro.serving.workers.WorkerGroup
+        devices: Optional[VirtualDeviceContext] = None,
+        weight_bytes: int = 0,
+        kv_pool_bytes: int = 0,
+    ):
+        self.predictor = predictor
+        self.client = client
+        self.workers = workers
+        self.devices = devices
+        self.step_estimates: List[dict] = []
+        if devices is not None:
+            n = len(devices.devices)
+            self._buffers = []
+            for d in range(n):
+                if weight_bytes:
+                    self._buffers.append(devices.malloc(
+                        weight_bytes // n, d, tag="weights"))
+                if kv_pool_bytes:
+                    self._buffers.append(devices.malloc(
+                        kv_pool_bytes // n, d, tag="kv_pool"))
+
+    # ------------------------------------------------------------ running --
+    def execute(self, out: SchedulerOutput) -> Dict[int, int]:
+        est = self.predictor.predict_step(batch_spec_of(out))
+        self.step_estimates.append(est.as_dict())
+        if self.workers is not None:
+            self.workers.execute_step(est.total)
+        elif self.client is not None:
+            self.client.time_jump(est.total)          # <-- the Revati patch
+        return {s.request.request_id: DUMMY_TOKEN for s in _producing(out)}
+
+    # actor lifecycle (engine parks when idle so it never wedges the barrier)
+    def park(self) -> None:
+        if self.workers is not None:
+            self.workers.park()
+        elif self.client is not None:
+            self.client.deregister()
+
+    def unpark(self) -> None:
+        if self.workers is not None:
+            self.workers.unpark()
+        elif self.client is not None:
+            self.client.register()
+
+    def shutdown(self) -> None:
+        self.park()
+        if self.workers is not None:
+            self.workers.shutdown()
+
+
+class SleepModelRunner:
+    """Strawman sleep-based emulation (§3.2): correct, wall-clock slow."""
+
+    def __init__(self, predictor: RuntimePredictor, clock: VirtualClock):
+        self.predictor = predictor
+        self.clock = clock
+        self.step_estimates: List[dict] = []
+
+    def execute(self, out: SchedulerOutput) -> Dict[int, int]:
+        est = self.predictor.predict_step(batch_spec_of(out))
+        self.step_estimates.append(est.as_dict())
+        # Precise (spin-tailed) sleep: plain time.sleep overshoots by OS timer
+        # slop, which would systematically bias this baseline slow.
+        self.clock.wall.sleep_precise(est.total)
+        return {s.request.request_id: DUMMY_TOKEN for s in _producing(out)}
+
+    def park(self) -> None: ...
+    def unpark(self) -> None: ...
+    def shutdown(self) -> None: ...
+
+
+class RealModelRunner:
+    """Executes the actual JAX model — ground truth for fidelity runs.
+
+    Slot-based execution with fixed shapes (no recompilation in steady
+    state): a shared decode cache holds ``max_seqs`` slots; prefill chunks
+    run per-sequence (batch 1, bucketed chunk lengths) and their KV is
+    scattered into the slot cache.  Mixed batches execute as
+    prefill-calls + one batched decode call; the wall-clock sum is the
+    step's real duration (recorded for TablePredictor calibration).
+    """
+
+    def __init__(self, model, params, *, max_seqs: int, max_len: int,
+                 clock: VirtualClock, chunk_buckets=(32, 64, 128, 256, 512)):
+        import jax
+        import jax.numpy as jnp
+
+        self.model = model
+        self.params = params
+        self.max_seqs = max_seqs
+        self.max_len = max_len
+        self.clock = clock
+        self.chunk_buckets = tuple(sorted(chunk_buckets))
+        # Padded prefill is only sound for pure-attention stacks (pad KV is
+        # position-masked).  Recurrent blocks (SSD / RG-LRU) would fold pad
+        # tokens into their state, so those archs run exact-length chunks
+        # (one extra compile per distinct remainder length).
+        kinds = set(getattr(model.cfg, "layer_pattern", ("attn",)))
+        self._pad_prefill = kinds <= {"attn", "local_attn"}
+        self._jax = jax
+        self._jnp = jnp
+        self._slack = self.chunk_buckets[-1]
+        self.cache = model.init_cache(max_seqs, max_len, jnp.float32,
+                                      window_slack=self._slack)
+        self._slot_of: Dict[int, int] = {}
+        self._free_slots = list(range(max_seqs))[::-1]
+        self._axes = self._cache_batch_axes()
+        self._decode = jax.jit(model.decode_step, donate_argnums=(1,))
+        self._prefill = jax.jit(model.prefill)
+        self.samples: List[tuple] = []       # (BatchSpec, seconds) for fitting
+        self._pending_tokens: Dict[int, int] = {}
+
+    # ------------------------------------------------------------ warmup --
+    def warmup(self) -> None:
+        """Compile every steady-state shape (prefill buckets + the batched
+        decode) outside measured time.  Without this, first-call XLA compiles
+        (seconds) land inside step timings and poison both the TablePredictor
+        calibration and the fidelity comparison — the real-hardware analogue
+        of excluding warmup iterations from profiling."""
+        jax, jnp = self._jax, self._jnp
+        import numpy as np
+        cfg = self.model.cfg
+        if self._pad_prefill and cfg.frontend is None:
+            empty = self.model.init_cache(1, self.max_len, jnp.float32,
+                                          window_slack=self._slack)
+            for b in self.chunk_buckets:
+                toks = jnp.zeros((1, b), jnp.int32)
+                pos = jnp.asarray(np.arange(b)[None], jnp.int32)
+                small = dict(empty)
+                small["cache_len"] = jnp.asarray([0], jnp.int32)
+                self._prefill(self.params,
+                              {"tokens": toks, "positions": pos}, small)
+        toks = jnp.zeros((self.max_seqs, 1), jnp.int32)
+        _, donated = self._decode(self.params, self.cache, toks)
+        jax.block_until_ready(donated["cache_len"])
+        # decode warmup stamped pos-0 tags into every slot; rebuild the pool
+        self.cache = self.model.init_cache(self.max_seqs, self.max_len,
+                                           jnp.float32,
+                                           window_slack=self._slack)
+
+    # ---------------------------------------------------- cache plumbing --
+    def _cache_batch_axes(self) -> Dict[str, int]:
+        axes = {"cache_len": 0}
+        uniform = getattr(self.model, "uniform", "x")
+        axes["layers"] = 0 if uniform is None else 1
+        axes["cross_k"] = 1
+        axes["cross_v"] = 1
+        return axes
+
+    def _write_slot(self, slot: int, small_cache) -> None:
+        """Scatter a batch-1 cache into slot ``slot`` of the shared cache."""
+        jnp = self._jnp
+        for key, sub in small_cache.items():
+            ax = self._axes.get(key, 0)
+            def put(big, small):
+                idx = [slice(None)] * big.ndim
+                idx[ax] = slice(slot, slot + 1)
+                return big.at[tuple(idx)].set(small.astype(big.dtype))
+            self.cache[key] = self._jax.tree.map(put, self.cache[key], sub)
+
+    def _slot_cache(self, slot: int):
+        def take(big, ax):
+            idx = [slice(None)] * big.ndim
+            idx[ax] = slice(slot, slot + 1)
+            return big[tuple(idx)]
+        return {
+            key: self._jax.tree.map(lambda x, a=self._axes.get(key, 0): take(x, a), sub)
+            for key, sub in self.cache.items()
+        }
+
+    # ------------------------------------------------------------ running --
+    def execute(self, out: SchedulerOutput) -> Dict[int, int]:
+        jax, jnp = self._jax, self._jnp
+        t0 = time.monotonic()
+        tokens: Dict[int, int] = {}
+
+        prefills = [s for s in out.batch if s.is_prefill]
+        decodes = [s for s in out.batch if not s.is_prefill]
+
+        # ---- prefill chunks, per sequence, bucketed lengths ----
+        for s in prefills:
+            req = s.request
+            slot = self._slot_of.get(req.request_id)
+            if slot is None:
+                slot = self._free_slots.pop()
+                self._slot_of[req.request_id] = slot
+                # zero the slot
+                empty = self.model.init_cache(1, self.max_len, jnp.float32,
+                                              window_slack=self._slack)
+                self._write_slot(slot, {k: empty[k] for k in empty})
+            start = req.num_prefilled
+            chunk = list(req.prompt_tokens[start : start + s.num_new_tokens])
+            if self._pad_prefill:
+                bucket = next((b for b in self.chunk_buckets if b >= len(chunk)),
+                              len(chunk))
+            else:
+                bucket = len(chunk)
+            pad = bucket - len(chunk)
+            toks = jnp.asarray(chunk + [0] * pad, jnp.int32)[None]
+            # pad positions land in the scratch region past max_len: they are
+            # masked for every real query (pos > any q_pos) and their ring
+            # slots never alias live context.
+            real_pos = start + np.arange(len(chunk))
+            pad_pos = self.max_len + np.arange(pad)
+            positions = jnp.asarray(
+                np.concatenate([real_pos, pad_pos])[None], jnp.int32)
+            small = self._slot_cache(slot)
+            # correct cache_len for padding: advance only by real chunk
+            small["cache_len"] = jnp.asarray([start], jnp.int32)
+            logits, new_small = self._prefill(
+                self.params, {"tokens": toks, "positions": positions}, small)
+            new_small["cache_len"] = jnp.asarray([start + len(chunk)], jnp.int32)
+            self._write_slot(slot, new_small)
+            if start + len(chunk) >= req.prompt_len:
+                # padded garbage may occupy ring slots > prompt end; for the
+                # fidelity workloads prompts are block-aligned so pad == 0 in
+                # the final chunk, and logits are the true first token.
+                tokens[req.request_id] = int(jnp.argmax(logits[0]))
+
+        # ---- batched decode over the shared slot cache ----
+        if decodes:
+            step_tokens = np.zeros((self.max_seqs, 1), np.int32)
+            for s in decodes:
+                req = s.request
+                slot = self._slot_of[req.request_id]
+                last = (req.output_tokens[-1] if req.output_tokens
+                        else self._pending_tokens.get(req.request_id, 0))
+                step_tokens[slot, 0] = last
+            # cache_len per slot must reflect each sequence's context
+            cl = np.zeros((self.max_seqs,), np.int32)
+            for s in decodes:
+                cl[self._slot_of[s.request.request_id]] = s.request.context_len
+            self.cache["cache_len"] = jnp.asarray(cl)
+            logits, self.cache = self._decode(
+                self.params, self.cache, jnp.asarray(step_tokens))
+            picked = np.asarray(jnp.argmax(logits, axis=-1))
+            for s in decodes:
+                slot = self._slot_of[s.request.request_id]
+                tokens[s.request.request_id] = int(picked[slot])
+
+        jax.block_until_ready(self.cache["cache_len"])
+        dt = time.monotonic() - t0
+        self.samples.append((batch_spec_of(out), dt))
+
+        # release slots of finishing requests
+        for s in out.batch:
+            req = s.request
+            if (not s.is_prefill and
+                    req.num_generated + 1 >= req.max_new_tokens):
+                slot = self._slot_of.pop(req.request_id, None)
+                if slot is not None:
+                    self._free_slots.append(slot)
+        return tokens
+
+    def release(self, request_id: int) -> None:
+        slot = self._slot_of.pop(request_id, None)
+        if slot is not None:
+            self._free_slots.append(slot)
+
+    def park(self) -> None: ...
+    def unpark(self) -> None: ...
+    def shutdown(self) -> None: ...

@@ -1,0 +1,113 @@
+"""Stack factory: wire a serving engine in any of the three modes.
+
+This is the ~25-line "onboarding" surface the paper advertises: choosing
+``mode="emulate"`` swaps the model runner and attaches the Timekeeper; every
+other component (scheduler, block manager, prefix cache, benchmark runner)
+is reused bit-for-bit.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+from repro.core.client import LocalTransport, TimeJumpClient
+from repro.core.clock import VirtualClock
+from repro.core.emulation import VirtualDeviceContext
+from repro.core.hardware import get_chip
+from repro.core.predictor import (AnalyticalPredictor, ParallelSpec,
+                                  RuntimePredictor)
+from repro.core.timekeeper import Timekeeper
+from repro.models.config import ModelConfig
+
+from .engine import LLMEngine
+from .model_runner import (RealModelRunner, SleepModelRunner,
+                           TimeWarpModelRunner)
+from .scheduler import EngineConfig
+from .workers import WorkerGroup
+
+
+@dataclass
+class ServingStack:
+    engine: LLMEngine
+    clock: VirtualClock
+    transport: Optional[LocalTransport] = None
+    timekeeper: Optional[Timekeeper] = None
+    devices: Optional[VirtualDeviceContext] = None
+    runner: object = None
+
+    def shutdown(self) -> None:
+        self.engine.stop()
+        if self.timekeeper is not None:
+            self.timekeeper.close()
+
+
+def default_predictor(model_cfg: ModelConfig, engine_cfg: EngineConfig,
+                      *, overlap_collectives: bool = False) -> AnalyticalPredictor:
+    return AnalyticalPredictor(
+        model_cfg,
+        ParallelSpec(tp=engine_cfg.tp, pp=engine_cfg.pp, ep=engine_cfg.ep),
+        get_chip(engine_cfg.chip),
+        overlap_collectives=overlap_collectives,
+    )
+
+
+def build_stack(
+    model_cfg: ModelConfig,
+    engine_cfg: EngineConfig,
+    mode: str,
+    *,
+    predictor: Optional[RuntimePredictor] = None,
+    model=None,
+    params=None,
+    max_seqs: Optional[int] = None,
+    max_len: int = 512,
+    jitter_cooldown: float = 0.0,
+    use_worker_group: bool = True,
+    name: str = "engine",
+) -> ServingStack:
+    if mode == "emulate":
+        tk = Timekeeper(jitter_cooldown=jitter_cooldown)
+        transport = LocalTransport(tk)
+        clock = tk.clock
+        pred = predictor or default_predictor(model_cfg, engine_cfg)
+        chip = get_chip(engine_cfg.chip)
+        n_dev = engine_cfg.tp * engine_cfg.pp
+        devices = VirtualDeviceContext(n_dev, chip)
+        kv_pool = int(
+            engine_cfg.num_blocks * engine_cfg.block_size
+            * model_cfg.kv_bytes_per_token())
+        weights = model_cfg.param_count() * model_cfg.dtype_bytes
+        if use_worker_group and n_dev > 1:
+            workers = WorkerGroup(transport, n_dev, name=f"{name}-w")
+            runner = TimeWarpModelRunner(
+                pred, workers=workers, devices=devices,
+                weight_bytes=weights, kv_pool_bytes=kv_pool)
+        else:
+            client = TimeJumpClient(transport, f"{name}-worker")
+            runner = TimeWarpModelRunner(
+                pred, client, devices=devices,
+                weight_bytes=weights, kv_pool_bytes=kv_pool)
+        engine = LLMEngine(engine_cfg, runner, clock, name=name)
+        return ServingStack(engine, clock, transport, tk, devices, runner)
+
+    if mode == "sleep":
+        clock = VirtualClock()
+        pred = predictor or default_predictor(model_cfg, engine_cfg)
+        runner = SleepModelRunner(pred, clock)
+        engine = LLMEngine(engine_cfg, runner, clock, name=name)
+        return ServingStack(engine, clock, runner=runner)
+
+    if mode == "real":
+        assert model is not None and params is not None, \
+            "real mode needs a model + params"
+        clock = VirtualClock()
+        runner = RealModelRunner(
+            model, params,
+            max_seqs=max_seqs or engine_cfg.max_num_seqs,
+            max_len=max_len, clock=clock)
+        runner.warmup()   # exclude XLA compiles from measured step times
+        engine = LLMEngine(engine_cfg, runner, clock, name=name)
+        return ServingStack(engine, clock, runner=runner)
+
+    raise ValueError(f"unknown mode {mode!r}")

@@ -1,0 +1,38 @@
+"""Dry-run machinery: one real (small) cell lowers + compiles on the
+production mesh in a subprocess (the main test process must keep 1 device),
+and the artifact carries all roofline raw material.
+"""
+
+import json
+import subprocess
+import sys
+
+
+def test_dryrun_cell_subprocess(tmp_path):
+    out = tmp_path / "cell.jsonl"
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun",
+         "--arch", "whisper_base", "--shape", "decode_32k",
+         "--out", str(out)],
+        capture_output=True, text=True, timeout=570,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "HOME": "/root"})
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    rec = json.loads(out.read_text().splitlines()[0])
+    assert rec["mesh"] == "16x16" and rec["chips"] == 256
+    assert rec["entry"] == "serve_step"
+    assert rec["cost"]["flops"] > 0
+    assert rec["cost"]["bytes_accessed"] > 0
+    assert rec["memory"]["peak_per_device"] > 0
+    assert rec["collectives"]["total_ops"] >= 0
+    assert rec["collectives"]["unknown_trip_loops"] == 0, \
+        "every while loop must carry a known trip count"
+
+
+def test_all_cells_registry():
+    from repro.configs import ARCH_IDS, all_cells, get_config
+    cells = all_cells()
+    assert len(cells) == 33                      # 40 - 7 long_500k skips
+    assert len({a for a, _ in cells}) == 10
+    # exactly the sub-quadratic archs run long_500k
+    long_archs = {a for a, s in cells if s == "long_500k"}
+    assert long_archs == {"mixtral_8x7b", "recurrentgemma_2b", "mamba2_370m"}

@@ -1,0 +1,56 @@
+"""kv_append="defer" (§Perf kv_defer_append) must be numerically equivalent
+to the inline per-layer append: same logits for chunked prefill and decode,
+and the deferred cache must equal the inline cache after the write.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced_config
+from repro.models.transformer import build_model
+
+ARCHS = ["qwen2_5_3b", "mixtral_8x7b", "recurrentgemma_2b", "olmo_1b"]
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_defer_matches_inline(arch):
+    cfg_in = get_reduced_config(arch)
+    cfg_df = cfg_in.replace(kv_append="defer")
+    m_in = build_model(cfg_in)
+    m_df = build_model(cfg_df)
+    key = jax.random.key(0)
+    params = m_in.init(key, jnp.float32)
+
+    B, T = 2, 12
+    toks = np.asarray(jax.random.randint(key, (B, T + 4), 0,
+                                         cfg_in.vocab_size))
+
+    def run(model):
+        cache = model.init_cache(B, 64, jnp.float32)
+        # chunked prefill: 2 chunks
+        l1, cache = model.prefill(
+            params, {"tokens": jnp.asarray(toks[:, :T // 2])}, cache)
+        l2, cache = model.prefill(
+            params, {"tokens": jnp.asarray(toks[:, T // 2:T])}, cache)
+        # a few decode steps
+        logits = [l2]
+        for t in range(T, T + 4):
+            l, cache = model.decode_step(params, cache,
+                                         jnp.asarray(toks[:, t:t + 1]))
+            logits.append(l)
+        return logits, cache
+
+    logits_in, cache_in = run(m_in)
+    logits_df, cache_df = run(m_df)
+    for a, b in zip(logits_in, logits_df):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-3, atol=2e-3,
+                                   err_msg=f"{arch}: defer diverges")
+    # caches identical after the deferred write lands
+    for leaf_a, leaf_b in zip(jax.tree.leaves(cache_in),
+                              jax.tree.leaves(cache_df)):
+        np.testing.assert_allclose(np.asarray(leaf_a, np.float32),
+                                   np.asarray(leaf_b, np.float32),
+                                   rtol=2e-4, atol=2e-4)

@@ -1,0 +1,184 @@
+"""Per-architecture smoke tests (assignment requirement).
+
+For each of the 10 assigned architectures (+ the paper's 3 eval models):
+instantiate the REDUCED same-family config, run one forward/train step and a
+prefill→decode round-trip on CPU, and assert output shapes + finiteness.
+The FULL configs are exercised only via the dry-run (no allocation here).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, PAPER_ARCH_IDS, get_reduced_config
+from repro.models.optim import OptimizerConfig, init_adamw, make_train_step
+from repro.models.transformer import build_model
+
+ALL_IDS = ARCH_IDS + PAPER_ARCH_IDS
+
+
+def _train_batch(cfg, key, B=2, S=32):
+    tb = {
+        "tokens": jax.random.randint(key, (B, S), 0, cfg.vocab_size),
+        "labels": jax.random.randint(key, (B, S), 0, cfg.vocab_size),
+    }
+    if cfg.frontend is not None:
+        tb["frontend_embeds"] = 0.02 * jax.random.normal(
+            key, (B, cfg.frontend_tokens, cfg.d_model), jnp.float32)
+    return tb
+
+
+@pytest.mark.parametrize("arch", ALL_IDS)
+def test_forward_and_loss(arch):
+    cfg = get_reduced_config(arch)
+    model = build_model(cfg)
+    key = jax.random.key(0)
+    params = model.init(key, jnp.float32)
+    batch = _train_batch(cfg, key)
+    loss, metrics = jax.jit(
+        lambda p, b: model.train_loss(p, b, remat=False))(params, batch)
+    assert loss.shape == ()
+    assert np.isfinite(float(loss)), f"{arch}: loss is not finite"
+    assert float(loss) > 0.0
+    # CE of a random init should be near ln(vocab)
+    assert float(loss) < 2.0 * np.log(cfg.vocab_size) + 5.0
+
+
+@pytest.mark.parametrize("arch", ALL_IDS)
+def test_train_step(arch):
+    cfg = get_reduced_config(arch)
+    model = build_model(cfg)
+    key = jax.random.key(1)
+    params = model.init(key, jnp.float32)
+    opt = init_adamw(params)
+    step = make_train_step(model, OptimizerConfig(warmup_steps=1),
+                           microbatches=1, remat=False)
+    batch = _train_batch(cfg, key)
+    new_params, new_opt, metrics = jax.jit(step)(params, opt, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    assert np.isfinite(float(metrics["grad_norm"]))
+    assert int(new_opt.step) == 1
+    # parameters actually moved
+    moved = jax.tree.reduce(
+        lambda acc, x: acc + float(jnp.sum(jnp.abs(x))),
+        jax.tree.map(lambda a, b: (a - b).astype(jnp.float32),
+                     new_params, params), 0.0)
+    assert moved > 0.0, f"{arch}: train step was a no-op"
+
+
+@pytest.mark.parametrize("arch", ALL_IDS)
+def test_microbatched_train_step_matches(arch):
+    """Gradient accumulation must be equivalent to the monolithic step."""
+    cfg = get_reduced_config(arch)
+    model = build_model(cfg)
+    key = jax.random.key(2)
+    params = model.init(key, jnp.float32)
+    batch = _train_batch(cfg, key, B=4, S=16)
+
+    def loss_of(mb):
+        step = make_train_step(model, OptimizerConfig(), microbatches=mb,
+                               remat=False)
+        _, _, metrics = jax.jit(step)(params, init_adamw(params), batch)
+        return float(metrics["loss"])
+
+    # MoE: the load-balance aux loss is quadratic in per-batch routing
+    # fractions, so mean-of-microbatch aux != full-batch aux (~0.3%); the
+    # CE term itself is split-invariant.
+    rel = 1e-2 if cfg.moe is not None else 1e-4
+    assert loss_of(1) == pytest.approx(loss_of(2), rel=rel)
+
+
+@pytest.mark.parametrize("arch", ALL_IDS)
+def test_prefill_decode_consistency(arch):
+    """prefill(T tokens) then decode must agree with prefill(T+1 tokens)."""
+    cfg = get_reduced_config(arch)
+    model = build_model(cfg)
+    key = jax.random.key(3)
+    params = model.init(key, jnp.float32)
+    B, T = 2, 12
+    toks = np.asarray(jax.random.randint(key, (B, T + 1), 0, cfg.vocab_size))
+
+    kw = {}
+    inputs_full = {"tokens": jnp.asarray(toks)}
+    inputs_pre = {"tokens": jnp.asarray(toks[:, :T])}
+    if cfg.frontend is not None:
+        fe = 0.02 * np.asarray(jax.random.normal(
+            key, (B, cfg.frontend_tokens, cfg.d_model), jnp.float32))
+        inputs_full["frontend_embeds"] = jnp.asarray(fe)
+        inputs_pre["frontend_embeds"] = jnp.asarray(fe)
+
+    cache_a = model.init_cache(B, 64, jnp.float32)
+    logits_full, _ = model.prefill(params, inputs_full, cache_a)
+
+    cache_b = model.init_cache(B, 64, jnp.float32)
+    _, cache_b = model.prefill(params, inputs_pre, cache_b)
+    logits_step, _ = model.decode_step(
+        params, cache_b, jnp.asarray(toks[:, T:]))
+
+    np.testing.assert_allclose(
+        np.asarray(logits_full), np.asarray(logits_step),
+        rtol=2e-3, atol=2e-3,
+        err_msg=f"{arch}: incremental decode diverges from full prefill")
+
+
+@pytest.mark.parametrize("arch", ALL_IDS)
+def test_chunked_prefill_consistency(arch):
+    """Two prefill chunks must equal one monolithic prefill (the property
+    chunked-prefill serving relies on)."""
+    cfg = get_reduced_config(arch)
+    if cfg.frontend is not None:
+        pytest.skip("frontend embeds arrive with the first chunk only")
+    model = build_model(cfg)
+    key = jax.random.key(4)
+    params = model.init(key, jnp.float32)
+    B, T = 1, 16
+    toks = np.asarray(jax.random.randint(key, (B, T), 0, cfg.vocab_size))
+
+    cache_a = model.init_cache(B, 64, jnp.float32)
+    logits_full, _ = model.prefill(
+        params, {"tokens": jnp.asarray(toks)}, cache_a)
+
+    cache_b = model.init_cache(B, 64, jnp.float32)
+    _, cache_b = model.prefill(
+        params, {"tokens": jnp.asarray(toks[:, :T // 2])}, cache_b)
+    logits_chunk, _ = model.prefill(
+        params, {"tokens": jnp.asarray(toks[:, T // 2:])}, cache_b)
+
+    np.testing.assert_allclose(
+        np.asarray(logits_full), np.asarray(logits_chunk),
+        rtol=2e-3, atol=2e-3,
+        err_msg=f"{arch}: chunked prefill diverges from monolithic prefill")
+
+
+@pytest.mark.parametrize("arch", ALL_IDS)
+def test_param_count_accounting(arch):
+    """config.param_count() must match the real parameter tree exactly —
+    the analytical predictor and the roofline both trust it."""
+    cfg = get_reduced_config(arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0), jnp.float32)
+    actual = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
+    expected = cfg.param_count()
+    assert actual == expected, (
+        f"{arch}: param tree has {actual}, config accounts {expected} "
+        f"(Δ={actual - expected})")
+
+
+def test_sliding_window_bounds_cache():
+    """SWA archs must allocate window-sized KV, not context-sized."""
+    cfg = get_reduced_config("mixtral_8x7b").replace(sliding_window=8)
+    model = build_model(cfg)
+    cache = model.init_cache(1, 4096, jnp.float32)
+    k = jax.tree.leaves(cache["layers"])[0]
+    assert cache["layers"]["k"].shape[2] == 8  # (L, B, S=window, H, D)
+
+
+def test_long_context_flags():
+    from repro.configs import get_config
+    assert get_config("mamba2_370m").supports_long_context()
+    assert get_config("recurrentgemma_2b").supports_long_context()
+    assert get_config("mixtral_8x7b").supports_long_context()
+    assert not get_config("qwen2_5_3b").supports_long_context()
+    assert not get_config("whisper_base").supports_long_context()
+    assert not get_config("dbrx_132b").supports_long_context()

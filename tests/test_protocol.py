@@ -1,0 +1,183 @@
+"""Virtual time protocol: correctness properties of Timekeeper + TimeJump.
+
+These encode the paper's §4.2.1 guarantees:
+  * monotonicity — virtual time never goes backwards,
+  * minimum-advancement — a barrier round advances exactly to the smallest
+    pending target (causality),
+  * per-call postcondition — TIMEJUMP(Δt) returns only once virtual time
+    reached its absolute target,
+  * graceful degradation — a stalled actor costs wall time, never
+    correctness,
+  * elasticity — actor departure re-evaluates the barrier.
+"""
+
+import threading
+import time
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.client import LocalTransport, TimeJumpClient
+from repro.core.timekeeper import Timekeeper
+
+
+def make_tk(cooldown=0.0):
+    tk = Timekeeper(jitter_cooldown=cooldown)
+    return tk, LocalTransport(tk)
+
+
+def test_single_actor_jump_exact():
+    tk, tr = make_tk()
+    c = TimeJumpClient(tr, "a")
+    t0 = c.now()
+    t1 = c.time_jump(0.5)
+    assert t1 >= t0 + 0.5
+    # and it was a jump, not a sleep: virtually instant in wall time
+    c.deregister()
+
+
+def test_two_actor_min_advancement():
+    """W_A jumps 50ms, W_B jumps 10ms: the barrier must advance by 10ms
+    first; A's single call spans multiple rounds (paper §4.2.1 example)."""
+    tk, tr = make_tk()
+    a = TimeJumpClient(tr, "A")
+    b = TimeJumpClient(tr, "B")
+    observed = []
+
+    def run_b():
+        for _ in range(5):
+            observed.append(b.time_jump(0.010))
+
+    def run_a():
+        a.time_jump(0.050)
+
+    ta = threading.Thread(target=run_a)
+    tb = threading.Thread(target=run_b)
+    ta.start(); tb.start(); ta.join(); tb.join()
+    # B's successive returns must be ~10ms apart (min-advancement), and
+    # A's 50ms target is reached exactly when B has done 5 x 10ms.
+    for i, t in enumerate(observed):
+        assert t == pytest.approx(observed[0] + 0.010 * i, abs=2e-3)
+    a.deregister(); b.deregister()
+
+
+def test_jump_postcondition_and_monotonic():
+    tk, tr = make_tk()
+    c = TimeJumpClient(tr, "solo")
+    last = c.now()
+    for dt in (0.001, 0.1, 0.0, 0.025, 1.0):
+        ret = c.time_jump(dt)
+        assert ret >= last + dt - 1e-9
+        assert ret >= last
+        last = ret
+    c.deregister()
+
+
+def test_graceful_degradation_wall_rate():
+    """A registered-but-silent actor degrades peers to sleep-based speed:
+    correct result, wall-clock cost (paper: 'slow but never incorrect')."""
+    tk, tr = make_tk()
+    lazy = TimeJumpClient(tr, "lazy")   # never jumps
+    act = TimeJumpClient(tr, "active")
+    t0w = time.monotonic()
+    t0v = act.now()
+    t1v = act.time_jump(0.08)
+    elapsed_wall = time.monotonic() - t0w
+    assert t1v - t0v >= 0.08 - 1e-6        # correct virtual advance
+    assert elapsed_wall >= 0.07            # paid in wall time
+    lazy.deregister(); act.deregister()
+
+
+def test_elastic_deregistration_unblocks_barrier():
+    tk, tr = make_tk()
+    a = TimeJumpClient(tr, "a")
+    b = TimeJumpClient(tr, "b")
+    done = threading.Event()
+
+    def run_a():
+        a.time_jump(0.02)
+        done.set()
+
+    t = threading.Thread(target=run_a)
+    t.start()
+    time.sleep(0.005)
+    assert not done.is_set()      # a is barrier-blocked on b
+    b.deregister()                # departure must resolve the barrier
+    t.join(timeout=1.0)
+    assert done.is_set()
+    a.deregister()
+
+
+def test_concurrent_speedup():
+    """The headline mechanic: N actors x many jumps in ~zero wall time."""
+    tk, tr = make_tk()
+    clients = [TimeJumpClient(tr, f"w{i}") for i in range(4)]
+    t0v = tk.clock.now()
+    t0w = time.monotonic()
+
+    def run(c):
+        for _ in range(50):
+            c.time_jump(0.02)   # 1 virtual second each
+
+    threads = [threading.Thread(target=run, args=(c,)) for c in clients]
+    for t in threads: t.start()
+    for t in threads: t.join()
+    wall = time.monotonic() - t0w
+    virt = tk.clock.now() - t0v
+    assert virt >= 1.0
+    assert virt / max(wall, 1e-9) > 20, f"speedup only {virt/wall:.1f}x"
+    for c in clients: c.deregister()
+
+
+def test_jitter_cooldown_spacing():
+    """With cooldown J, consecutive clock advances are >= J apart in wall
+    time (bounded-jitter model, §4.2.1)."""
+    tk, tr = make_tk(cooldown=0.002)
+    c = TimeJumpClient(tr, "a")
+    stamps = []
+    orig = tk.clock.advance_to
+
+    def wrapped(t):
+        stamps.append(time.monotonic())
+        return orig(t)
+
+    tk.clock.advance_to = wrapped
+    for _ in range(5):
+        c.time_jump(0.01)
+    gaps = [b - a for a, b in zip(stamps, stamps[1:])]
+    assert all(g >= 0.0015 for g in gaps), gaps
+    assert tk.stats.cooldown_waits >= 1
+    c.deregister()
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    jump_lists=st.lists(
+        st.lists(st.floats(min_value=1e-4, max_value=0.05), min_size=1, max_size=6),
+        min_size=1, max_size=4,
+    )
+)
+def test_property_virtual_elapsed_bounds(jump_lists):
+    """For concurrent actors registered up-front, the total virtual advance
+    is at least max_i(sum of i's jumps) (every actor reaches its target) and
+    at most max_i(...) + wall_elapsed + eps (time can only additionally flow
+    at wall rate — no spurious jumps)."""
+    tk, tr = make_tk()
+    clients = [TimeJumpClient(tr, f"w{i}") for i in range(len(jump_lists))]
+    t0v = tk.clock.now()
+    t0w = time.monotonic()
+
+    def run(c, jumps):
+        for dt in jumps:
+            c.time_jump(dt)
+        c.deregister()
+
+    threads = [threading.Thread(target=run, args=(c, js))
+               for c, js in zip(clients, jump_lists)]
+    for t in threads: t.start()
+    for t in threads: t.join()
+    wall = time.monotonic() - t0w
+    virt = tk.clock.now() - t0v
+    need = max(sum(js) for js in jump_lists)
+    assert virt >= need - 1e-9
+    assert virt <= need + wall + 0.05

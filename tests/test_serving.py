@@ -1,0 +1,366 @@
+"""Serving control-plane tests: block manager, radix prefix cache, scheduler
+policies — unit coverage plus hypothesis property tests on the invariants the
+engine relies on (refcount conservation, no phantom blocks, policy split).
+"""
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.serving.kv_cache import BlockManager, OutOfBlocksError
+from repro.serving.prefix_cache import RadixPrefixCache
+from repro.serving.request import Request, RequestState
+from repro.serving.scheduler import EngineConfig, Scheduler
+
+
+def make_req(prompt_len=32, out=8, rid=None, arrival=0.0, vocab=1000, seed=0):
+    import numpy as np
+    rng = np.random.default_rng(seed if rid is None else rid)
+    kw = {"request_id": rid} if rid is not None else {}
+    return Request(
+        prompt_tokens=rng.integers(1, vocab, size=prompt_len).tolist(),
+        max_new_tokens=out, arrival_time=arrival, **kw)
+
+
+def make_sched(policy="vllm", num_blocks=64, block_size=4, budget=16,
+               max_seqs=8, prefix=True, host_blocks=0,
+               host_policy="write_through"):
+    cfg = EngineConfig(policy=policy, max_num_seqs=max_seqs,
+                       max_batched_tokens=budget, block_size=block_size,
+                       num_blocks=num_blocks, enable_prefix_caching=prefix,
+                       host_tier_blocks=host_blocks,
+                       host_write_policy=host_policy)
+    bm = BlockManager(num_blocks, block_size)
+    pc = RadixPrefixCache(bm, enable=prefix, host_tier_blocks=host_blocks,
+                          host_write_policy=host_policy)
+    return cfg, bm, pc, Scheduler(cfg, bm, pc)
+
+
+def drive(sched, now=0.0, steps=1):
+    """Run scheduler steps, feeding back dummy tokens."""
+    outs = []
+    for i in range(steps):
+        out = sched.schedule(now + i)
+        toks = {s.request.request_id: 1 for s in out.batch}
+        sched.on_step_complete(out, toks, now + i + 0.5)
+        outs.append(out)
+    return outs
+
+
+# =========================================================================
+# block manager
+# =========================================================================
+
+def test_block_allocation_and_free():
+    bm = BlockManager(16, 4)
+    r = make_req(prompt_len=10)
+    bm.allocate_request(r)
+    assert len(bm.block_tables[r.request_id]) == 3       # ceil(10/4)
+    assert bm.num_free == 13
+    released = bm.free_request(r)
+    assert bm.num_free == 16 and len(released) == 3
+
+
+def test_append_slot_grows_table():
+    bm = BlockManager(16, 4)
+    r = make_req(prompt_len=4)
+    bm.allocate_request(r)
+    r.num_prefilled = 4
+    assert len(bm.block_tables[r.request_id]) == 1
+    bm.append_slot(r)     # token 5 -> needs block 2
+    assert len(bm.block_tables[r.request_id]) == 2
+
+
+def test_out_of_blocks_raises():
+    bm = BlockManager(2, 4)
+    r = make_req(prompt_len=12)
+    with pytest.raises(OutOfBlocksError):
+        bm.allocate_request(r)
+
+
+def test_shared_prefix_refcounting():
+    bm = BlockManager(16, 4)
+    r1 = make_req(prompt_len=8, rid=1001)
+    bm.allocate_request(r1)
+    shared = list(bm.block_tables[1001])
+    r2 = make_req(prompt_len=8, rid=1002)
+    bm.allocate_request(r2, cached_blocks=shared)
+    assert bm.block_tables[1002] == shared               # fully shared
+    bm.free_request(r1)
+    assert bm.num_free == 14                             # still referenced
+    bm.free_request(r2)
+    assert bm.num_free == 16
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.lists(
+    st.tuples(st.sampled_from(["alloc", "free", "append"]),
+              st.integers(0, 7), st.integers(1, 40)),
+    min_size=1, max_size=60))
+def test_block_manager_conservation(ops):
+    """Property: blocks are conserved — free + sum(refcounted uniques) is
+    constant, refcounts never negative, and tables never contain freed
+    blocks."""
+    bm = BlockManager(32, 4)
+    live = {}
+    for kind, slot, plen in ops:
+        rid = 5000 + slot
+        if kind == "alloc" and rid not in live:
+            r = make_req(prompt_len=plen, rid=rid)
+            try:
+                bm.allocate_request(r)
+                live[rid] = r
+            except OutOfBlocksError:
+                pass
+        elif kind == "free" and rid in live:
+            bm.free_request(live.pop(rid))
+        elif kind == "append" and rid in live:
+            r = live[rid]
+            r.num_prefilled = r.prompt_len
+            r.output_tokens.append(1)
+            try:
+                bm.append_slot(r)
+            except OutOfBlocksError:
+                pass
+        # invariants
+        used = set()
+        for t in bm.block_tables.values():
+            used.update(t)
+        assert used.isdisjoint(bm._free), "freed block still referenced"
+        for b in bm._blocks:
+            assert b.ref_count >= 0
+        held = sum(1 for b in bm._blocks if b.ref_count > 0)
+        assert held + bm.num_free == 32
+
+
+# =========================================================================
+# radix prefix cache
+# =========================================================================
+
+def test_prefix_match_after_insert():
+    _, bm, pc, _ = make_sched()
+    r = make_req(prompt_len=16, rid=2001)
+    bm.allocate_request(r)
+    table = bm.block_tables[2001]
+    pc.insert(r.prompt_tokens, table, now=1.0)
+    blocks, n_dev, n_host = pc.match(r.prompt_tokens, now=2.0)
+    assert n_dev == 16 and blocks == table
+    # a diverging suffix matches only the shared prefix
+    blocks2, n2, _ = pc.match(list(r.prompt_tokens[:8]) + [9999] * 8, now=3.0)
+    assert n2 == 8 and blocks2 == table[:2]
+
+
+def test_prefix_cache_keeps_blocks_alive():
+    _, bm, pc, _ = make_sched(num_blocks=8)
+    r = make_req(prompt_len=16, rid=2002)
+    bm.allocate_request(r)
+    pc.insert(r.prompt_tokens, bm.block_tables[2002], now=1.0)
+    bm.free_request(r)
+    assert bm.num_free == 4          # 4 blocks pinned by the cache
+    assert pc.evict(99, now=2.0) == 4
+    assert bm.num_free == 8
+
+
+def test_eviction_is_lru():
+    _, bm, pc, _ = make_sched(num_blocks=16)
+    ra = make_req(prompt_len=4, rid=2003, seed=1)
+    rb = make_req(prompt_len=4, rid=2004, seed=2)
+    for r, t in ((ra, 1.0), (rb, 2.0)):
+        bm.allocate_request(r)
+        pc.insert(r.prompt_tokens, bm.block_tables[r.request_id], now=t)
+        bm.free_request(r)
+    pc.match(ra.prompt_tokens, now=3.0)     # touch A -> B becomes LRU
+    assert pc.evict(1, now=4.0) == 1
+    blocks, n_dev, _ = pc.match(rb.prompt_tokens, now=5.0)
+    assert n_dev == 0, "LRU (B) should have been evicted"
+    _, n_dev_a, _ = pc.match(ra.prompt_tokens, now=6.0)
+    assert n_dev_a == 4
+
+
+def test_host_tier_write_policies():
+    """vLLM writes through on insert; SGLang promotes on first hit."""
+    _, bm_wt, pc_wt, _ = make_sched(host_blocks=64)
+    _, bm_sel, pc_sel, _ = make_sched(host_blocks=64,
+                                      host_policy="write_through_selective")
+    r = make_req(prompt_len=16, rid=2005)
+    for bm, pc in ((bm_wt, pc_wt), (bm_sel, pc_sel)):
+        rr = make_req(prompt_len=16, rid=2005 + id(pc) % 7)
+        rr.prompt_tokens = r.prompt_tokens
+        bm.allocate_request(rr)
+        pc.insert(rr.prompt_tokens, bm.block_tables[rr.request_id], now=1.0)
+    assert len(pc_wt._host) == 4          # write-through: immediate
+    assert len(pc_sel._host) == 0         # selective: not yet
+    pc_sel.match(r.prompt_tokens, now=2.0)
+    assert len(pc_sel._host) == 4         # promoted on first hit
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.integers(0, 3), min_size=2, max_size=24),
+       st.integers(1, 5))
+def test_radix_property_match_is_prefix_consistent(prompt_pool, n_evict):
+    """Property: after arbitrary insert/evict, any match result is (a) block-
+    aligned, (b) a true prefix of the query, (c) never exceeds what was
+    inserted."""
+    _, bm, pc, _ = make_sched(num_blocks=128, block_size=2)
+    inserted = []
+    for i in range(4):
+        toks = [(p + i) % 7 for p in prompt_pool] * 2
+        toks = toks[: max(2, (len(toks) // 2) * 2)]
+        r = make_req(prompt_len=len(toks), rid=3000 + i)
+        r.prompt_tokens = toks
+        bm.allocate_request(r)
+        pc.insert(toks, bm.block_tables[r.request_id], now=float(i))
+        inserted.append(toks)
+        bm.free_request(r)
+    pc.evict(n_evict, now=10.0)
+    for toks in inserted:
+        blocks, n_dev, _ = pc.match(toks, now=20.0)
+        assert n_dev % 2 == 0
+        assert n_dev <= len(toks)
+        assert len(blocks) == n_dev // 2
+        # every matched block's recorded tokens equal the query prefix chunk
+        for j, bid in enumerate(blocks):
+            assert tuple(toks[j * 2:(j + 1) * 2]) == bm._blocks[bid].token_ids
+
+
+# =========================================================================
+# scheduler policies
+# =========================================================================
+
+def test_vllm_policy_mixes_prefill_and_decode():
+    cfg, bm, pc, sched = make_sched(policy="vllm", budget=8)
+    ra = make_req(prompt_len=6, out=4, rid=4001)
+    sched.add_request(ra)
+    drive(sched, now=0.0)                      # ra prefills fully
+    rb = make_req(prompt_len=20, out=4, rid=4002)
+    sched.add_request(rb)
+    out = sched.schedule(1.0)
+    kinds = {(s.request.request_id, s.is_prefill) for s in out.batch}
+    assert (4001, False) in kinds, "running decode must stay in the batch"
+    assert (4002, True) in kinds, "prefill chunk must be co-scheduled"
+    # budget respected: decode(1) + chunk(<=7)
+    assert sum(s.num_new_tokens for s in out.batch) <= 8
+
+
+def test_sglang_policy_never_mixes():
+    cfg, bm, pc, sched = make_sched(policy="sglang", budget=8)
+    ra = make_req(prompt_len=6, out=4, rid=4003)
+    sched.add_request(ra)
+    drive(sched, now=0.0)
+    rb = make_req(prompt_len=20, out=4, rid=4004)
+    sched.add_request(rb)
+    seen_mixed = False
+    for _ in range(8):
+        out = sched.schedule(1.0)
+        if out.is_empty:
+            break
+        has_p = any(s.is_prefill for s in out.batch)
+        has_d = any(not s.is_prefill for s in out.batch)
+        seen_mixed |= (has_p and has_d)
+        sched.on_step_complete(
+            out, {s.request.request_id: 1 for s in out.batch}, 1.0)
+    assert not seen_mixed, "sglang policy must not mix prefill with decode"
+
+
+def test_chunked_prefill_spans_steps():
+    cfg, bm, pc, sched = make_sched(budget=8)
+    r = make_req(prompt_len=30, out=2, rid=4005)
+    sched.add_request(r)
+    out1 = sched.schedule(0.0)
+    assert out1.batch[0].num_new_tokens == 8
+    sched.on_step_complete(out1, {}, 0.1)
+    assert r.num_prefilled == 8
+    out2 = sched.schedule(0.2)
+    assert out2.batch[0].num_new_tokens == 8
+    # 30 tokens => chunks 8,8,8,6
+    sched.on_step_complete(out2, {}, 0.3)
+    out3 = sched.schedule(0.4)
+    sched.on_step_complete(out3, {}, 0.5)
+    out4 = sched.schedule(0.6)
+    assert out4.batch[0].num_new_tokens == 6
+    sched.on_step_complete(out4, {4005: 7}, 0.7)
+    assert r.prefill_complete and r.output_tokens == [7]
+    assert r.first_token_time == 0.7
+
+
+def test_preemption_under_memory_pressure():
+    # 8 blocks x 4 = 32 token slots; two requests with long decodes collide
+    cfg, bm, pc, sched = make_sched(num_blocks=8, block_size=4, budget=64,
+                                    prefix=False)
+    ra = make_req(prompt_len=12, out=20, rid=4006)
+    rb = make_req(prompt_len=12, out=20, rid=4007)
+    sched.add_request(ra)
+    sched.add_request(rb)
+    preempted = 0
+    for i in range(40):
+        out = sched.schedule(float(i))
+        if out.is_empty:
+            break
+        preempted += len(out.preempted)
+        sched.on_step_complete(
+            out, {s.request.request_id: 1 for s in out.batch}, float(i) + 0.5)
+        if ra.finished and rb.finished:
+            break
+    assert preempted >= 1, "memory pressure must trigger preemption"
+    assert ra.finished and rb.finished, "both requests must still complete"
+    assert ra.num_generated == 20 and rb.num_generated == 20
+    # all memory returned
+    assert bm.num_free == 8
+
+
+def test_prefix_cache_skips_recompute_in_scheduler():
+    cfg, bm, pc, sched = make_sched(budget=64)
+    ra = make_req(prompt_len=16, out=2, rid=4008)
+    sched.add_request(ra)
+    drive(sched, steps=4)
+    assert ra.finished
+    rb = make_req(prompt_len=16, out=2, rid=4009)
+    rb.prompt_tokens = list(ra.prompt_tokens)
+    sched.add_request(rb)
+    out = sched.schedule(10.0)
+    [s] = out.batch
+    # 12 of 16 tokens cache-hit (last block never skipped entirely)
+    assert rb.cached_prefix_len == 12
+    assert s.num_new_tokens == 4
+
+
+def test_fcfs_admission_order_and_max_seqs():
+    cfg, bm, pc, sched = make_sched(budget=1024, max_seqs=2)
+    rs = [make_req(prompt_len=8, out=4, rid=4100 + i) for i in range(4)]
+    for r in rs:
+        sched.add_request(r)
+    out = sched.schedule(0.0)
+    admitted = [r.request_id for r in out.admitted]
+    assert admitted == [4100, 4101], "FCFS order, capped at max_num_seqs"
+
+
+@settings(max_examples=25, deadline=None)
+@given(policy=st.sampled_from(["vllm", "sglang"]),
+       budget=st.sampled_from([4, 8, 16]),
+       n_reqs=st.integers(1, 6),
+       seed=st.integers(0, 100))
+def test_scheduler_property_all_requests_finish(policy, budget, n_reqs, seed):
+    """Property: any workload drains — every request finishes with exactly
+    max_new_tokens outputs and all KV blocks returned."""
+    import numpy as np
+    rng = np.random.default_rng(seed)
+    cfg, bm, pc, sched = make_sched(policy=policy, num_blocks=256,
+                                    block_size=4, budget=budget, max_seqs=4)
+    reqs = []
+    for i in range(n_reqs):
+        r = make_req(prompt_len=int(rng.integers(1, 40)),
+                     out=int(rng.integers(1, 10)), rid=6000 + seed * 10 + i)
+        reqs.append(r)
+        sched.add_request(r)
+    for step in range(500):
+        if all(r.finished for r in reqs):
+            break
+        out = sched.schedule(float(step))
+        sched.on_step_complete(
+            out, {s.request.request_id: 1 for s in out.batch},
+            float(step) + 0.5)
+    assert all(r.finished for r in reqs)
+    for r in reqs:
+        assert r.num_generated == r.max_new_tokens
+        assert r.request_id not in bm.block_tables
+    held = sum(1 for b in bm._blocks if b.ref_count > 0)
+    assert held == pc.num_cached_blocks()    # only the cache holds blocks

@@ -1,0 +1,224 @@
+"""End-to-end system tests: the paper's headline claims at test scale.
+
+* fidelity — emulate-mode latency distributions match sleep-mode (ground
+  truth by construction: same predictor, wall-clock sleeps) within 5%,
+* acceleration — emulated virtual makespan ≫ wall time,
+* the vLLM/SGLang policy split shows up in TPOT exactly as §6.2 describes,
+* PD disaggregation works on top of the unmodified engine (Table 1),
+* the DES baseline diverges when its feature model is stale (§2.3).
+"""
+
+import pytest
+
+from repro.configs import get_reduced_config
+from repro.core.predictor import StaticPredictor
+from repro.serving.benchmark import BenchmarkRunner, compare_distributions
+from repro.serving.scheduler import EngineConfig
+from repro.serving.stack import build_stack
+from repro.serving.workload import WorkloadConfig, synthesize
+
+MODEL = get_reduced_config("qwen2_5_3b")
+
+
+def engine_cfg(**kw):
+    base = dict(policy="vllm", max_num_seqs=16, max_batched_tokens=128,
+                block_size=4, num_blocks=4096)
+    base.update(kw)
+    return EngineConfig(**base)
+
+
+def workload(n=40, qps=20.0, seed=7, **kw):
+    base = dict(num_requests=n, qps=qps, prompt_len_mean=48,
+                output_len_mean=12, max_prompt_len=128, max_output_len=32,
+                seed=seed)
+    base.update(kw)
+    return synthesize(WorkloadConfig(**base))
+
+
+def run_mode(mode, reqs, *, policy="vllm", batch_s=4e-3, **cfg_kw):
+    stack = build_stack(MODEL, engine_cfg(policy=policy, **cfg_kw), mode,
+                        predictor=StaticPredictor(batch_s),
+                        use_worker_group=False)
+    try:
+        runner = BenchmarkRunner(stack.engine, reqs,
+                                 transport=stack.transport)
+        return runner.run(timeout=120)
+    finally:
+        stack.shutdown()
+
+
+# =========================================================================
+# fidelity: emulate vs sleep (paper Figs. 6/8)
+# =========================================================================
+
+def test_emulate_matches_sleep_distributions():
+    """<5% median error at the paper's operating point (Fig. 8 mid-range:
+    20 ms batches, where control-plane overhead is a few % of step time —
+    with 3 ms batches our pure-Python scheduler overhead dominates in a way
+    vLLM's does not; benchmarks/fig8 sweeps this dependence explicitly)."""
+    res_sleep = run_mode("sleep", workload(n=24, qps=8.0), batch_s=20e-3)
+    res_emu = run_mode("emulate", workload(n=24, qps=8.0), batch_s=20e-3)
+
+    ttft_err = compare_distributions(res_sleep.ttft, res_emu.ttft)
+    tpot_err = compare_distributions(res_sleep.tpot, res_emu.tpot)
+    assert ttft_err["median_rel_err"] < 0.05, ttft_err
+    assert tpot_err["median_rel_err"] < 0.05, tpot_err
+    # tails too (the paper's claim is "<5% even at tail"; allow CPU jitter)
+    assert ttft_err["p99_rel_err"] < 0.10, ttft_err
+
+
+def test_emulation_accelerates():
+    """Virtual seconds simulated per wall second must be >> 1 (Fig. 7)."""
+    res = run_mode("emulate", workload(n=40, qps=10.0), batch_s=20e-3)
+    assert res.speedup > 5.0, f"speedup only {res.speedup:.1f}x"
+    # sleep mode by construction runs at ~1x
+    res_sleep = run_mode("sleep", workload(n=10, qps=20.0), batch_s=3e-3)
+    assert res_sleep.speedup < 2.0
+
+
+def test_all_requests_complete_exactly():
+    reqs = workload(n=25, qps=50.0)
+    res = run_mode("emulate", reqs)
+    assert res.num_requests == 25
+    assert len({r.request_id for r in reqs}) == 25
+    for r in reqs:
+        assert r.num_generated == r.max_new_tokens
+
+
+# =========================================================================
+# policy split (paper §6.2)
+# =========================================================================
+
+def test_policy_split_visible_in_tpot():
+    """SGLang-style prefill prioritisation must show a worse decode tail
+    than vLLM-style mixed batching under prefill pressure — the behavioural
+    divergence the paper uses to argue for direct emulation."""
+    wl = dict(n=40, qps=40.0)
+    res_vllm = run_mode("emulate", workload(**wl), policy="vllm",
+                        batch_s=5e-3)
+    res_sgl = run_mode("emulate", workload(**wl), policy="sglang",
+                       batch_s=5e-3)
+    # decodes get starved while prefills are prioritised => worse TPOT tail
+    assert res_sgl.tpot.p99 > res_vllm.tpot.p99 * 1.05, (
+        f"sglang p99 TPOT {res_sgl.tpot.p99:.4f} vs vllm "
+        f"{res_vllm.tpot.p99:.4f}")
+
+
+def test_prefix_caching_reduces_prefill_work():
+    shared = dict(n=30, qps=30.0, shared_prefix_len=64, prompt_len_mean=96)
+    res_on = run_mode("emulate", workload(**shared), batch_s=5e-3)
+    stack_off = build_stack(
+        MODEL, engine_cfg(enable_prefix_caching=False), "emulate",
+        predictor=StaticPredictor(5e-3), use_worker_group=False)
+    try:
+        res_off = BenchmarkRunner(stack_off.engine, workload(**shared),
+                                  transport=stack_off.transport).run(120)
+    finally:
+        stack_off.shutdown()
+    # with a StaticPredictor the *number of steps* falls (fewer prefill
+    # chunks), so mean TTFT improves
+    assert res_on.ttft.mean <= res_off.ttft.mean + 1e-9
+
+
+# =========================================================================
+# PD disaggregation on the unmodified engine (Table 1)
+# =========================================================================
+
+def test_disaggregated_cluster_end_to_end():
+    from repro.core.client import LocalTransport, TimeJumpClient
+    from repro.core.timekeeper import Timekeeper
+    from repro.serving.disagg import DisaggConfig, DisaggregatedCluster
+    from repro.serving.engine import LLMEngine
+    from repro.serving.model_runner import TimeWarpModelRunner
+
+    tk = Timekeeper(jitter_cooldown=0.0)
+    tr = LocalTransport(tk)
+    pre = LLMEngine(engine_cfg(), TimeWarpModelRunner(
+        StaticPredictor(4e-3),
+        TimeJumpClient(tr, "pre-w", auto_register=False)),
+        tk.clock, name="prefill")
+    dec = LLMEngine(engine_cfg(), TimeWarpModelRunner(
+        StaticPredictor(4e-3),
+        TimeJumpClient(tr, "dec-w", auto_register=False)),
+        tk.clock, name="decode")
+
+    cluster = DisaggregatedCluster(
+        MODEL, pre, dec, DisaggConfig(kv_link_bandwidth=1e5), transport=tr)
+    cluster.start()
+    reqs = workload(n=12, qps=100.0)
+    for r in reqs:
+        cluster.submit(r)
+    ok = cluster.wait_until_complete(12, timeout=60)
+    cluster.stop()
+    tk.close()
+    assert ok, f"only {len(cluster.finished)}/12 finished"
+    for r in cluster.finished:
+        assert r.num_generated >= 1
+    assert any(r.kv_transfer_time > 0 for r in cluster.finished), \
+        "KV migration must consume virtual time"
+
+
+# =========================================================================
+# DES baseline divergence (the paper's motivation, Table 1 / §2.3)
+# =========================================================================
+
+def test_des_baseline_diverges_on_prefix_heavy_workload():
+    """The Vidur-style DES has no prefix cache (Table 1 'VD' column): on a
+    shared-prefix workload its TTFT diverges from the emulator, which runs
+    the real radix-cache code.  This is the semantic gap §2.3 describes."""
+    from repro.des.simulator import DESConfig, DiscreteEventSimulator
+
+    shared = dict(n=30, qps=30.0, shared_prefix_len=96, prompt_len_mean=128,
+                  max_prompt_len=256)
+    res_emu = run_mode("emulate", workload(**shared), batch_s=5e-3)
+
+    des = DiscreteEventSimulator(
+        StaticPredictor(5e-3),
+        DESConfig(max_num_seqs=16, max_batched_tokens=128))
+    sims = des.run(workload(**shared))
+    import numpy as np
+    des_ttft_p50 = float(np.percentile(
+        [s.ttft() for s in sims if s.ttft() is not None], 50))
+    rel = abs(des_ttft_p50 - res_emu.ttft.p50) / max(res_emu.ttft.p50, 1e-9)
+    assert rel > 0.05, (
+        f"stale DES should diverge on prefix-heavy load (got {rel:.1%}) — "
+        f"otherwise the paper's motivation would not reproduce")
+
+
+# =========================================================================
+# jitter cooldown (§4.2.1 Handling Message Jitter)
+# =========================================================================
+
+def test_jitter_cooldown_slows_but_stays_correct():
+    stack = build_stack(MODEL, engine_cfg(), "emulate",
+                        predictor=StaticPredictor(2e-3),
+                        jitter_cooldown=2e-3, use_worker_group=False)
+    try:
+        reqs = workload(n=10, qps=50.0)
+        res = BenchmarkRunner(stack.engine, reqs,
+                              transport=stack.transport).run(120)
+        assert res.num_requests == 10
+        assert stack.timekeeper.stats.cooldown_waits > 0
+    finally:
+        stack.shutdown()
+
+
+# =========================================================================
+# TP worker group: collective barriers preserve rank causality
+# =========================================================================
+
+def test_worker_group_collective_exit_is_max_of_ranks():
+    from repro.core.client import LocalTransport
+    from repro.core.timekeeper import Timekeeper
+    from repro.serving.workers import WorkerGroup
+
+    tk = Timekeeper(jitter_cooldown=0.0)
+    tr = LocalTransport(tk)
+    # rank 1 is 50% slower (MoE imbalance): group exit = slowest rank
+    wg = WorkerGroup(tr, 2, name="tp", jitter=[0.0, 0.5])
+    t0 = tk.clock.now()
+    wg.execute_step(0.1)
+    elapsed = tk.clock.now() - t0
+    assert elapsed >= 0.15 - 1e-6, "collective must exit at max(ranks)"
+    wg.shutdown()
+    tk.close()

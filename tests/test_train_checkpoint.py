@@ -1,0 +1,72 @@
+"""Training fault tolerance: checkpoint/restart must be bit-deterministic —
+train N steps straight == train k, fail, restore, train N-k (same data
+stream, same optimizer state, same params).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced_config
+from repro.launch.train import data_stream
+from repro.models.checkpoint import (latest_step, restore_checkpoint,
+                                     save_checkpoint)
+from repro.models.optim import OptimizerConfig, init_adamw, make_train_step
+from repro.models.transformer import build_model
+
+
+def make(arch="olmo_1b"):
+    cfg = get_reduced_config(arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0), jnp.float32)
+    opt = init_adamw(params)
+    step_fn = jax.jit(make_train_step(
+        model, OptimizerConfig(warmup_steps=2, total_steps=10),
+        microbatches=1, remat=False))
+    return cfg, params, opt, step_fn
+
+
+def run(cfg, params, opt, step_fn, start, stop):
+    stream = data_stream(cfg.vocab_size, 2, 16, seed=7, start_step=start)
+    for _ in range(start, stop):
+        params, opt, metrics = step_fn(params, opt, next(stream))
+    return params, opt, metrics
+
+
+def test_checkpoint_restart_is_bit_deterministic(tmp_path):
+    cfg, params0, opt0, step_fn = make()
+
+    # straight-through reference: 4 steps
+    p_ref, o_ref, m_ref = run(cfg, params0, opt0, step_fn, 0, 4)
+
+    # 2 steps -> checkpoint -> "crash" -> restore -> 2 more steps
+    p_half, o_half, _ = run(cfg, params0, opt0, step_fn, 0, 2)
+    save_checkpoint(tmp_path, 2, p_half, o_half, extra={"loss": 1.0})
+    assert latest_step(tmp_path) == 2
+    p_rest, o_rest, meta = restore_checkpoint(tmp_path, 2, params0, opt0)
+    assert meta["step"] == 2
+    p_out, o_out, m_out = run(cfg, p_rest, o_rest, step_fn, 2, 4)
+
+    for a, b in zip(jax.tree.leaves(p_ref), jax.tree.leaves(p_out)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert int(o_out.step) == int(o_ref.step) == 4
+    assert float(m_out["loss"]) == pytest.approx(float(m_ref["loss"]),
+                                                 rel=1e-6)
+
+
+def test_latest_step_picks_newest(tmp_path):
+    cfg, params, opt, _ = make()
+    for s in (1, 3, 2):
+        save_checkpoint(tmp_path, s, params, opt)
+    assert latest_step(tmp_path) == 3
+
+
+def test_restore_validates_shapes(tmp_path):
+    cfg, params, opt, _ = make()
+    save_checkpoint(tmp_path, 1, params, opt)
+    other = build_model(get_reduced_config("olmo_1b").replace(d_model=32,
+                                                              head_dim=8))
+    bad_params = other.init(jax.random.key(0), jnp.float32)
+    with pytest.raises(AssertionError):
+        restore_checkpoint(tmp_path, 1, bad_params, init_adamw(bad_params))
