@@ -51,6 +51,15 @@ def _fig9(quick):
     return f"worst_ttft_p50_err={max(r['ttft_p50_err'] for r in rows):.4f}"
 
 
+def _cluster(quick):
+    from benchmarks import fig_cluster_scaling as m
+    rows = m.main(n=24 if quick else 40)
+    parity = rows[-1]
+    best = max((r for r in rows[:-1]), key=lambda r: r.get("goodput_rps", 0))
+    return (f"max_goodput_rps={best['goodput_rps']}@{best['replicas']}r/"
+            f"{best['policy']},des_parity_err={parity['max_err_steps']}steps")
+
+
 def _table1(quick):
     from benchmarks import table1_features as m
     rows = m.main()
@@ -78,6 +87,7 @@ SUITES = [
     ("fig7_speedup", _fig7),
     ("fig8_batch_duration", _fig8),
     ("fig9_arrival_rate", _fig9),
+    ("fig_cluster_scaling", _cluster),
     ("table1_features", _table1),
     ("roofline", _roofline),
 ]

@@ -1,0 +1,28 @@
+"""Multi-replica cluster emulation layer (data-parallel serving, PD pools).
+
+Public surface::
+
+    from repro.cluster import Cluster, build_cluster, make_router
+
+See ``cluster.py`` for the replica/timeline architecture and ``router.py``
+for the pluggable routing policies.
+"""
+
+from .cluster import Cluster, ClusterConfig, build_cluster
+from .router import (LeastOutstandingTokensRouter, PDPoolRouter,
+                     PrefixAffinityRouter, ReplicaView, RoundRobinRouter,
+                     Router, ROUTER_POLICIES, make_router)
+
+__all__ = [
+    "Cluster",
+    "ClusterConfig",
+    "build_cluster",
+    "Router",
+    "ReplicaView",
+    "RoundRobinRouter",
+    "LeastOutstandingTokensRouter",
+    "PrefixAffinityRouter",
+    "PDPoolRouter",
+    "ROUTER_POLICIES",
+    "make_router",
+]

@@ -1,0 +1,334 @@
+"""Multi-replica cluster emulation: N engines, one virtual timeline.
+
+A :class:`Cluster` owns N :class:`~repro.serving.engine.LLMEngine` replicas
+parked on a **single shared** :class:`~repro.core.clock.VirtualClock` /
+:class:`~repro.core.timekeeper.Timekeeper`.  Each replica is an independent
+continuous-batching engine (own scheduler, block pool, radix cache, model
+runner); the cluster adds the data-parallel control plane the paper's
+config-sweep story needs at scale:
+
+* **Routing** — a pluggable :class:`~repro.cluster.router.Router` policy
+  places each request (round-robin, least-outstanding-tokens,
+  prefix-affinity, or a prefill/decode pool split).
+* **One coordinated timeline** — all replicas' actors share one Timekeeper;
+  idle replicas *park* (leave the barrier but stay known) so the busy
+  subset plus the dispatcher advance the single offset at full speed.
+  Causality across replicas is the Timekeeper's minimum-target rule —
+  virtual time can never jump past an event another replica still has to
+  produce, so cluster-level TTFT/goodput percentiles are exact.
+* **PD pools** — with the ``pd_pool`` policy the cluster reuses the
+  emulated KV channel from ``repro.core.emulation`` to migrate completed
+  prefills into the decode pool, unifying ``repro.serving.disagg`` behind
+  the Router interface.
+
+The cluster exposes the same non-blocking ``submit`` / ``poll`` /
+``wait_until_complete`` surface as a single engine, so
+``repro.serving.benchmark.BenchmarkRunner`` drives a 1-replica engine and an
+N-replica cluster through one code path (Workload → Cluster → Metrics).
+"""
+
+from __future__ import annotations
+
+import itertools
+import pickle
+import threading
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Union
+
+from repro.core.client import LocalTransport, TimeJumpClient
+from repro.core.clock import VirtualClock, WallSource
+from repro.core.emulation import EmulatedChannel, VirtualDeviceContext
+from repro.core.hardware import get_chip
+from repro.core.predictor import RuntimePredictor
+from repro.core.timekeeper import Timekeeper
+from repro.models.config import ModelConfig
+from repro.serving.engine import LLMEngine, StepRecord
+from repro.serving.model_runner import SleepModelRunner, TimeWarpModelRunner
+from repro.serving.request import Request, RequestState
+from repro.serving.scheduler import EngineConfig
+
+from .router import PDPoolRouter, Router, make_router
+
+__all__ = ["ClusterConfig", "Cluster", "build_cluster"]
+
+
+@dataclass
+class ClusterConfig:
+    kv_link_bandwidth: float = 50e9   # PD pools: inter-replica KV fabric (B/s)
+
+
+class Cluster:
+    """N engine replicas + router, sharing one virtual timeline."""
+
+    def __init__(
+        self,
+        engines: Sequence[LLMEngine],
+        router: Router,
+        *,
+        transport: Optional[LocalTransport] = None,
+        timekeeper: Optional[Timekeeper] = None,
+        model_cfg: Optional[ModelConfig] = None,
+        cfg: ClusterConfig = ClusterConfig(),
+    ):
+        assert engines, "a cluster needs at least one replica"
+        assert router.num_replicas == len(engines), \
+            f"router sized for {router.num_replicas} replicas, got {len(engines)}"
+        clock = engines[0].clock
+        for e in engines:
+            assert e.clock is clock, \
+                "all replicas must share one VirtualClock (one timeline)"
+        self.engines = list(engines)
+        self.router = router
+        self.transport = transport
+        self.timekeeper = timekeeper
+        self.model_cfg = model_cfg
+        self.cfg = cfg
+        self.clock: VirtualClock = clock
+
+        self.finished: List[Request] = []
+        self._finish_cond = threading.Condition()
+        self._poll_cursor = 0
+        self._started = False
+
+        self._pd = isinstance(router, PDPoolRouter)
+        if self._pd:
+            assert model_cfg is not None, \
+                "pd_pool routing needs model_cfg for KV-transfer sizing"
+            self.channel = EmulatedChannel(cfg.kv_link_bandwidth,
+                                           name="kv-transfer")
+            self._mover_ids = itertools.count()
+            self._movers: List[threading.Thread] = []
+            for i in router.prefill_indices:
+                self.engines[i].on_finish = self._pd_handoff
+            for i in router.decode_indices:
+                self.engines[i].on_finish = self._complete
+        else:
+            for e in self.engines:
+                e.on_finish = self._complete
+
+    # ------------------------------------------------------------- intake --
+    def submit(self, req: Request) -> int:
+        """Route and enqueue one request; returns the chosen replica index.
+
+        Non-blocking: routing reads racy load/affinity probes, the engine
+        submit is a queue append + synchronous unpark.  Called by the
+        benchmark dispatcher (an Actor) between its time jumps."""
+        if self._pd:
+            req._disagg_total_new = req.max_new_tokens      # stash for decode
+            req.max_new_tokens = 1
+        idx = self.router.route(req, self.engines)
+        self.engines[idx].submit(req)
+        return idx
+
+    def submit_many(self, reqs: Sequence[Request]) -> List[int]:
+        return [self.submit(r) for r in reqs]
+
+    # -------------------------------------------------------------- hooks --
+    def _complete(self, finished: List[Request]) -> None:
+        """Runs in a replica's step thread, synchronously with completion."""
+        with self._finish_cond:
+            self.finished.extend(finished)
+            self._finish_cond.notify_all()
+
+    def _pd_handoff(self, finished: List[Request]) -> None:
+        """Prefill completed: emulate the KV migration, then place the
+        request in the decode pool.  Runs synchronously in the prefill
+        replica's step thread — the KV-mover actor registers with the
+        Timekeeper *before* that replica can re-enter the barrier, so
+        virtual time cannot advance past the transfer's arrival (§4.3)."""
+        now = self.clock.now()
+        for req in finished:
+            kv_bytes = req.context_len * self.model_cfg.kv_bytes_per_token()
+            t_visible = self.channel.send(req, now, kv_bytes)
+            mover: Optional[TimeJumpClient] = None
+            if self.transport is not None:
+                mover = TimeJumpClient(
+                    self.transport, f"kv-mover-{next(self._mover_ids)}")
+            t = threading.Thread(
+                target=self._pd_transfer, args=(req, t_visible, mover),
+                name="kv-mover", daemon=True)
+            t.start()
+            self._movers.append(t)
+
+    def _pd_transfer(self, req: Request, t_visible: float,
+                     mover: Optional[TimeJumpClient]) -> None:
+        try:
+            if mover is not None:
+                mover.jump_to(t_visible)        # occupy the transfer duration
+            req.kv_transfer_time = (t_visible - req.finish_time
+                                    if req.finish_time is not None else 0.0)
+            # Re-arm for the decode stage: KV arrives whole; the first
+            # generated token becomes the last prompt token.
+            first_token = req.output_tokens[0] if req.output_tokens else 0
+            req.max_new_tokens = max(req._disagg_total_new - 1, 1)
+            req.prompt_tokens = list(req.prompt_tokens) + [first_token]
+            req.output_tokens = []
+            req.num_prefilled = 0
+            req.cached_prefix_len = 0
+            req.state = RequestState.WAITING
+            req.finish_time = None
+            req.kv_migrated = True
+            idx = self.router.route_decode(req, self.engines)
+            self.engines[idx].submit(req)
+        finally:
+            if mover is not None:
+                mover.deregister()
+
+    # ---------------------------------------------------------- lifecycle --
+    def start(self) -> "Cluster":
+        for e in self.engines:
+            e.start()
+        self._started = True
+        return self
+
+    def stop(self) -> None:
+        for e in self.engines:
+            e.stop()
+        if self._pd:
+            for t in self._movers:
+                t.join(timeout=5)
+        self._started = False
+
+    def shutdown(self) -> None:
+        self.stop()
+        if self.timekeeper is not None:
+            self.timekeeper.close()
+
+    @property
+    def is_running(self) -> bool:
+        return self._started
+
+    # ------------------------------------------------------------ outtake --
+    def poll(self) -> List[Request]:
+        """Drain cluster-level completions since the previous poll."""
+        with self._finish_cond:
+            new = self.finished[self._poll_cursor:]
+            self._poll_cursor = len(self.finished)
+        return list(new)
+
+    def wait_until_complete(self, expected: int, timeout: float = 600.0) -> bool:
+        import time as _time
+        deadline = _time.monotonic() + timeout
+        with self._finish_cond:
+            while len(self.finished) < expected:
+                remaining = deadline - _time.monotonic()
+                if remaining <= 0:
+                    return False
+                self._finish_cond.wait(timeout=min(remaining, 1.0))
+        return True
+
+    # --------------------------------------------------------- aggregates --
+    @property
+    def step_log(self) -> List[StepRecord]:
+        """All replicas' step records (benchmark overhead accounting)."""
+        log: List[StepRecord] = []
+        for e in self.engines:
+            log.extend(e.step_log)
+        return log
+
+    def num_outstanding(self) -> int:
+        return sum(e.num_outstanding() for e in self.engines)
+
+    def outstanding_tokens(self) -> int:
+        return sum(e.outstanding_tokens() for e in self.engines)
+
+    def stats(self) -> dict:
+        """Aggregate of per-replica ``LLMEngine.stats()`` snapshots."""
+        per_replica = [e.stats() for e in self.engines]
+        agg = {
+            "num_replicas": len(self.engines),
+            "policy": getattr(self.router, "policy", "?"),
+            "finished": len(self.finished),
+            "steps": sum(r["steps"] for r in per_replica),
+            "device_time_s": sum(r["device_time_s"] for r in per_replica),
+            "cpu_overhead_s": sum(r["cpu_overhead_s"] for r in per_replica),
+            "num_preemptions": sum(r["num_preemptions"] for r in per_replica),
+            "replicas": per_replica,
+            "routing_decisions": list(self.router.decisions),
+        }
+        if self.timekeeper is not None:
+            agg["timekeeper"] = self.timekeeper.stats.as_dict()
+        return agg
+
+    # ---------------------------------------------------- fault tolerance --
+    def snapshot(self) -> bytes:
+        """Cluster checkpoint: every replica's deterministic between-steps
+        snapshot plus the router's placement state.  (PD pools: requests
+        inside an in-flight KV transfer belong to no replica and are not
+        captured — checkpoint quiescent clusters or non-PD policies.)"""
+        blobs = [e.snapshot() for e in self.engines]
+        router_state = {
+            "policy": getattr(self.router, "policy", None),
+            "decisions": list(self.router.decisions),
+            "sticky": dict(getattr(self.router, "_sticky", {})),
+        }
+        return pickle.dumps({"replicas": blobs, "router": router_state})
+
+
+# =========================================================================
+# factory
+# =========================================================================
+
+def build_cluster(
+    model_cfg: ModelConfig,
+    engine_cfg: Union[EngineConfig, Sequence[EngineConfig]],
+    num_replicas: int,
+    *,
+    policy: str = "round_robin",
+    mode: str = "emulate",
+    predictor: Optional[RuntimePredictor] = None,
+    jitter_cooldown: float = 0.0,
+    kv_link_bandwidth: float = 50e9,
+    wall: Optional[WallSource] = None,
+    router_kwargs: Optional[dict] = None,
+    name: str = "cluster",
+) -> Cluster:
+    """Wire N replica engines onto one shared Timekeeper + router.
+
+    ``engine_cfg`` may be a single config (homogeneous replicas) or one per
+    replica (heterogeneous — e.g. differently-sized prefill/decode pools).
+    ``wall`` injects a deterministic wall source for reproducibility tests.
+    ``mode`` is "emulate" (time-warp, the default) or "sleep" (strawman).
+    """
+    from repro.serving.stack import default_predictor
+
+    cfgs = ([engine_cfg] * num_replicas
+            if isinstance(engine_cfg, EngineConfig) else list(engine_cfg))
+    assert len(cfgs) == num_replicas, \
+        f"need {num_replicas} engine configs, got {len(cfgs)}"
+
+    router = make_router(policy, num_replicas, **(router_kwargs or {}))
+
+    if mode == "emulate":
+        tk = Timekeeper(clock=VirtualClock(wall), jitter_cooldown=jitter_cooldown)
+        transport = LocalTransport(tk)
+        engines = []
+        for i, cfg in enumerate(cfgs):
+            pred = predictor or default_predictor(model_cfg, cfg)
+            chip = get_chip(cfg.chip)
+            n_dev = cfg.tp * cfg.pp
+            devices = VirtualDeviceContext(n_dev, chip)
+            kv_pool = int(cfg.num_blocks * cfg.block_size
+                          * model_cfg.kv_bytes_per_token())
+            weights = model_cfg.param_count() * model_cfg.dtype_bytes
+            client = TimeJumpClient(transport, f"{name}-r{i}-worker")
+            runner = TimeWarpModelRunner(
+                pred, client, devices=devices,
+                weight_bytes=weights, kv_pool_bytes=kv_pool)
+            engines.append(LLMEngine(cfg, runner, tk.clock,
+                                     name=f"{name}-r{i}"))
+        return Cluster(engines, router, transport=transport, timekeeper=tk,
+                       model_cfg=model_cfg,
+                       cfg=ClusterConfig(kv_link_bandwidth=kv_link_bandwidth))
+
+    if mode == "sleep":
+        clock = VirtualClock(wall)
+        engines = []
+        for i, cfg in enumerate(cfgs):
+            pred = predictor or default_predictor(model_cfg, cfg)
+            runner = SleepModelRunner(pred, clock)
+            engines.append(LLMEngine(cfg, runner, clock, name=f"{name}-r{i}"))
+        return Cluster(engines, router, model_cfg=model_cfg,
+                       cfg=ClusterConfig(kv_link_bandwidth=kv_link_bandwidth))
+
+    raise ValueError(f"unknown cluster mode {mode!r} (emulate | sleep)")

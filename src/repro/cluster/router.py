@@ -1,0 +1,200 @@
+"""Pluggable request routing for multi-replica serving (data-parallel mode).
+
+A :class:`Router` decides which replica serves each request.  Policies are
+*engine-agnostic*: they see replicas only through the tiny
+:class:`ReplicaView` protocol (load + prefix-cache probes), so the very same
+policy objects route the time-warp emulator's real ``LLMEngine`` replicas
+(``repro.cluster.Cluster``) **and** the DES baseline's simulated replicas
+(``repro.des.simulator.MultiReplicaSimulator``).  Sharing the policy code is
+what extends the paper's §2.3 semantic-gap argument to cluster scale: any
+emulator-vs-DES divergence at N replicas is attributable to engine-semantics
+re-implementation, never to a routing difference.
+
+Policies
+--------
+``round_robin``
+    Cyclic assignment; ignores replica state.  Deterministic, the baseline.
+``least_outstanding_tokens``
+    Place on the replica with the fewest remaining scheduled tokens
+    (prefill left + decode left) — the token-aware analogue of
+    least-outstanding-requests, robust to skewed prompt lengths.
+``prefix_affinity``
+    Score replicas by their radix prefix-cache hit potential for the
+    request's prompt and route to the best scorer; unseen prefixes fall
+    back to least-outstanding placement and are remembered (sticky key on
+    the prompt head) so a session's follow-ups land on the replica already
+    holding its KV.
+``pd_pool``
+    Prefill/decode disaggregation as a routing policy: the replica set is
+    split into a prefill pool and a decode pool; fresh requests go to the
+    least-loaded prefill replica, and after the KV handoff the cluster asks
+    :meth:`PDPoolRouter.route_decode` for the decode-side placement.  This
+    unifies ``repro.serving.disagg`` behind the same Router interface.
+"""
+
+from __future__ import annotations
+
+import itertools
+from typing import Dict, List, Optional, Protocol, Sequence, Tuple
+
+__all__ = [
+    "ReplicaView",
+    "Router",
+    "RoundRobinRouter",
+    "LeastOutstandingTokensRouter",
+    "PrefixAffinityRouter",
+    "PDPoolRouter",
+    "ROUTER_POLICIES",
+    "make_router",
+]
+
+
+class ReplicaView(Protocol):
+    """What a routing policy may observe about one replica.
+
+    Implementations are cheap, non-blocking, racy-read probes: an engine
+    replica answers from lock-free counters, a DES replica from its event
+    state.  Policies must tolerate (and tie-break deterministically under)
+    slightly stale values.
+    """
+
+    def outstanding_tokens(self) -> int: ...
+
+    def prefix_match_len(self, tokens: Sequence[int]) -> int: ...
+
+
+class Router:
+    """Base router: maps each request to a replica index in [0, n)."""
+
+    def __init__(self, num_replicas: int):
+        assert num_replicas >= 1
+        self.num_replicas = num_replicas
+        self.decisions: List[int] = []       # audit log (tests/benchmarks)
+
+    def route(self, req, views: Sequence[ReplicaView]) -> int:
+        idx = self._pick(req, views)
+        self.decisions.append(idx)
+        return idx
+
+    def _pick(self, req, views: Sequence[ReplicaView]) -> int:
+        raise NotImplementedError
+
+    # replicas a fresh request may land on (overridden by pd_pool)
+    def intake_indices(self) -> List[int]:
+        return list(range(self.num_replicas))
+
+
+def _least_outstanding(views, indices) -> int:
+    """Lowest-load replica among ``indices``; lowest index wins ties so the
+    decision is deterministic under equal (or stale-equal) loads."""
+    return min(indices, key=lambda i: (views[i].outstanding_tokens(), i))
+
+
+class RoundRobinRouter(Router):
+    policy = "round_robin"
+
+    def __init__(self, num_replicas: int):
+        super().__init__(num_replicas)
+        self._next = itertools.cycle(range(num_replicas))
+
+    def _pick(self, req, views) -> int:
+        return next(self._next)
+
+
+class LeastOutstandingTokensRouter(Router):
+    policy = "least_outstanding_tokens"
+
+    def _pick(self, req, views) -> int:
+        return _least_outstanding(views, range(self.num_replicas))
+
+
+class PrefixAffinityRouter(Router):
+    """Route by radix prefix-cache hit potential (session affinity).
+
+    The probe answers "how many prompt tokens does replica i already hold?";
+    the best scorer wins (ties to lower load).  A request whose prefix no
+    replica holds yet is placed least-outstanding and its prompt head is
+    remembered, so same-session requests that arrive *before* the first one
+    has populated the cache still co-locate (the sticky map is the router's
+    own state, not a cache re-implementation — the actual hit accounting
+    stays inside the engine's radix tree).
+    """
+
+    policy = "prefix_affinity"
+
+    def __init__(self, num_replicas: int, *, affinity_key_len: int = 32):
+        super().__init__(num_replicas)
+        self.affinity_key_len = affinity_key_len
+        self._sticky: Dict[Tuple[int, ...], int] = {}
+
+    def _key(self, tokens: Sequence[int]) -> Tuple[int, ...]:
+        return tuple(tokens[: self.affinity_key_len])
+
+    def _pick(self, req, views) -> int:
+        toks = getattr(req, "prompt_tokens", None)
+        if not toks:
+            # No routing key (e.g. a DES SimRequest built from lengths
+            # only): nothing to be affine to — place by load.
+            return _least_outstanding(views, range(self.num_replicas))
+        tokens = list(toks)
+        scores = [v.prefix_match_len(tokens) for v in views]
+        best = max(scores)
+        if best > 0:
+            idx = min((i for i, s in enumerate(scores) if s == best),
+                      key=lambda i: (views[i].outstanding_tokens(), i))
+            self._sticky[self._key(tokens)] = idx
+            return idx
+        key = self._key(tokens)
+        idx = self._sticky.get(key)
+        if idx is None:
+            idx = _least_outstanding(views, range(self.num_replicas))
+            self._sticky[key] = idx
+        return idx
+
+
+class PDPoolRouter(Router):
+    """Prefill/decode pool split (DistServe/Splitwise-style) as routing.
+
+    The first ``num_prefill`` replicas form the prefill pool; the rest form
+    the decode pool.  ``route`` places fresh requests on the least-loaded
+    prefill replica; ``route_decode`` places KV-migrated requests on the
+    least-loaded decode replica (the cluster calls it after the emulated KV
+    transfer lands).
+    """
+
+    policy = "pd_pool"
+
+    def __init__(self, num_replicas: int, *, num_prefill: Optional[int] = None):
+        super().__init__(num_replicas)
+        assert num_replicas >= 2, "pd_pool needs at least one of each pool"
+        self.num_prefill = num_prefill if num_prefill is not None \
+            else max(1, num_replicas // 2)
+        assert 1 <= self.num_prefill < num_replicas
+        self.prefill_indices = list(range(self.num_prefill))
+        self.decode_indices = list(range(self.num_prefill, num_replicas))
+
+    def intake_indices(self) -> List[int]:
+        return list(self.prefill_indices)
+
+    def _pick(self, req, views) -> int:
+        return _least_outstanding(views, self.prefill_indices)
+
+    def route_decode(self, req, views: Sequence[ReplicaView]) -> int:
+        return _least_outstanding(views, self.decode_indices)
+
+
+ROUTER_POLICIES = {
+    cls.policy: cls
+    for cls in (RoundRobinRouter, LeastOutstandingTokensRouter,
+                PrefixAffinityRouter, PDPoolRouter)
+}
+
+
+def make_router(policy: str, num_replicas: int, **kwargs) -> Router:
+    try:
+        cls = ROUTER_POLICIES[policy]
+    except KeyError:
+        raise ValueError(
+            f"unknown routing policy {policy!r}; "
+            f"choose from {sorted(ROUTER_POLICIES)}") from None
+    return cls(num_replicas, **kwargs)

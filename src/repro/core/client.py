@@ -69,6 +69,12 @@ class LocalTransport:
     def deregister_actor(self, actor_id: str) -> None:
         self._tk.deregister_actor(actor_id)
 
+    def park_actor(self, actor_id: str) -> None:
+        self._tk.park_actor(actor_id)
+
+    def unpark_actor(self, actor_id: str) -> None:
+        self._tk.unpark_actor(actor_id)
+
 
 class TimeJumpClient:
     """Actor-side implementation of TIMEJUMP(Δt) (Algorithm 1)."""
@@ -77,6 +83,7 @@ class TimeJumpClient:
         self._transport = transport
         self.actor_id = actor_id
         self._registered = False
+        self._parked = False
         if auto_register:
             self.register()
 
@@ -85,11 +92,37 @@ class TimeJumpClient:
         if not self._registered:
             self._transport.register_actor(self.actor_id)
             self._registered = True
+        elif self._parked:
+            self.unpark()
 
     def deregister(self) -> None:
         if self._registered:
             self._transport.deregister_actor(self.actor_id)
             self._registered = False
+            self._parked = False
+
+    def park(self) -> None:
+        """Leave the barrier but stay known to the Timekeeper (idle replica).
+
+        Transports without a park surface (e.g. the socket transport) fall
+        back to full deregistration — semantically equivalent, just without
+        the cheap-re-entry bookkeeping."""
+        if not self._registered or self._parked:
+            return
+        park = getattr(self._transport, "park_actor", None)
+        if park is not None:
+            park(self.actor_id)
+            self._parked = True
+        else:
+            self.deregister()
+
+    def unpark(self) -> None:
+        if not self._registered:
+            self.register()
+            return
+        if self._parked:
+            self._transport.unpark_actor(self.actor_id)
+            self._parked = False
 
     def __enter__(self) -> "TimeJumpClient":
         self.register()

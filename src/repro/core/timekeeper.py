@@ -56,6 +56,8 @@ class TimekeeperStats:
     virtual_advanced: float = 0.0   # seconds of offset added (time skipped)
     cooldown_waits: int = 0         # jitter cooldowns applied
     registered_peak: int = 0
+    parks: int = 0                  # park transitions (idle replicas)
+    unparks: int = 0
 
     def as_dict(self) -> dict:
         return {
@@ -64,6 +66,8 @@ class TimekeeperStats:
             "virtual_advanced_s": self.virtual_advanced,
             "cooldown_waits": self.cooldown_waits,
             "registered_peak": self.registered_peak,
+            "parks": self.parks,
+            "unparks": self.unparks,
         }
 
 
@@ -99,6 +103,7 @@ class Timekeeper:
         self.jitter_cooldown = float(jitter_cooldown)
         self._lock = threading.Lock()
         self._actors: Set[str] = set()
+        self._parked: Set[str] = set()
         self._pending: Dict[str, float] = {}
         self._last_advance_wall = -float("inf")
         self._broadcast_hooks: list[Callable[[float, int], None]] = []
@@ -111,6 +116,7 @@ class Timekeeper:
             if self._closed:
                 raise RuntimeError("Timekeeper is closed")
             self._actors.add(actor_id)
+            self._parked.discard(actor_id)
             self.stats.registered_peak = max(
                 self.stats.registered_peak, len(self._actors)
             )
@@ -120,13 +126,44 @@ class Timekeeper:
         the remaining actors (elastic scale-down / clean shutdown)."""
         with self._lock:
             self._actors.discard(actor_id)
+            self._parked.discard(actor_id)
             self._pending.pop(actor_id, None)
             self._maybe_resolve_locked()
+
+    # -------------------------------------------------------- park/unpark --
+    # Cluster-scale support: N replica engines share one Timekeeper and most
+    # of them are idle at any instant.  A *parked* actor stays known (its
+    # identity, and its slot in ``registered_peak``, survive) but is excluded
+    # from the barrier, so one busy replica plus the dispatcher can advance
+    # the single shared offset without waiting on the other N-1.  Park/unpark
+    # are the high-frequency path (every engine idle transition), so they
+    # must be cheap and never wedge the barrier — parking re-evaluates it
+    # exactly like deregistration does.
+    def park_actor(self, actor_id: str) -> None:
+        with self._lock:
+            if actor_id in self._actors:
+                self._actors.discard(actor_id)
+                self._parked.add(actor_id)
+                self._pending.pop(actor_id, None)
+                self.stats.parks += 1
+                self._maybe_resolve_locked()
+
+    def unpark_actor(self, actor_id: str) -> None:
+        with self._lock:
+            if self._closed:
+                raise RuntimeError("Timekeeper is closed")
+            self._parked.discard(actor_id)
+            self._actors.add(actor_id)
+            self.stats.unparks += 1
+            self.stats.registered_peak = max(
+                self.stats.registered_peak, len(self._actors)
+            )
 
     def close(self) -> None:
         with self._lock:
             self._closed = True
             self._actors.clear()
+            self._parked.clear()
             self._pending.clear()
         # Final epoch bump releases any straggling waiters immediately.
         self.clock.advance_to(-float("inf"))
@@ -135,6 +172,11 @@ class Timekeeper:
     def num_actors(self) -> int:
         with self._lock:
             return len(self._actors)
+
+    @property
+    def num_parked(self) -> int:
+        with self._lock:
+            return len(self._parked)
 
     def add_broadcast_hook(self, hook: Callable[[float, int], None]) -> None:
         """Fan-out path: called as hook(offset, epoch) after each resolution.

@@ -7,10 +7,23 @@ lines Vidur needed for the original vLLM scheduler) and shares Revati's
 runtime predictor, so any output divergence from the emulator is purely the
 **semantic gap** of re-implementation — not a cost-model difference.
 
+Multi-replica mode: ``num_replicas > 1`` runs N independent replica engines
+inside one merged event loop, with request placement delegated to the same
+pluggable :class:`~repro.cluster.router.Router` policies that route the
+emulator's real engines.  Using identically-constructed policy objects
+(routers are stateful — build a fresh one per run) pins routing behaviour
+equal by construction, so emulator-vs-DES divergence at cluster scale is
+attributable purely to engine-semantics re-implementation — extending the
+paper's semantic-gap argument to N replicas.
+
 Intentionally (and realistically) missing, mirroring Table 1's "VD" column:
-prefix caching, hierarchical cache tiers, preemption-by-recompute, PD
-disaggregation, per-framework batching quirks.  ``benchmarks/table1_features``
-quantifies the resulting error on workloads that exercise those features.
+prefix caching (so ``prefix_affinity`` routing degrades to its sticky-map
+fallback — a DES replica can never report a cache hit), hierarchical cache
+tiers, preemption-by-recompute, per-framework batching quirks, and the
+``pd_pool`` policy's KV migration (re-implementing it here would be exactly
+the re-implementation burden the paper critiques, so it raises instead).
+``benchmarks/table1_features`` quantifies the resulting error on workloads
+that exercise those features.
 """
 
 from __future__ import annotations
@@ -40,6 +53,8 @@ class SimRequest:
     num_generated: int = 0
     first_token_time: Optional[float] = None
     finish_time: Optional[float] = None
+    replica: int = -1                              # placement decision
+    prompt_tokens: Optional[Tuple[int, ...]] = None  # routing key only
 
     def ttft(self) -> Optional[float]:
         if self.first_token_time is None:
@@ -53,58 +68,108 @@ class SimRequest:
         return (self.finish_time - self.first_token_time) / n if n > 0 else 0.0
 
 
+class _ReplicaState:
+    """One simulated engine replica: queues + in-flight step bookkeeping.
+
+    Also the replica's :class:`~repro.cluster.router.ReplicaView`: routing
+    probes answer from event-loop state.  ``prefix_match_len`` is always 0 —
+    the DES models no radix cache (Table 1), which is itself part of the
+    semantic gap the multi-replica comparison measures.
+    """
+
+    def __init__(self, index: int):
+        self.index = index
+        self.waiting: List[SimRequest] = []
+        self.running: List[SimRequest] = []
+        self.step_in_flight = False
+        self.in_flight_batch: List[Tuple[SimRequest, int]] = []
+
+    # ------------------------------------------------------- ReplicaView --
+    def outstanding_tokens(self) -> int:
+        total = 0
+        for s in self.waiting + self.running:
+            total += max(s.prompt_len - s.num_prefilled, 0)
+            total += max(s.max_new_tokens - s.num_generated, 0)
+        return total
+
+    def prefix_match_len(self, tokens) -> int:
+        return 0
+
+
 class DiscreteEventSimulator:
-    """Event-driven re-implementation of a vLLM-like engine."""
+    """Event-driven re-implementation of a vLLM-like engine (1..N replicas)."""
 
     ARRIVAL, STEP_DONE = 0, 1
 
-    def __init__(self, predictor: RuntimePredictor, cfg: DESConfig = DESConfig()):
+    def __init__(
+        self,
+        predictor: RuntimePredictor,
+        cfg: DESConfig = DESConfig(),
+        *,
+        num_replicas: int = 1,
+        router=None,                 # repro.cluster.router.Router
+    ):
         self.predictor = predictor
         self.cfg = cfg
+        self.num_replicas = num_replicas
+        if router is not None and getattr(router, "policy", None) == "pd_pool":
+            raise ValueError(
+                "the DES baseline does not model PD disaggregation "
+                "(KV migration would need re-implementation — the exact "
+                "burden the paper critiques); use the cluster emulator")
+        if router is not None and router.num_replicas != num_replicas:
+            raise ValueError(
+                f"router sized for {router.num_replicas} replicas, "
+                f"simulator has {num_replicas}")
+        self.router = router
+        self.replicas: List[_ReplicaState] = []
 
     def run(self, requests) -> List[SimRequest]:
         """``requests``: iterable of objects with prompt_tokens/prompt_len,
         max_new_tokens, arrival_time (repro Request or SimRequest)."""
+        from repro.cluster.router import RoundRobinRouter
+
+        router = self.router or RoundRobinRouter(self.num_replicas)
         sims: List[SimRequest] = []
         for i, r in enumerate(requests):
-            plen = getattr(r, "prompt_len", None) or len(r.prompt_tokens)
+            toks = getattr(r, "prompt_tokens", None)
+            plen = getattr(r, "prompt_len", None) or len(toks)
             sims.append(SimRequest(
                 request_id=i, prompt_len=plen,
                 max_new_tokens=r.max_new_tokens,
-                arrival_time=r.arrival_time))
+                arrival_time=r.arrival_time,
+                prompt_tokens=tuple(toks) if toks is not None else None))
 
+        self.replicas = [_ReplicaState(i) for i in range(self.num_replicas)]
         counter = itertools.count()
-        events: List[Tuple[float, int, int, Optional[SimRequest]]] = []
+        # event payload: SimRequest for ARRIVAL, replica index for STEP_DONE
+        events: List[Tuple[float, int, int, object]] = []
         for s in sims:
             heapq.heappush(events, (s.arrival_time, next(counter), self.ARRIVAL, s))
 
-        waiting: List[SimRequest] = []
-        running: List[SimRequest] = []
-        step_in_flight = False
         now = 0.0
-        in_flight_batch: List[Tuple[SimRequest, int]] = []
 
-        def schedule_step():
-            nonlocal step_in_flight, in_flight_batch
-            if step_in_flight:
+        def schedule_step(rep: _ReplicaState):
+            if rep.step_in_flight:
                 return
             batch: List[Tuple[SimRequest, int]] = []
             budget = self.cfg.max_batched_tokens
             # decodes first (mixed batching)
-            for s in running:
+            for s in rep.running:
                 if s.num_prefilled >= s.prompt_len:
                     batch.append((s, 1))
             # chunked prefill continuation + FCFS admission
-            for s in running:
+            for s in rep.running:
                 if budget <= 0:
                     break
                 if s.num_prefilled < s.prompt_len:
                     chunk = min(budget, s.prompt_len - s.num_prefilled)
                     batch.append((s, chunk))
                     budget -= chunk
-            while budget > 0 and waiting and len(running) < self.cfg.max_num_seqs:
-                s = waiting.pop(0)
-                running.append(s)
+            while (budget > 0 and rep.waiting
+                   and len(rep.running) < self.cfg.max_num_seqs):
+                s = rep.waiting.pop(0)
+                rep.running.append(s)
                 chunk = min(budget, s.prompt_len)
                 batch.append((s, chunk))
                 budget -= chunk
@@ -115,18 +180,23 @@ class DiscreteEventSimulator:
                 for s, n in batch
             ])
             dur = self.predictor.predict_step(spec).total + self.cfg.step_overhead_s
-            in_flight_batch = batch
-            step_in_flight = True
-            heapq.heappush(events, (now + dur, next(counter), self.STEP_DONE, None))
+            rep.in_flight_batch = batch
+            rep.step_in_flight = True
+            heapq.heappush(
+                events, (now + dur, next(counter), self.STEP_DONE, rep.index))
 
         while events:
             now, _, kind, payload = heapq.heappop(events)
             if kind == self.ARRIVAL:
-                waiting.append(payload)
-                schedule_step()
+                idx = router.route(payload, self.replicas)
+                payload.replica = idx
+                rep = self.replicas[idx]
+                rep.waiting.append(payload)
+                schedule_step(rep)
             else:  # STEP_DONE
-                step_in_flight = False
-                for s, n in in_flight_batch:
+                rep = self.replicas[payload]
+                rep.step_in_flight = False
+                for s, n in rep.in_flight_batch:
                     if s.num_prefilled < s.prompt_len:
                         s.num_prefilled += n
                         if s.num_prefilled >= s.prompt_len:
@@ -139,8 +209,8 @@ class DiscreteEventSimulator:
                             and s.num_generated >= s.max_new_tokens
                             and s.finish_time is None):
                         s.finish_time = now
-                        running.remove(s)
-                in_flight_batch = []
-                schedule_step()
+                        rep.running.remove(s)
+                rep.in_flight_batch = []
+                schedule_step(rep)
 
         return sims

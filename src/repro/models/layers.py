@@ -359,7 +359,12 @@ def moe_a2a(cfg: ModelConfig, p, x):
     n_loc = B_loc * T_loc
     cap = max(1, int(math.ceil(n_loc * K / ep * moe_cfg.capacity_factor)))
 
-    from jax import shard_map
+    try:
+        from jax import shard_map               # jax >= 0.6
+        _check_kw = {"check_vma": False}
+    except ImportError:                         # jax 0.4/0.5 experimental API
+        from jax.experimental.shard_map import shard_map
+        _check_kw = {"check_rep": False}
     from jax.sharding import PartitionSpec as P
 
     x_spec = P(b_spec, "model", None)
@@ -428,7 +433,7 @@ def moe_a2a(cfg: ModelConfig, p, x):
         in_specs=(x_spec, P(None, None), P("model", None, None),
                   P("model", None, None)),
         out_specs=(x_spec, P(), P()),
-        check_vma=False,
+        **_check_kw,
     )
     y, aux, ce = fn(x, p["router"], p["w_in"], p["w_out"])
     return y, {"moe_aux_loss": aux, "expert_load": ce}

@@ -1,15 +1,23 @@
-"""Benchmark runner: dispatches a request stream and collects latency
-distributions (paper Fig. 4's left-hand process).
+"""Benchmark pipeline: Workload → Cluster → Metrics (paper Fig. 4, scaled).
+
+The runner is decoupled from any one engine: it drives a *target* — a single
+:class:`~repro.serving.engine.LLMEngine` or an N-replica
+:class:`~repro.cluster.Cluster` — through the uniform non-blocking surface
+both expose (``submit`` / ``wait_until_complete`` / ``finished`` /
+``step_log`` / ``clock``).  Dataflow:
+
+    Workload (synthesize/replay)  →  dispatcher (Actor: time-jumps to each
+    arrival, routes via the target's submit)  →  target replicas (engines
+    stepping on the shared virtual clock)  →  Metrics (Observer: collects
+    TTFT/TPOT/e2e/goodput percentiles from completion timestamps).
 
 The **request dispatcher is an Actor**: between arrivals it jumps virtual
-time to the next dispatch timestamp instead of sleeping — this is the other
-half of the paper's integration (the benchmark-runner patch).  The **output
-processor is an Observer**: request completion timestamps are read from the
-shared virtual clock without participating in barriers.
-
-In real/sleep modes the dispatcher degrades transparently: with no
-Timekeeper attached it wall-sleeps to each arrival (the exact strawman
-behaviour), so one code path drives all three modes.
+time to the next dispatch timestamp instead of sleeping.  The **metrics
+collector is an Observer**: completion timestamps are read from the shared
+virtual clock without participating in barriers.  In real/sleep modes the
+dispatcher degrades transparently: with no Timekeeper attached it
+wall-sleeps to each arrival (the exact strawman behaviour), so one code
+path drives all modes and all cluster sizes.
 """
 
 from __future__ import annotations
@@ -24,7 +32,6 @@ import numpy as np
 from repro.core.client import TimeJumpClient
 from repro.core.clock import VirtualClock
 
-from .engine import LLMEngine
 from .request import Request
 
 
@@ -61,14 +68,40 @@ class BenchmarkResult:
     throughput_tokens_per_s: float
     engine_cpu_overhead: float
     engine_device_time: float
+    num_replicas: int = 1
+    per_replica: List[dict] = field(repr=False, default_factory=list)
+    routing_policy: Optional[str] = None
+    # (ttft, tpot) per completed request; tpot is None for 1-token outputs
+    slo_samples: List[tuple] = field(repr=False, default_factory=list)
 
     @property
     def speedup(self) -> float:
         """Virtual seconds simulated per wall second."""
         return self.makespan_virtual / self.wall_seconds if self.wall_seconds else 0.0
 
+    @property
+    def request_rate_completed(self) -> float:
+        """Completed requests per virtual second (cluster throughput)."""
+        return (self.num_requests / self.makespan_virtual
+                if self.makespan_virtual else 0.0)
+
+    def goodput_rps(self, slo_ttft_s: float = float("inf"),
+                    slo_tpot_s: float = float("inf")) -> float:
+        """SLO-attaining completions per virtual second: only requests whose
+        TTFT and TPOT both meet the SLOs count (DistServe-style goodput).
+        A request with no TPOT sample (single-token output) is judged on
+        TTFT alone."""
+        if not self.makespan_virtual:
+            return 0.0
+        good = 0
+        for ttft, tpot in self.slo_samples:
+            ttft_ok = ttft is None or ttft <= slo_ttft_s
+            tpot_ok = tpot is None or tpot <= slo_tpot_s
+            good += int(ttft_ok and tpot_ok)
+        return good / self.makespan_virtual
+
     def summary(self) -> dict:
-        return {
+        out = {
             "num_requests": self.num_requests,
             "ttft_p50_ms": self.ttft.p50 * 1e3,
             "ttft_p90_ms": self.ttft.p90 * 1e3,
@@ -80,23 +113,41 @@ class BenchmarkResult:
             "wall_s": self.wall_seconds,
             "speedup_x": self.speedup,
             "throughput_tok_s": self.throughput_tokens_per_s,
+            "completed_rps": self.request_rate_completed,
         }
+        if self.num_replicas > 1:
+            out["num_replicas"] = self.num_replicas
+            out["routing_policy"] = self.routing_policy
+        return out
+
+
+def _is_started(target) -> bool:
+    """Engine, cluster, and the disagg facade all expose ``is_running``."""
+    return bool(getattr(target, "is_running", False))
 
 
 class BenchmarkRunner:
+    """Drive a request stream through an engine or a cluster.
+
+    ``target`` needs only the uniform replica surface: ``submit``,
+    ``start``/``stop``, ``wait_until_complete``, ``finished``,
+    ``step_log``, and a ``clock`` attribute.
+    """
+
     def __init__(
         self,
-        engine: LLMEngine,
+        target,
         requests: List[Request],
         *,
         transport=None,              # Timekeeper transport (emulate mode)
         name: str = "bench",
     ):
-        self.engine = engine
+        self.target = target
+        self.engine = target         # backwards-compatible alias
         self.requests = sorted(requests, key=lambda r: r.arrival_time)
         self.transport = transport
         self.name = name
-        self.clock: VirtualClock = engine.clock
+        self.clock: VirtualClock = target.clock
 
     # ---------------------------------------------------------- dispatch --
     def _dispatch_loop(self) -> None:
@@ -106,15 +157,15 @@ class BenchmarkRunner:
         t0 = self.clock.now()
         try:
             for req in self.requests:
-                target = t0 + req.arrival_time
+                target_t = t0 + req.arrival_time
                 if client is not None:
-                    client.jump_to(target)        # Actor: jump, don't sleep
+                    client.jump_to(target_t)      # Actor: jump, don't sleep
                 else:
-                    dt = target - self.clock.now()
+                    dt = target_t - self.clock.now()
                     if dt > 0:
                         self.clock.wall.sleep(dt)  # real/sleep modes
                 req.arrival_time = self.clock.now()
-                self.engine.submit(req)
+                self.target.submit(req)
         finally:
             if client is not None:
                 client.deregister()
@@ -126,32 +177,34 @@ class BenchmarkRunner:
         dispatcher = threading.Thread(
             target=self._dispatch_loop, name=f"{self.name}-dispatch", daemon=True)
         started_here = False
-        if self.engine._thread is None:
-            self.engine.start()
+        if not _is_started(self.target):
+            self.target.start()
             started_here = True
         dispatcher.start()
-        ok = self.engine.wait_until_complete(len(self.requests), timeout=timeout)
+        ok = self.target.wait_until_complete(len(self.requests), timeout=timeout)
         dispatcher.join(timeout=10)
         wall = time.monotonic() - wall0
         v1 = self.clock.now()
         if started_here:
-            self.engine.stop()
+            self.target.stop()
         if not ok:
             raise TimeoutError(
-                f"benchmark timed out: {len(self.engine.finished)}/"
+                f"benchmark timed out: {len(self.target.finished)}/"
                 f"{len(self.requests)} finished")
         return self._collect(wall, v1 - v0)
 
     def _collect(self, wall: float, makespan: float) -> BenchmarkResult:
-        reqs = self.engine.finished
+        reqs = self.target.finished
         ttft = LatencyStats.of([r.ttft() for r in reqs if r.ttft() is not None])
         tpot = LatencyStats.of([r.tpot() for r in reqs
                                 if r.tpot() is not None and r.num_generated > 1])
         e2e = LatencyStats.of([r.e2e_latency() for r in reqs
                                if r.e2e_latency() is not None])
         total_tokens = sum(r.num_generated for r in reqs)
-        cpu = sum(s.cpu_overhead_wall for s in self.engine.step_log)
-        dev = sum(s.device_time for s in self.engine.step_log)
+        step_log = self.target.step_log
+        cpu = sum(s.cpu_overhead_wall for s in step_log)
+        dev = sum(s.device_time for s in step_log)
+        engines = getattr(self.target, "engines", None)
         return BenchmarkResult(
             ttft=ttft, tpot=tpot, e2e=e2e,
             makespan_virtual=makespan,
@@ -160,7 +213,26 @@ class BenchmarkRunner:
             throughput_tokens_per_s=total_tokens / makespan if makespan else 0.0,
             engine_cpu_overhead=cpu,
             engine_device_time=dev,
+            num_replicas=len(engines) if engines else 1,
+            per_replica=([e.stats() for e in engines] if engines else []),
+            routing_policy=getattr(
+                getattr(self.target, "router", None), "policy", None),
+            slo_samples=[
+                (r.ttft(),
+                 r.tpot() if r.num_generated > 1 else None)
+                for r in reqs
+            ],
         )
+
+
+def run_pipeline(workload_cfg, target, *, transport=None,
+                 timeout: float = 600.0) -> BenchmarkResult:
+    """One-call Workload → Cluster → Metrics pipeline: synthesize the
+    request stream from a WorkloadConfig and benchmark ``target`` with it."""
+    from .workload import synthesize
+
+    reqs = synthesize(workload_cfg)
+    return BenchmarkRunner(target, reqs, transport=transport).run(timeout=timeout)
 
 
 def compare_distributions(a: LatencyStats, b: LatencyStats) -> Dict[str, float]:

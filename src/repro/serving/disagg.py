@@ -7,33 +7,25 @@ moves, but the transfer occupies virtual time (bytes / link bandwidth) and
 the decode engine cannot act on the request before its virtual arrival
 (§4.3 "Preserving Distributed Dependencies").
 
-Causality of the handoff: the prefill engine invokes ``on_finish``
-*synchronously in its step thread*, and the KV mover registers with the
-Timekeeper right there — before the prefill engine can participate in
-another barrier round.  Virtual time therefore cannot advance past the KV
-arrival without the mover's consent (a wall-clock-polling mover would leak
-its polling latency into accelerated virtual time — ~40× dilated — and
-corrupt decode-side latencies; found by examples/pd_disaggregation.py).
-
-This module is deliberately built *on top of* the unmodified LLMEngine —
-demonstrating the paper's Table-1 claim that complex deployment features
-work under emulation without bespoke modelling: the disaggregation logic
-here is real orchestration code, not a simulator approximation.
+Since the multi-replica refactor this module is a thin compatibility facade:
+the handoff machinery (KV channel, mover actors, causal registration) lives
+in :class:`repro.cluster.Cluster` under its ``pd_pool`` routing policy, and
+:class:`DisaggregatedCluster` is exactly that cluster with one prefill and
+one decode replica.  The Table-1 claim is unchanged — the disaggregation
+logic is real orchestration code built on unmodified ``LLMEngine``s, not a
+simulator approximation — and now the same code path scales to arbitrary
+prefill/decode pool sizes via ``build_cluster(..., policy="pd_pool")``.
 """
 
 from __future__ import annotations
 
-import itertools
-import threading
 from dataclasses import dataclass
-from typing import List, Optional
+from typing import List
 
-from repro.core.client import TimeJumpClient
-from repro.core.emulation import EmulatedChannel
 from repro.models.config import ModelConfig
 
 from .engine import LLMEngine
-from .request import Request, RequestState
+from .request import Request
 
 
 @dataclass
@@ -42,7 +34,10 @@ class DisaggConfig:
 
 
 class DisaggregatedCluster:
-    """Router + prefill engine + decode engine + KV-transfer channel."""
+    """Router + prefill engine + decode engine + KV-transfer channel.
+
+    Facade over ``repro.cluster.Cluster`` with a 2-replica ``pd_pool``
+    router (replica 0 = prefill, replica 1 = decode)."""
 
     def __init__(
         self,
@@ -52,82 +47,52 @@ class DisaggregatedCluster:
         cfg: DisaggConfig = DisaggConfig(),
         transport=None,
     ):
+        from repro.cluster import Cluster, ClusterConfig, PDPoolRouter
+
         self.model_cfg = model_cfg
         self.prefill_engine = prefill_engine
         self.decode_engine = decode_engine
         self.cfg = cfg
-        self.channel = EmulatedChannel(cfg.kv_link_bandwidth, name="kv-transfer")
-        self.transport = transport
-        self._mover_ids = itertools.count()
-        self._movers: List[threading.Thread] = []
-        self._expected = 0
+        self._cluster = Cluster(
+            [prefill_engine, decode_engine],
+            PDPoolRouter(2, num_prefill=1),
+            transport=transport,
+            model_cfg=model_cfg,
+            cfg=ClusterConfig(kv_link_bandwidth=cfg.kv_link_bandwidth),
+        )
+        self.channel = self._cluster.channel
+        self.clock = self._cluster.clock
 
     # ------------------------------------------------------------- intake --
     def submit(self, req: Request) -> None:
-        # Prefill-stage request: finish after the first token (the KV is then
-        # complete) and hand off for decode.
-        self._expected += 1
-        req._disagg_total_new = req.max_new_tokens          # stash
-        req.max_new_tokens = 1
-        self.prefill_engine.submit(req)
+        self._cluster.submit(req)
 
     def start(self) -> None:
-        self.prefill_engine.on_finish = self._handoff
-        self.prefill_engine.start()
-        self.decode_engine.start()
+        self._cluster.start()
 
     def stop(self) -> None:
-        self.prefill_engine.stop()
-        self.decode_engine.stop()
-        for t in self._movers:
-            t.join(timeout=5)
+        self._cluster.stop()
 
-    # ----------------------------------------------------------- handoff --
-    def _handoff(self, finished: List[Request]) -> None:
-        """Runs in the prefill engine's step thread, synchronously with
-        completion.  Registering the mover HERE is what preserves causality:
-        the prefill engine cannot re-enter the barrier until this returns."""
-        now = self.prefill_engine.clock.now()
-        for req in finished:
-            kv_bytes = req.context_len * self.model_cfg.kv_bytes_per_token()
-            t_visible = self.channel.send(req, now, kv_bytes)
-            mover: Optional[TimeJumpClient] = None
-            if self.transport is not None:
-                mover = TimeJumpClient(
-                    self.transport, f"kv-mover-{next(self._mover_ids)}")
-            t = threading.Thread(
-                target=self._transfer, args=(req, t_visible, mover),
-                name="kv-mover", daemon=True)
-            t.start()
-            self._movers.append(t)
-
-    def _transfer(self, req: Request, t_visible: float,
-                  mover: Optional[TimeJumpClient]) -> None:
-        try:
-            if mover is not None:
-                mover.jump_to(t_visible)       # occupy the transfer duration
-            req.kv_transfer_time = (t_visible - req.finish_time
-                                    if req.finish_time is not None else 0.0)
-            # Re-arm for the decode stage: KV arrives whole; the first
-            # generated token becomes the last prompt token.
-            first_token = req.output_tokens[0] if req.output_tokens else 0
-            req.max_new_tokens = max(req._disagg_total_new - 1, 1)
-            req.prompt_tokens = list(req.prompt_tokens) + [first_token]
-            req.output_tokens = []
-            req.num_prefilled = 0
-            req.cached_prefix_len = 0
-            req.state = RequestState.WAITING
-            req.finish_time = None
-            req.kv_migrated = True
-            self.decode_engine.submit(req)
-        finally:
-            if mover is not None:
-                mover.deregister()
+    @property
+    def is_running(self) -> bool:
+        return self._cluster.is_running
 
     # ------------------------------------------------------------ waiting --
     def wait_until_complete(self, expected: int, timeout: float = 600.0) -> bool:
-        return self.decode_engine.wait_until_complete(expected, timeout=timeout)
+        return self._cluster.wait_until_complete(expected, timeout=timeout)
 
     @property
     def finished(self) -> List[Request]:
-        return self.decode_engine.finished
+        return self._cluster.finished
+
+    @property
+    def step_log(self):
+        return self._cluster.step_log
+
+    @property
+    def engines(self):
+        return self._cluster.engines
+
+    @property
+    def router(self):
+        return self._cluster.router

@@ -10,14 +10,26 @@ claim — no re-implementation, mode changes swap only the runner):
 
 Engine-as-Actor: the engine loop's CPU work (scheduling, bookkeeping)
 consumes virtual time at wall rate (Eq. 1); device work is jumped by the
-runner.  When idle, the engine *parks* (deregisters its actors) so the
-benchmark dispatcher alone drives virtual time; ``submit`` unparks it.
+runner.  When idle, the engine *parks* (its actors leave the Timekeeper
+barrier but stay known) so the benchmark dispatcher alone drives virtual
+time; ``submit`` unparks it.
+
+Replica surface: the engine is one replica of a (possibly N-replica)
+deployment — ``repro.cluster.Cluster`` parks many of these on a single
+shared VirtualClock.  The non-blocking intake/outtake surface the cluster
+builds on: ``submit``/``submit_many`` enqueue without blocking, ``poll``
+drains completions incrementally, and ``outstanding_tokens`` /
+``prefix_match_len`` / ``stats`` are cheap racy-read probes the Router
+policies use to place requests without ever stalling the engine loop.
 
 Fault tolerance: ``snapshot()``/``restore()`` serialise the complete
 control-plane state (queues, block tables, radix tree, request progress,
 virtual-clock offset) so an emulation can checkpoint/restart across process
 failures — requests in flight resume exactly (emulated modes; real mode
-would also need device state).  See tests/test_fault_tolerance.py.
+would also need device state).  ``snapshot()`` synchronises with the step
+loop (``_state_lock``) so it always observes a between-steps state — never
+a torn mid-step one — making restore deterministic even while submits keep
+arriving.  See tests/test_fault_tolerance.py.
 """
 
 from __future__ import annotations
@@ -70,12 +82,20 @@ class LLMEngine:
         self.scheduler = Scheduler(cfg, self.bm, self.prefix_cache)
         self._inbox: List[Request] = []
         self._lock = threading.Lock()
+        # Serialises step() (and the loop's scheduler intake) against
+        # snapshot(): a snapshot can only observe between-steps state.
+        self._state_lock = threading.RLock()
         self._wake = threading.Event()
         self._stop = threading.Event()
         self._idle = threading.Event()
         self.finished: List[Request] = []
         self.step_log: List[StepRecord] = []
         self._finish_cond = threading.Condition()
+        self._poll_cursor = 0
+        # Live set for lock-free load probes (router placement hints):
+        # request_id -> Request, maintained by submit/step under _live_lock.
+        self._live: Dict[int, Request] = {}
+        self._live_lock = threading.Lock()
         self._thread: Optional[threading.Thread] = None
         # Called in the engine thread, synchronously with completion —
         # BEFORE the engine's next barrier participation.  PD disaggregation
@@ -92,16 +112,80 @@ class LLMEngine:
         the dispatcher's next TIMEJUMP cannot resolve a barrier without them
         (that race would skip virtual time over the request's processing and
         corrupt TTFT — see tests/test_system.py fidelity tests)."""
+        # _live insert precedes inbox visibility: the engine loop may finish
+        # the request (and pop it) any time after the append, and a pop
+        # racing ahead of the insert would leave a permanently stale entry
+        # inflating this replica's load probes.
+        with self._live_lock:
+            self._live[req.request_id] = req
         with self._lock:
             self._inbox.append(req)
             self.runner.unpark()
         self._wake.set()
 
     def submit_many(self, reqs: List[Request]) -> None:
+        with self._live_lock:
+            for req in reqs:
+                self._live[req.request_id] = req
         with self._lock:
             self._inbox.extend(reqs)
             self.runner.unpark()
         self._wake.set()
+
+    # ----------------------------------------------------- replica probes --
+    def poll(self) -> List[Request]:
+        """Drain completions that finished since the previous ``poll`` call.
+
+        Non-blocking Observer surface for external consumers (serving
+        front-ends, incremental metric collectors); the in-process Cluster
+        aggregates through ``on_finish`` callbacks instead, which fire
+        synchronously in the step thread before the next barrier round."""
+        with self._finish_cond:
+            new = self.finished[self._poll_cursor:]
+            self._poll_cursor = len(self.finished)
+        return list(new)
+
+    def num_outstanding(self) -> int:
+        """Requests submitted but not yet finished (racy read, routing hint)."""
+        with self._live_lock:
+            return len(self._live)
+
+    def outstanding_tokens(self) -> int:
+        """Remaining scheduled work in tokens (prefill left + decode left).
+
+        A racy best-effort read over the live set — field reads are atomic
+        ints, so the estimate is never torn, just possibly a step stale.
+        Routers use it for least-loaded placement; it must never block on
+        the step loop (the dispatcher probes it between time jumps)."""
+        with self._live_lock:
+            live = list(self._live.values())
+        total = 0
+        for r in live:
+            total += max(r.prompt_len - r.num_prefilled, 0)
+            total += max(r.max_new_tokens - r.num_generated, 0)
+        return total
+
+    def prefix_match_len(self, tokens) -> int:
+        """Longest radix-cached prefix (tokens) this replica already holds.
+
+        Read-only probe (no stats, no pins, no LRU touch) so routers can
+        score prefix affinity without perturbing cache behaviour."""
+        return self.prefix_cache.probe(tokens)
+
+    def stats(self) -> dict:
+        """Cheap per-replica counters; the cluster aggregates these."""
+        pc = self.prefix_cache.stats
+        return {
+            "name": self.name,
+            "finished": len(self.finished),
+            "outstanding_reqs": self.num_outstanding(),
+            "outstanding_tokens": self.outstanding_tokens(),
+            "steps": len(self.step_log),
+            "device_time_s": sum(s.device_time for s in self.step_log),
+            "cpu_overhead_s": sum(s.cpu_overhead_wall for s in self.step_log),
+            "num_preemptions": self.scheduler.num_preemptions,
+            "prefix_hit_rate": pc.hit_rate,
+        }
 
     # -------------------------------------------------------------- loop --
     def start(self) -> "LLMEngine":
@@ -117,13 +201,21 @@ class LLMEngine:
             self._thread.join(timeout=30)
         self.runner.shutdown()
 
+    @property
+    def is_running(self) -> bool:
+        return self._thread is not None and self._thread.is_alive()
+
     def run_loop(self) -> None:
         while not self._stop.is_set():
-            with self._lock:
-                new = self._inbox
-                self._inbox = []
-            for req in new:
-                self.scheduler.add_request(req)
+            # Drain + scheduler-add under one _state_lock acquisition: a
+            # snapshot() between the two would otherwise catch the drained
+            # requests in neither inbox nor scheduler and silently lose them.
+            with self._state_lock:
+                with self._lock:
+                    new = self._inbox
+                    self._inbox = []
+                for req in new:
+                    self.scheduler.add_request(req)
 
             if not self.scheduler.has_work():
                 # Park: deregister actors so we never wedge the Timekeeper
@@ -149,6 +241,10 @@ class LLMEngine:
 
     def step(self) -> List[Request]:
         """One engine iteration: schedule -> execute -> bookkeep."""
+        with self._state_lock:
+            return self._step_locked()
+
+    def _step_locked(self) -> List[Request]:
         cpu_t0 = time.monotonic()
         t_start = self.clock.now()
         out = self.scheduler.schedule(t_start)
@@ -175,6 +271,9 @@ class LLMEngine:
             if release:
                 release(req.request_id)
         if finished:
+            with self._live_lock:
+                for req in finished:
+                    self._live.pop(req.request_id, None)
             if self.on_finish is not None:
                 self.on_finish(finished)
             with self._finish_cond:
@@ -208,16 +307,21 @@ class LLMEngine:
     def snapshot(self) -> bytes:
         """Serialise the full control-plane state (emulated modes).
 
-        Captured mid-run between steps; restoring into a fresh engine resumes
-        every in-flight request (running requests are re-queued for
-        recompute, mirroring a real node-failure restart where device state
-        is lost but the request log survives)."""
-        with self._lock:
+        ``_state_lock`` is taken first, so the capture always lands *between*
+        steps even while the engine thread is running and submits keep
+        arriving through the non-blocking intake — a snapshot can never
+        observe a torn mid-step state (half-applied ``on_step_complete``,
+        requests in ``running`` with in-flight chunks).  Restoring into a
+        fresh engine resumes every in-flight request (running requests are
+        re-queued for recompute, mirroring a real node-failure restart where
+        device state is lost but the request log survives)."""
+        with self._state_lock, self._lock:
             state = {
                 "cfg": self.cfg,
                 "clock_offset": self.clock.offset,
                 "waiting": list(self.scheduler.waiting),
                 "running": list(self.scheduler.running),
+                "num_preemptions": self.scheduler.num_preemptions,
                 "inbox": list(self._inbox),
                 "finished": list(self.finished),
                 "step_log": list(self.step_log),
@@ -231,14 +335,23 @@ class LLMEngine:
         eng = LLMEngine(state["cfg"], runner, clock, name=name)
         clock.advance_to(clock.wall.time() + state["clock_offset"])
         # Device KV state died with the failure: running requests are
-        # re-queued for recompute-from-scratch (idempotent replay).
+        # re-queued for recompute-from-scratch (idempotent replay).  Queue
+        # order is deterministic: running requests (earliest-admitted, FCFS)
+        # re-enter ahead of the waiting backlog, and the waiting deque's own
+        # order — including preempted requests parked at its front — is
+        # preserved verbatim.
         for req in state["running"]:
             req.reset_for_recompute()
             req.state = RequestState.WAITING
             eng.scheduler.waiting.append(req)
         for req in state["waiting"]:
             eng.scheduler.waiting.append(req)
+        eng.scheduler.num_preemptions = state.get("num_preemptions", 0)
         eng._inbox = list(state["inbox"])
         eng.finished = list(state["finished"])
         eng.step_log = list(state["step_log"])
+        eng._poll_cursor = len(eng.finished)
+        with eng._live_lock:
+            for req in (state["running"] + state["waiting"] + state["inbox"]):
+                eng._live[req.request_id] = req
         return eng

@@ -111,13 +111,13 @@ class TimeWarpModelRunner:
         if self.workers is not None:
             self.workers.park()
         elif self.client is not None:
-            self.client.deregister()
+            self.client.park()
 
     def unpark(self) -> None:
         if self.workers is not None:
             self.workers.unpark()
         elif self.client is not None:
-            self.client.register()
+            self.client.unpark()
 
     def shutdown(self) -> None:
         self.park()

@@ -119,6 +119,24 @@ class RadixPrefixCache:
         self.stats.hit_tokens += len(blocks) * self.block_size + host_tokens
         return blocks, len(blocks) * self.block_size, host_tokens
 
+    def probe(self, tokens: Sequence[int]) -> int:
+        """Read-only longest-prefix probe: returns the number of device-tier
+        cached tokens without touching stats, LRU timestamps, pins, or the
+        host tier.  Safe to call concurrently with engine mutation (chunk
+        lookups are dict ``get``s under the GIL); routers use it to score
+        prefix affinity without perturbing cache behaviour."""
+        if not self.enable:
+            return 0
+        node = self.root
+        n_tokens = 0
+        for chunk in self._chunks(tokens):
+            child = node.children.get(chunk)
+            if child is None or child.block_id is None:
+                break
+            node = child
+            n_tokens += self.block_size
+        return n_tokens
+
     # -------------------------------------------------------------- insert --
     def insert(self, tokens: Sequence[int], block_ids: Sequence[int],
                now: float) -> None:

@@ -1,0 +1,113 @@
+"""Minimal stand-in for ``hypothesis`` when the real package is absent.
+
+The property tests in this suite use a small, fixed subset of the hypothesis
+API: ``@settings(max_examples=..., deadline=...)``, ``@given(...)`` with
+either all-positional or all-keyword strategies, and the ``integers`` /
+``floats`` / ``sampled_from`` / ``lists`` / ``tuples`` strategies.  This
+module provides deterministic, seeded replacements: each ``@given`` test is
+run against a fixed number of pseudo-random samples drawn from the declared
+strategies.  It is *not* a property-testing engine (no shrinking, no coverage
+guidance) — install ``hypothesis`` (see requirements-dev.txt) for the real
+thing.  Usage in a test module::
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:                       # optional dev dependency
+        from _hypothesis_compat import given, settings, st
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+
+_DEFAULT_EXAMPLES = 10  # per-test cap when no @settings is applied
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example(self, rng: random.Random):
+        return self._draw(rng)
+
+
+class _StrategiesModule:
+    """Namespace mimicking ``hypothesis.strategies``."""
+
+    @staticmethod
+    def integers(min_value=0, max_value=1 << 16):
+        return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+    @staticmethod
+    def floats(min_value=0.0, max_value=1.0, **_kw):
+        return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+    @staticmethod
+    def booleans():
+        return _Strategy(lambda rng: rng.random() < 0.5)
+
+    @staticmethod
+    def sampled_from(elements):
+        seq = list(elements)
+        return _Strategy(lambda rng: rng.choice(seq))
+
+    @staticmethod
+    def lists(elements, min_size=0, max_size=10):
+        def draw(rng):
+            n = rng.randint(min_size, max_size)
+            return [elements.example(rng) for _ in range(n)]
+        return _Strategy(draw)
+
+    @staticmethod
+    def tuples(*elements):
+        return _Strategy(lambda rng: tuple(e.example(rng) for e in elements))
+
+    @staticmethod
+    def just(value):
+        return _Strategy(lambda rng: value)
+
+
+st = _StrategiesModule()
+
+
+def settings(max_examples=_DEFAULT_EXAMPLES, deadline=None, **_kw):
+    """Record ``max_examples`` for a subsequent (or prior) @given."""
+
+    def deco(fn):
+        # @settings may wrap either the raw test or the @given-wrapped one;
+        # stash the knob where _run_examples can find it either way.
+        target = getattr(fn, "__wrapped_test__", fn)
+        target.__compat_max_examples__ = max_examples
+        return fn
+
+    return deco
+
+
+def given(*arg_strategies, **kw_strategies):
+    def deco(fn):
+        @functools.wraps(fn)
+        def runner(*fixture_args, **fixture_kw):
+            n = getattr(runner, "__compat_max_examples__",
+                        getattr(fn, "__compat_max_examples__",
+                                _DEFAULT_EXAMPLES))
+            n = min(n, _DEFAULT_EXAMPLES)
+            rng = random.Random(f"{fn.__module__}.{fn.__qualname__}")
+            for _ in range(n):
+                drawn_args = tuple(s.example(rng) for s in arg_strategies)
+                drawn_kw = {k: s.example(rng)
+                            for k, s in kw_strategies.items()}
+                fn(*fixture_args, *drawn_args, **fixture_kw, **drawn_kw)
+
+        runner.__wrapped_test__ = fn
+        # Hide strategy-drawn parameters from pytest's fixture resolution:
+        # expose only the params *not* supplied by a strategy.
+        sig = inspect.signature(fn)
+        params = list(sig.parameters.values())[len(arg_strategies):]
+        params = [p for p in params if p.name not in kw_strategies]
+        runner.__signature__ = sig.replace(parameters=params)
+        del runner.__wrapped__  # set by functools.wraps; re-leaks the sig
+        return runner
+
+    return deco

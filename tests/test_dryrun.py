@@ -15,7 +15,10 @@ def test_dryrun_cell_subprocess(tmp_path):
          "--arch", "whisper_base", "--shape", "decode_32k",
          "--out", str(out)],
         capture_output=True, text=True, timeout=570,
-        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "HOME": "/root"})
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "HOME": "/root",
+             # force CPU: an installed libtpu would probe cloud instance
+             # metadata over the network (slow retries) before falling back
+             "JAX_PLATFORMS": "cpu"})
     assert proc.returncode == 0, proc.stderr[-3000:]
     rec = json.loads(out.read_text().splitlines()[0])
     assert rec["mesh"] == "16x16" and rec["chips"] == 256

@@ -52,6 +52,11 @@ def test_moe_a2a_matches_ragged():
     proc = subprocess.run(
         [sys.executable, "-c", SCRIPT], capture_output=True, text=True,
         timeout=300, env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
-                          "HOME": "/root"})
+                          "HOME": "/root",
+                          # force CPU: without this, an installed libtpu
+                          # probes cloud instance metadata over the network
+                          # (30 slow retries) before falling back — a
+                          # multi-minute flaky hang in the sanitised env
+                          "JAX_PLATFORMS": "cpu"})
     assert proc.returncode == 0, proc.stderr[-3000:]
     assert "MOE_A2A_OK" in proc.stdout

@@ -1,7 +1,10 @@
 """Runtime predictors: analytical model sanity, table fitting, collectives."""
 
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                              # optional dev dependency
+    from _hypothesis_compat import given, settings, st
 
 from repro.configs import get_config
 from repro.core.hardware import H100, TPU_V5E

@@ -4,7 +4,10 @@ engine relies on (refcount conservation, no phantom blocks, policy split).
 """
 
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                              # optional dev dependency
+    from _hypothesis_compat import given, settings, st
 
 from repro.serving.kv_cache import BlockManager, OutOfBlocksError
 from repro.serving.prefix_cache import RadixPrefixCache
