@@ -76,6 +76,8 @@ def analyze(rec: dict) -> dict:
 
 
 def rows(path: Path = DEFAULT_IN, mesh: str | None = "16x16") -> list:
+    if not Path(path).exists():
+        return []                      # no dryrun artifacts on this machine
     recs = [json.loads(l) for l in open(path)]
     # keep the LATEST record per (arch, shape, mesh, opts): perf iterations
     # append; baseline and optimized lowerings coexist as separate rows

@@ -2,7 +2,14 @@
 
     PYTHONPATH=src python -m benchmarks.run            # full suite
     PYTHONPATH=src python -m benchmarks.run --quick    # reduced sizes
+    PYTHONPATH=src python -m benchmarks.run --smoke    # tiny sizes (CI)
     PYTHONPATH=src python -m benchmarks.run --only fig3,roofline
+
+``--smoke`` exists so CI can execute every figure script end-to-end (imports,
+plumbing, derived-metric assertions) in a few minutes: request counts are
+tiny, so the *numbers* are not publication-grade, but a figure script that
+rots (API drift, broken assertion, stale import) fails the job instead of
+failing the next person who needs the figure.
 
 Prints a ``name,us_per_call,derived`` CSV summary at the end: ``us_per_call``
 is the benchmark's own wall time in microseconds (what one evaluation of that
@@ -17,56 +24,74 @@ import time
 import traceback
 
 
-def _fig3(quick):
+def _n(mode: str, full: int, quick: int, smoke: int) -> int:
+    return {"full": full, "quick": quick, "smoke": smoke}[mode]
+
+
+def _fig3(mode):
     from benchmarks import fig3_cpu_gpu_split as m
-    rows = m.main(n=40 if quick else 100)
+    rows = m.main(n=_n(mode, 100, 40, 12))
     return f"min_gpu_frac={min(r['gpu_frac'] for r in rows):.4f}"
 
 
-def _fig6(quick):
+def _fig6(mode):
     from benchmarks import fig6_accuracy as m
-    rows = m.main(n=16 if quick else 30)
+    rows = m.main(n=_n(mode, 30, 16, 6))
     worst = max(r["ttft_p50_err"] for r in rows)
     floor = max(r["real_noise_floor"] for r in rows)
     return f"worst_ttft_p50_err={worst:.4f},noise_floor={floor:.4f}"
 
 
-def _fig7(quick):
+def _fig7(mode):
     from benchmarks import fig7_speedup as m
-    rows = m.main(n=30 if quick else 60)
+    rows = m.main(n=_n(mode, 60, 30, 10))
     return (f"speedup={min(r['speedup_x'] for r in rows)}-"
             f"{max(r['speedup_x'] for r in rows)}x")
 
 
-def _fig8(quick):
+def _fig8(mode):
     from benchmarks import fig8_batch_duration as m
-    rows = m.main(n=30 if quick else 50)
+    rows = m.main(n=_n(mode, 50, 30, 10))
     return (f"max_speedup={max(r['speedup_x'] for r in rows)}x,"
             f"worst_err={max(r['ttft_p50_err'] for r in rows):.4f}")
 
 
-def _fig9(quick):
+def _fig9(mode):
     from benchmarks import fig9_arrival_rate as m
-    rows = m.main(n=24 if quick else 40)
+    rows = m.main(n=_n(mode, 40, 24, 10))
     return f"worst_ttft_p50_err={max(r['ttft_p50_err'] for r in rows):.4f}"
 
 
-def _cluster(quick):
+def _cluster(mode):
     from benchmarks import fig_cluster_scaling as m
-    rows = m.main(n=24 if quick else 40)
+    rows = m.main(n=_n(mode, 40, 24, 10))
     parity = rows[-1]
     best = max((r for r in rows[:-1]), key=lambda r: r.get("goodput_rps", 0))
     return (f"max_goodput_rps={best['goodput_rps']}@{best['replicas']}r/"
             f"{best['policy']},des_parity_err={parity['max_err_steps']}steps")
 
 
-def _table1(quick):
+def _autoscale(mode):
+    from benchmarks import fig_autoscale as m
+    rows = m.main(n=_n(mode, 16, 10, 6))
+    parity = rows[-1]
+    # matched (cv2, slo) cell pair — same comparison fig_autoscale asserts on
+    cv2, slo = m.BURSTINESS[-1], m.SLOS[-1]
+    cell = {r["policy"]: r for r in rows[:-1]
+            if r["cv2"] == cv2 and r["slo_ttft_s"] == slo}
+    save = 1 - (cell["ttft_slo"]["replica_seconds"]
+                / cell["fixed"]["replica_seconds"])
+    return (f"ttft_slo_saves={save:.0%}_replica_seconds@cv2={cv2},"
+            f"elastic_parity_err={parity['max_err_steps']}steps")
+
+
+def _table1(mode):
     from benchmarks import table1_features as m
     rows = m.main()
     return f"features_ok={sum(1 for r in rows if r['supported'])}/{len(rows)}"
 
 
-def _roofline(quick):
+def _roofline(mode):
     from benchmarks import roofline as m
     rows = m.rows()
     if not rows:
@@ -88,6 +113,7 @@ SUITES = [
     ("fig8_batch_duration", _fig8),
     ("fig9_arrival_rate", _fig9),
     ("fig_cluster_scaling", _cluster),
+    ("fig_autoscale", _autoscale),
     ("table1_features", _table1),
     ("roofline", _roofline),
 ]
@@ -96,9 +122,12 @@ SUITES = [
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny request counts: CI rot-check, not results")
     ap.add_argument("--only", default="",
                     help="comma-separated suite substrings")
     args = ap.parse_args()
+    mode = "smoke" if args.smoke else ("quick" if args.quick else "full")
     only = [s for s in args.only.split(",") if s]
 
     results = []
@@ -109,7 +138,7 @@ def main() -> None:
         print(f"\n=== {name} " + "=" * max(0, 60 - len(name)))
         t0 = time.time()
         try:
-            derived = fn(args.quick)
+            derived = fn(mode)
         except Exception as e:  # noqa: BLE001
             traceback.print_exc()
             failed.append(name)

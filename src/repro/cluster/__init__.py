@@ -1,13 +1,19 @@
-"""Multi-replica cluster emulation layer (data-parallel serving, PD pools).
+"""Multi-replica cluster emulation layer (data-parallel serving, PD pools,
+elastic membership + SLO-driven autoscaling).
 
 Public surface::
 
     from repro.cluster import Cluster, build_cluster, make_router
+    from repro.cluster import Autoscaler, make_autoscaler_policy
 
-See ``cluster.py`` for the replica/timeline architecture and ``router.py``
-for the pluggable routing policies.
+See ``cluster.py`` for the replica/timeline architecture, ``router.py`` for
+the pluggable routing policies, and ``autoscaler.py`` for the virtual-time
+scaling control loop.
 """
 
+from .autoscaler import (AUTOSCALER_POLICIES, Autoscaler, AutoscalerConfig,
+                         AutoscalerPolicy, QueueDepthPolicy, SchedulePolicy,
+                         TTFTSLOPolicy, make_autoscaler_policy)
 from .cluster import Cluster, ClusterConfig, build_cluster
 from .router import (LeastOutstandingTokensRouter, PDPoolRouter,
                      PrefixAffinityRouter, ReplicaView, RoundRobinRouter,
@@ -25,4 +31,12 @@ __all__ = [
     "PDPoolRouter",
     "ROUTER_POLICIES",
     "make_router",
+    "Autoscaler",
+    "AutoscalerConfig",
+    "AutoscalerPolicy",
+    "QueueDepthPolicy",
+    "TTFTSLOPolicy",
+    "SchedulePolicy",
+    "AUTOSCALER_POLICIES",
+    "make_autoscaler_policy",
 ]

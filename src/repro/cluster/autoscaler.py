@@ -1,0 +1,347 @@
+"""SLO-driven autoscaling over the elastic cluster membership.
+
+The :class:`Autoscaler` is an **Actor** on the shared virtual timeline: it
+jumps from tick to tick (``interval_s`` of *virtual* time), evaluates a
+pluggable :class:`AutoscalerPolicy` against a cheap cluster view, and applies
+the decision through :meth:`Cluster.add_replica` /
+:meth:`Cluster.drain_replica`.  Scale-up is not instantaneous: each new
+replica is brought up by a *provisioner* actor that first jumps
+``provision_delay_s`` of virtual time (node allocation + weight loading,
+modeled, not slept) and only then joins the routing set.  Scale-down picks
+the highest-index active replica — a pure membership rule, deliberately free
+of racy load reads, so the emulator and the DES baseline drain the *same*
+replica under the same policy decisions (parity under elasticity).
+
+Policies see replicas only through the small :class:`AutoscalerView`
+protocol, so identical policy objects drive the emulator's real engines and
+the DES baseline's event-loop replicas — extending the paper's §2.3
+"same control code everywhere" argument to the scaling control loop.
+"""
+
+from __future__ import annotations
+
+import itertools
+import threading
+from dataclasses import dataclass
+from typing import List, Optional, Protocol, Sequence, Tuple
+
+from repro.core.client import TimeJumpClient
+
+__all__ = [
+    "AutoscalerConfig",
+    "AutoscalerView",
+    "AutoscalerPolicy",
+    "QueueDepthPolicy",
+    "TTFTSLOPolicy",
+    "SchedulePolicy",
+    "AUTOSCALER_POLICIES",
+    "make_autoscaler_policy",
+    "Autoscaler",
+]
+
+
+@dataclass(frozen=True)
+class AutoscalerConfig:
+    interval_s: float = 0.25          # virtual seconds between policy ticks
+    provision_delay_s: float = 1.0    # scale-up latency (virtual-time jump)
+    min_replicas: int = 1
+    max_replicas: int = 8
+
+
+class AutoscalerView(Protocol):
+    """What a policy may observe.  Implementations are racy, non-blocking
+    reads (emulator: engine counters; DES: event-loop state)."""
+
+    def now(self) -> float: ...
+
+    def active_count(self) -> int: ...
+
+    def queue_depths(self) -> List[int]:
+        """Outstanding (submitted-but-unfinished) requests per active replica."""
+        ...
+
+    def recent_ttfts(self, window_s: float) -> List[float]:
+        """TTFTs of requests that finished within the trailing window."""
+        ...
+
+
+class AutoscalerPolicy:
+    """Maps a view to a desired replica delta (+k up, -k down, 0 hold).
+
+    Policies are stateful (tick history); build a fresh one per run — same
+    convention as Router objects.
+    """
+
+    name = "?"
+
+    def decide(self, view: AutoscalerView) -> int:
+        raise NotImplementedError
+
+
+class QueueDepthPolicy(AutoscalerPolicy):
+    """Classic queue-depth target: scale up when the mean per-replica backlog
+    exceeds ``target_depth`` requests, down when it falls below
+    ``low_watermark`` (hysteresis gap avoids flapping)."""
+
+    name = "queue_depth"
+
+    def __init__(self, target_depth: float = 4.0, low_watermark: float = 1.0):
+        assert low_watermark < target_depth
+        self.target_depth = target_depth
+        self.low_watermark = low_watermark
+
+    def decide(self, view: AutoscalerView) -> int:
+        depths = view.queue_depths()
+        if not depths:
+            return 0
+        mean = sum(depths) / len(depths)
+        if mean > self.target_depth:
+            return 1
+        if mean < self.low_watermark:
+            return -1
+        return 0
+
+
+class TTFTSLOPolicy(AutoscalerPolicy):
+    """SLO-attainment feedback: scale up while the trailing window's TTFT
+    attainment sits below ``target_attainment``; scale down only when
+    attainment is met AND the backlog is nearly empty (capacity is provably
+    surplus, so shrinking cannot immediately re-breach the SLO)."""
+
+    name = "ttft_slo"
+
+    def __init__(self, slo_ttft_s: float = 0.5,
+                 target_attainment: float = 0.95,
+                 window_s: float = 2.0,
+                 idle_depth: float = 0.5):
+        self.slo_ttft_s = slo_ttft_s
+        self.target_attainment = target_attainment
+        self.window_s = window_s
+        self.idle_depth = idle_depth
+
+    def decide(self, view: AutoscalerView) -> int:
+        ttfts = view.recent_ttfts(self.window_s)
+        depths = view.queue_depths()
+        mean_depth = sum(depths) / len(depths) if depths else 0.0
+        if ttfts:
+            attainment = (sum(1 for t in ttfts if t <= self.slo_ttft_s)
+                          / len(ttfts))
+            if attainment < self.target_attainment:
+                return 1
+        if mean_depth < self.idle_depth:
+            return -1
+        return 0
+
+
+class SchedulePolicy(AutoscalerPolicy):
+    """Scripted membership changes: ``events`` is a list of
+    ``(virtual_time, delta)`` pairs applied at the first tick at-or-after
+    each time.  Deterministic by construction — the elastic
+    emulator-vs-DES parity scenarios use it so both sides scale at
+    identical virtual times regardless of load-probe raciness."""
+
+    name = "schedule"
+
+    def __init__(self, events: Sequence[Tuple[float, int]]):
+        self._events = sorted(events)
+        self._cursor = 0
+
+    def decide(self, view: AutoscalerView) -> int:
+        now = view.now()
+        delta = 0
+        while (self._cursor < len(self._events)
+               and self._events[self._cursor][0] <= now):
+            delta += self._events[self._cursor][1]
+            self._cursor += 1
+        return delta
+
+
+AUTOSCALER_POLICIES = {
+    cls.name: cls
+    for cls in (QueueDepthPolicy, TTFTSLOPolicy, SchedulePolicy)
+}
+
+
+def make_autoscaler_policy(name: str, **kwargs) -> AutoscalerPolicy:
+    try:
+        cls = AUTOSCALER_POLICIES[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown autoscaler policy {name!r}; "
+            f"choose from {sorted(AUTOSCALER_POLICIES)}") from None
+    return cls(**kwargs)
+
+
+class _ClusterView:
+    """AutoscalerView over a live emulated Cluster (racy counter reads)."""
+
+    def __init__(self, cluster):
+        self._c = cluster
+
+    def now(self) -> float:
+        return self._c.clock.now()
+
+    def active_count(self) -> int:
+        return self._c.num_active()
+
+    def queue_depths(self) -> List[int]:
+        with self._c._membership_lock:
+            active = list(self._c.active)
+        return [self._c.engines[i].num_outstanding() for i in active]
+
+    def recent_ttfts(self, window_s: float) -> List[float]:
+        horizon = self.now() - window_s
+        out: List[float] = []
+        with self._c._finish_cond:
+            # scan from the tail; finished is finish-ordered per replica and
+            # near-ordered globally, so stop after a safety margin
+            for r in reversed(self._c.finished):
+                if r.finish_time is not None and r.finish_time < horizon:
+                    break
+                t = r.ttft()
+                if t is not None:
+                    out.append(t)
+        return out
+
+
+class Autoscaler:
+    """Virtual-time control loop gluing a policy onto a Cluster.
+
+    Lifecycle mirrors the engines: ``start()`` spawns the tick thread (an
+    Actor when the cluster has a Timekeeper transport; wall-clock ticks
+    otherwise, the sleep-mode degradation), ``stop()`` deregisters it.
+    ``decision_log`` records ``(tick_time, delta_applied, active_after)`` for
+    benchmarks and tests.
+    """
+
+    def __init__(self, cluster, policy: AutoscalerPolicy,
+                 cfg: Optional[AutoscalerConfig] = None, *,
+                 name: str = "autoscaler"):
+        self.cluster = cluster
+        self.policy = policy
+        self.cfg = cfg or AutoscalerConfig()
+        self.name = name
+        self.view: AutoscalerView = _ClusterView(cluster)
+        self.decision_log: List[tuple] = []
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+        self._client: Optional[TimeJumpClient] = None
+        self._provisioning = 0            # scale-ups in flight (delay jump)
+        self._prov_lock = threading.Lock()
+        self._prov_ids = itertools.count()
+        self._prov_threads: List[threading.Thread] = []
+
+    # ---------------------------------------------------------- lifecycle --
+    def start(self) -> "Autoscaler":
+        assert self._thread is None, "autoscaler already started"
+        if self.cluster.transport is not None:
+            self._client = TimeJumpClient(
+                self.cluster.transport, f"{self.name}-tick")
+        self._thread = threading.Thread(
+            target=self._loop, name=f"{self.name}-loop", daemon=True)
+        self._thread.start()
+        return self
+
+    def stop(self) -> None:
+        self._stop.set()
+        # Deregistering the tick actor from here unwedges a thread blocked
+        # mid-jump (the Timekeeper bumps the clock epoch on deregistration);
+        # its next re-request raises KeyError, which the loop treats as stop.
+        if self._client is not None:
+            self._client.deregister()
+        if self._thread is not None:
+            self._thread.join(timeout=10)
+        for t in self._prov_threads:
+            t.join(timeout=10)
+
+    # --------------------------------------------------------------- loop --
+    def _loop(self) -> None:
+        clock = self.cluster.clock
+        next_t = clock.now() + self.cfg.interval_s
+        while not self._stop.is_set():
+            try:
+                if self._client is not None:
+                    self._client.jump_to(next_t)
+                else:
+                    dt = next_t - clock.now()
+                    if dt > 0:
+                        clock.wall.sleep(dt)
+            except (KeyError, RuntimeError):
+                break                     # deregistered / timekeeper closed
+            if self._stop.is_set():
+                break
+            self._tick()
+            next_t += self.cfg.interval_s
+
+    def _tick(self) -> None:
+        delta = self.policy.decide(self.view)
+        applied = self._apply(delta)
+        self.decision_log.append(
+            (self.view.now(), applied, self.cluster.num_active()))
+
+    def _apply(self, delta: int) -> int:
+        cfg = self.cfg
+        with self._prov_lock:
+            committed = self.cluster.num_active() + self._provisioning
+            if delta > 0:
+                delta = min(delta, cfg.max_replicas - committed)
+                for _ in range(max(0, delta)):
+                    self._provisioning += 1
+                    self._spawn_provisioner()
+                return max(0, delta)
+            if delta < 0:
+                # never drain below min, and count in-flight provisions as
+                # capacity already committed
+                allowed = max(0, committed - cfg.min_replicas)
+                delta = -min(-delta, allowed)
+                drained = 0
+                for _ in range(-delta):
+                    victim = self._pick_victim()
+                    if victim is None:
+                        break
+                    self.cluster.drain_replica(victim)
+                    drained += 1
+                return -drained
+        return 0
+
+    def _pick_victim(self) -> Optional[int]:
+        """Highest-index active replica: deterministic, membership-only (no
+        racy load reads), so the DES mirror drains the same replica."""
+        with self.cluster._membership_lock:
+            if len(self.cluster.active) <= 1:
+                return None
+            return max(self.cluster.active)
+
+    def _spawn_provisioner(self) -> None:
+        """Model the scale-up latency as a virtual-time jump.
+
+        The provisioner's actor is registered *here*, in the tick thread —
+        an Actor between jumps — so the barrier cannot advance past the
+        provisioning interval before the jump request lands (§4.3 trick,
+        same as the PD KV movers)."""
+        client = None
+        if self.cluster.transport is not None:
+            client = TimeJumpClient(
+                self.cluster.transport,
+                f"{self.name}-prov-{next(self._prov_ids)}")
+        t = threading.Thread(target=self._provision, args=(client,),
+                             name=f"{self.name}-prov", daemon=True)
+        t.start()
+        self._prov_threads.append(t)
+
+    def _provision(self, client: Optional[TimeJumpClient]) -> None:
+        try:
+            try:
+                if client is not None:
+                    client.time_jump(self.cfg.provision_delay_s)
+                else:
+                    self.cluster.clock.wall.sleep(self.cfg.provision_delay_s)
+            except (KeyError, RuntimeError):
+                return                    # torn down mid-provision
+            if not self._stop.is_set():
+                self.cluster.add_replica()
+        finally:
+            if client is not None:
+                client.deregister()
+            with self._prov_lock:
+                self._provisioning -= 1

@@ -68,7 +68,8 @@ class Cluster:
         transport: Optional[LocalTransport] = None,
         timekeeper: Optional[Timekeeper] = None,
         model_cfg: Optional[ModelConfig] = None,
-        cfg: ClusterConfig = ClusterConfig(),
+        cfg: Optional[ClusterConfig] = None,
+        replica_factory=None,
     ):
         assert engines, "a cluster needs at least one replica"
         assert router.num_replicas == len(engines), \
@@ -82,7 +83,9 @@ class Cluster:
         self.transport = transport
         self.timekeeper = timekeeper
         self.model_cfg = model_cfg
-        self.cfg = cfg
+        # default constructed per-instance: a shared mutable class-level
+        # default would alias config state across all clusters
+        self.cfg = cfg if cfg is not None else ClusterConfig()
         self.clock: VirtualClock = clock
 
         self.finished: List[Request] = []
@@ -90,11 +93,28 @@ class Cluster:
         self._poll_cursor = 0
         self._started = False
 
+        # ---- elastic membership (autoscaling) ----
+        # ``active`` = replicas the router may place fresh requests on.
+        # ``_membership[i]`` records (added_at, drain_started, drained_at)
+        # virtual times; None added_at means "member since cluster start".
+        self._replica_factory = replica_factory
+        self._membership_lock = threading.RLock()
+        self.active: List[int] = list(range(len(self.engines)))
+        self._membership: Dict[int, dict] = {
+            i: {"added": None, "drain_started": None, "drained": None}
+            for i in range(len(self.engines))
+        }
+        self._draining: Dict[int, set] = {}   # idx -> in-flight request ids
+        self._submit_lock = threading.Lock()  # serialises route+submit
+        # Completion subscribers (closed-loop workloads, autoscaler views);
+        # called synchronously in the finishing replica's step thread.
+        self.completion_listeners: List = []
+
         self._pd = isinstance(router, PDPoolRouter)
         if self._pd:
             assert model_cfg is not None, \
                 "pd_pool routing needs model_cfg for KV-transfer sizing"
-            self.channel = EmulatedChannel(cfg.kv_link_bandwidth,
+            self.channel = EmulatedChannel(self.cfg.kv_link_bandwidth,
                                            name="kv-transfer")
             self._mover_ids = itertools.count()
             self._movers: List[threading.Thread] = []
@@ -111,24 +131,42 @@ class Cluster:
         """Route and enqueue one request; returns the chosen replica index.
 
         Non-blocking: routing reads racy load/affinity probes, the engine
-        submit is a queue append + synchronous unpark.  Called by the
-        benchmark dispatcher (an Actor) between its time jumps."""
+        submit is a queue append + synchronous unpark.  Callers may be the
+        benchmark dispatcher *and* closed-loop think-time actors, so the
+        route+enqueue pair is serialised (router state is not thread-safe)."""
         if self._pd:
             req._disagg_total_new = req.max_new_tokens      # stash for decode
             req.max_new_tokens = 1
-        idx = self.router.route(req, self.engines)
-        self.engines[idx].submit(req)
+        with self._submit_lock:
+            idx = self.router.route(req, self.engines, active=self.active)
+            self.engines[idx].submit(req)
         return idx
 
     def submit_many(self, reqs: Sequence[Request]) -> List[int]:
         return [self.submit(r) for r in reqs]
 
     # -------------------------------------------------------------- hooks --
+    def add_completion_listener(self, fn) -> None:
+        """Subscribe ``fn(finished: List[Request])``; runs in the finishing
+        replica's step thread BEFORE its next barrier participation — safe to
+        register think-time actors from (closed-loop session re-injection)."""
+        self.completion_listeners.append(fn)
+
+    def remove_completion_listener(self, fn) -> None:
+        if fn in self.completion_listeners:
+            self.completion_listeners.remove(fn)
+
     def _complete(self, finished: List[Request]) -> None:
         """Runs in a replica's step thread, synchronously with completion."""
         with self._finish_cond:
             self.finished.extend(finished)
             self._finish_cond.notify_all()
+        # Unconditional (serialised on _membership_lock inside): an unlocked
+        # emptiness pre-check here could race drain_replica's in-flight
+        # snapshot and leave a drain that never finalises.
+        self._drain_progress(finished)
+        for fn in list(self.completion_listeners):
+            fn(finished)
 
     def _pd_handoff(self, finished: List[Request]) -> None:
         """Prefill completed: emulate the KV migration, then place the
@@ -168,11 +206,109 @@ class Cluster:
             req.state = RequestState.WAITING
             req.finish_time = None
             req.kv_migrated = True
-            idx = self.router.route_decode(req, self.engines)
-            self.engines[idx].submit(req)
+            with self._submit_lock:
+                idx = self.router.route_decode(req, self.engines,
+                                               active=self.active)
+                self.engines[idx].submit(req)
         finally:
             if mover is not None:
                 mover.deregister()
+
+    # --------------------------------------------------- elastic membership --
+    def add_replica(self, engine: Optional[LLMEngine] = None) -> int:
+        """Scale up: join a new replica to the routing set.
+
+        ``engine`` defaults to one built by the cluster's replica factory
+        (``build_cluster`` wires one that clones the last replica's config
+        onto the shared Timekeeper/transport).  The join is immediate —
+        provisioning delay is the *caller's* job (the Autoscaler models it as
+        a virtual-time jump before calling this).  Returns the new index.
+        """
+        assert not self._pd, "elastic membership is not supported for pd_pool"
+        with self._submit_lock, self._membership_lock:
+            idx = len(self.engines)
+            if engine is None:
+                assert self._replica_factory is not None, \
+                    "no replica factory: pass an engine explicitly"
+                engine = self._replica_factory(idx)
+            assert engine.clock is self.clock, \
+                "new replica must share the cluster's clock"
+            engine.on_finish = self._complete
+            self.engines.append(engine)
+            self.router.grow(idx + 1)
+            self.active.append(idx)
+            self._membership[idx] = {"added": self.clock.now(),
+                                     "drain_started": None, "drained": None}
+            if self._started:
+                engine.start()
+            return idx
+
+    def drain_replica(self, idx: int) -> None:
+        """Scale down: stop routing to replica ``idx``, let its in-flight
+        requests finish, then park + deregister it.  The replica's engine
+        thread keeps running (parked actors cost nothing on the barrier);
+        ``stop()`` reaps it with the rest of the cluster."""
+        assert not self._pd, "elastic membership is not supported for pd_pool"
+        # _submit_lock first: a concurrent submit must either fully enqueue
+        # (and show up in the in-flight snapshot) or route after the removal.
+        with self._submit_lock, self._membership_lock:
+            if idx not in self.active:
+                raise ValueError(f"replica {idx} is not active")
+            assert len(self.active) > 1, "cannot drain the last replica"
+            self.active.remove(idx)
+            self._membership[idx]["drain_started"] = self.clock.now()
+            engine = self.engines[idx]
+            with engine._live_lock:
+                in_flight = set(engine._live)
+            if in_flight:
+                self._draining[idx] = in_flight
+            else:
+                self._finalize_drain(idx)
+
+    def _drain_progress(self, finished: List[Request]) -> None:
+        """Called from ``_complete`` (a step thread) while drains are open."""
+        done_ids = {r.request_id for r in finished}
+        with self._membership_lock:
+            for idx in list(self._draining):
+                self._draining[idx] -= done_ids
+                if not self._draining[idx]:
+                    del self._draining[idx]
+                    self._finalize_drain(idx)
+
+    def _finalize_drain(self, idx: int) -> None:
+        """In-flight work done: stamp the membership end and deregister the
+        replica's worker actor so the Timekeeper forgets it entirely (it
+        would otherwise merely park).  Caller holds ``_membership_lock``."""
+        self._membership[idx]["drained"] = self.clock.now()
+        client = getattr(self.engines[idx].runner, "client", None)
+        if client is not None:
+            client.deregister()
+
+    def num_active(self) -> int:
+        with self._membership_lock:
+            return len(self.active)
+
+    def replica_seconds(self, t_start: float, t_end: float) -> float:
+        """Cost proxy: total replica-on time (virtual seconds) overlapping
+        the window [t_start, t_end].  A drained replica stops accruing at the
+        finish of its last in-flight request; an added one starts accruing at
+        its (post-provisioning-delay) join time."""
+        with self._membership_lock:
+            total = 0.0
+            for idx in range(len(self.engines)):
+                m = self._membership[idx]
+                a = t_start if m["added"] is None else max(t_start, m["added"])
+                drained = m["drained"]
+                if drained is None and idx in self._draining:
+                    drained = t_end      # still draining at window end
+                b = t_end if drained is None else min(t_end, drained)
+                total += max(0.0, b - a)
+            return total
+
+    def membership_events(self) -> List[dict]:
+        with self._membership_lock:
+            return [{"replica": i, **dict(self._membership[i])}
+                    for i in sorted(self._membership)]
 
     # ---------------------------------------------------------- lifecycle --
     def start(self) -> "Cluster":
@@ -237,6 +373,8 @@ class Cluster:
         per_replica = [e.stats() for e in self.engines]
         agg = {
             "num_replicas": len(self.engines),
+            "num_active": self.num_active(),
+            "membership": self.membership_events(),
             "policy": getattr(self.router, "policy", "?"),
             "finished": len(self.finished),
             "steps": sum(r["steps"] for r in per_replica),
@@ -302,8 +440,11 @@ def build_cluster(
     if mode == "emulate":
         tk = Timekeeper(clock=VirtualClock(wall), jitter_cooldown=jitter_cooldown)
         transport = LocalTransport(tk)
-        engines = []
-        for i, cfg in enumerate(cfgs):
+
+        def make_engine(i: int) -> LLMEngine:
+            # autoscale-added replicas (i >= num_replicas) clone the last
+            # declared config
+            cfg = cfgs[min(i, len(cfgs) - 1)]
             pred = predictor or default_predictor(model_cfg, cfg)
             chip = get_chip(cfg.chip)
             n_dev = cfg.tp * cfg.pp
@@ -315,20 +456,26 @@ def build_cluster(
             runner = TimeWarpModelRunner(
                 pred, client, devices=devices,
                 weight_bytes=weights, kv_pool_bytes=kv_pool)
-            engines.append(LLMEngine(cfg, runner, tk.clock,
-                                     name=f"{name}-r{i}"))
+            return LLMEngine(cfg, runner, tk.clock, name=f"{name}-r{i}")
+
+        engines = [make_engine(i) for i in range(num_replicas)]
         return Cluster(engines, router, transport=transport, timekeeper=tk,
                        model_cfg=model_cfg,
-                       cfg=ClusterConfig(kv_link_bandwidth=kv_link_bandwidth))
+                       cfg=ClusterConfig(kv_link_bandwidth=kv_link_bandwidth),
+                       replica_factory=make_engine)
 
     if mode == "sleep":
         clock = VirtualClock(wall)
-        engines = []
-        for i, cfg in enumerate(cfgs):
+
+        def make_engine(i: int) -> LLMEngine:
+            cfg = cfgs[min(i, len(cfgs) - 1)]
             pred = predictor or default_predictor(model_cfg, cfg)
             runner = SleepModelRunner(pred, clock)
-            engines.append(LLMEngine(cfg, runner, clock, name=f"{name}-r{i}"))
+            return LLMEngine(cfg, runner, clock, name=f"{name}-r{i}")
+
+        engines = [make_engine(i) for i in range(num_replicas)]
         return Cluster(engines, router, model_cfg=model_cfg,
-                       cfg=ClusterConfig(kv_link_bandwidth=kv_link_bandwidth))
+                       cfg=ClusterConfig(kv_link_bandwidth=kv_link_bandwidth),
+                       replica_factory=make_engine)
 
     raise ValueError(f"unknown cluster mode {mode!r} (emulate | sleep)")

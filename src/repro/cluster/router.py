@@ -34,7 +34,6 @@ Policies
 
 from __future__ import annotations
 
-import itertools
 from typing import Dict, List, Optional, Protocol, Sequence, Tuple
 
 __all__ = [
@@ -64,20 +63,37 @@ class ReplicaView(Protocol):
 
 
 class Router:
-    """Base router: maps each request to a replica index in [0, n)."""
+    """Base router: maps each request to a replica index in [0, n).
+
+    Elastic membership: ``route`` takes an optional ``active`` index list —
+    the replicas a request may currently land on (autoscaling: draining
+    replicas leave it, freshly provisioned ones join it).  ``num_replicas``
+    grows via :meth:`grow` when the cluster adds a replica; policies must
+    only ever pick from ``active``.
+    """
 
     def __init__(self, num_replicas: int):
         assert num_replicas >= 1
         self.num_replicas = num_replicas
         self.decisions: List[int] = []       # audit log (tests/benchmarks)
 
-    def route(self, req, views: Sequence[ReplicaView]) -> int:
-        idx = self._pick(req, views)
+    def route(self, req, views: Sequence[ReplicaView],
+              active: Optional[Sequence[int]] = None) -> int:
+        act = list(active) if active is not None else list(range(len(views)))
+        assert act, "routing needs at least one active replica"
+        idx = self._pick(req, views, act)
+        assert idx in act, f"policy picked inactive replica {idx}"
         self.decisions.append(idx)
         return idx
 
-    def _pick(self, req, views: Sequence[ReplicaView]) -> int:
+    def _pick(self, req, views: Sequence[ReplicaView],
+              active: List[int]) -> int:
         raise NotImplementedError
+
+    def grow(self, num_replicas: int) -> None:
+        """Cluster scale-up: the replica index space expanded."""
+        assert num_replicas >= self.num_replicas
+        self.num_replicas = num_replicas
 
     # replicas a fresh request may land on (overridden by pd_pool)
     def intake_indices(self) -> List[int]:
@@ -91,21 +107,26 @@ def _least_outstanding(views, indices) -> int:
 
 
 class RoundRobinRouter(Router):
+    """Cyclic assignment over the *active* set.  A plain counter modulo the
+    current membership reproduces ``itertools.cycle`` exactly for a static
+    cluster and keeps cycling deterministically as replicas join/leave."""
+
     policy = "round_robin"
 
     def __init__(self, num_replicas: int):
         super().__init__(num_replicas)
-        self._next = itertools.cycle(range(num_replicas))
+        self._rr = -1
 
-    def _pick(self, req, views) -> int:
-        return next(self._next)
+    def _pick(self, req, views, active) -> int:
+        self._rr += 1
+        return active[self._rr % len(active)]
 
 
 class LeastOutstandingTokensRouter(Router):
     policy = "least_outstanding_tokens"
 
-    def _pick(self, req, views) -> int:
-        return _least_outstanding(views, range(self.num_replicas))
+    def _pick(self, req, views, active) -> int:
+        return _least_outstanding(views, active)
 
 
 class PrefixAffinityRouter(Router):
@@ -130,24 +151,25 @@ class PrefixAffinityRouter(Router):
     def _key(self, tokens: Sequence[int]) -> Tuple[int, ...]:
         return tuple(tokens[: self.affinity_key_len])
 
-    def _pick(self, req, views) -> int:
+    def _pick(self, req, views, active) -> int:
         toks = getattr(req, "prompt_tokens", None)
         if not toks:
             # No routing key (e.g. a DES SimRequest built from lengths
             # only): nothing to be affine to — place by load.
-            return _least_outstanding(views, range(self.num_replicas))
+            return _least_outstanding(views, active)
         tokens = list(toks)
-        scores = [v.prefix_match_len(tokens) for v in views]
-        best = max(scores)
+        scores = {i: views[i].prefix_match_len(tokens) for i in active}
+        best = max(scores.values())
         if best > 0:
-            idx = min((i for i, s in enumerate(scores) if s == best),
+            idx = min((i for i in active if scores[i] == best),
                       key=lambda i: (views[i].outstanding_tokens(), i))
             self._sticky[self._key(tokens)] = idx
             return idx
         key = self._key(tokens)
         idx = self._sticky.get(key)
-        if idx is None:
-            idx = _least_outstanding(views, range(self.num_replicas))
+        if idx is None or idx not in active:
+            # unseen session, or its sticky replica drained away: re-place
+            idx = _least_outstanding(views, active)
             self._sticky[key] = idx
         return idx
 
@@ -176,11 +198,17 @@ class PDPoolRouter(Router):
     def intake_indices(self) -> List[int]:
         return list(self.prefill_indices)
 
-    def _pick(self, req, views) -> int:
-        return _least_outstanding(views, self.prefill_indices)
+    def _pick(self, req, views, active) -> int:
+        pool = [i for i in self.prefill_indices if i in active]
+        assert pool, "pd_pool: no active prefill replica"
+        return _least_outstanding(views, pool)
 
-    def route_decode(self, req, views: Sequence[ReplicaView]) -> int:
-        return _least_outstanding(views, self.decode_indices)
+    def route_decode(self, req, views: Sequence[ReplicaView],
+                     active: Optional[Sequence[int]] = None) -> int:
+        pool = (self.decode_indices if active is None
+                else [i for i in self.decode_indices if i in active])
+        assert pool, "pd_pool: no active decode replica"
+        return _least_outstanding(views, pool)
 
 
 ROUTER_POLICIES = {

@@ -128,7 +128,15 @@ class Timekeeper:
             self._actors.discard(actor_id)
             self._parked.discard(actor_id)
             self._pending.pop(actor_id, None)
+            rounds_before = self.stats.rounds
             self._maybe_resolve_locked()
+            if self.stats.rounds == rounds_before:
+                # No round resolved: still bump the clock epoch so a client
+                # being deregistered *from another thread* (autoscaler stop,
+                # drain teardown) re-checks instead of riding out its
+                # degradation timeout — with a manual wall source that
+                # timeout would never elapse and the thread would wedge.
+                self.clock.advance_to(self.clock.now())
 
     # -------------------------------------------------------- park/unpark --
     # Cluster-scale support: N replica engines share one Timekeeper and most

@@ -16,6 +16,19 @@ equal by construction, so emulator-vs-DES divergence at cluster scale is
 attributable purely to engine-semantics re-implementation — extending the
 paper's semantic-gap argument to N replicas.
 
+Elastic mode: the simulator consumes the same
+:class:`~repro.cluster.autoscaler.AutoscalerPolicy` objects as the emulated
+cluster — policy ticks are events every ``interval_s``, scale-ups append a
+fresh replica after the modeled ``provision_delay_s``, and scale-downs drain
+the highest-index active replica (the same deterministic victim rule the
+emulator's Autoscaler uses), so emulator-vs-DES parity extends to runs where
+replicas join and leave mid-stream.
+
+Closed-loop mode: ``run`` also accepts a
+:class:`~repro.workload.session.SessionWorkload`; turn completions re-inject
+the pre-sampled follow-up turns through the *same* ``follow_up`` rule the
+emulator's completion callbacks use.
+
 Intentionally (and realistically) missing, mirroring Table 1's "VD" column:
 prefix caching (so ``prefix_affinity`` routing degrades to its sticky-map
 fallback — a DES replica can never report a cache hit), hierarchical cache
@@ -30,8 +43,8 @@ from __future__ import annotations
 
 import heapq
 import itertools
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from dataclasses import dataclass
+from typing import List, Optional, Tuple
 
 from repro.core.predictor import BatchSpec, RuntimePredictor, SeqSpec
 
@@ -55,6 +68,8 @@ class SimRequest:
     finish_time: Optional[float] = None
     replica: int = -1                              # placement decision
     prompt_tokens: Optional[Tuple[int, ...]] = None  # routing key only
+    session_id: Optional[int] = None               # closed-loop identity
+    turn_index: int = 0
 
     def ttft(self) -> Optional[float]:
         if self.first_token_time is None:
@@ -77,12 +92,14 @@ class _ReplicaState:
     semantic gap the multi-replica comparison measures.
     """
 
-    def __init__(self, index: int):
+    def __init__(self, index: int, added_at: float = 0.0):
         self.index = index
         self.waiting: List[SimRequest] = []
         self.running: List[SimRequest] = []
         self.step_in_flight = False
         self.in_flight_batch: List[Tuple[SimRequest, int]] = []
+        self.added_at = added_at
+        self.drained_at: Optional[float] = None
 
     # ------------------------------------------------------- ReplicaView --
     def outstanding_tokens(self) -> int:
@@ -92,25 +109,58 @@ class _ReplicaState:
             total += max(s.max_new_tokens - s.num_generated, 0)
         return total
 
+    def num_outstanding(self) -> int:
+        return len(self.waiting) + len(self.running)
+
     def prefix_match_len(self, tokens) -> int:
         return 0
 
+    def idle(self) -> bool:
+        return not (self.waiting or self.running or self.step_in_flight)
+
+
+class _DESView:
+    """AutoscalerView over event-loop state (mirror of the emulator's)."""
+
+    def __init__(self, sim: "DiscreteEventSimulator"):
+        self._sim = sim
+        self._now = 0.0
+
+    def now(self) -> float:
+        return self._now
+
+    def active_count(self) -> int:
+        return len(self._sim.active)
+
+    def queue_depths(self) -> List[int]:
+        return [self._sim.replicas[i].num_outstanding()
+                for i in self._sim.active]
+
+    def recent_ttfts(self, window_s: float) -> List[float]:
+        horizon = self._now - window_s
+        return [t for ft, t in self._sim._finish_log if ft >= horizon]
+
 
 class DiscreteEventSimulator:
-    """Event-driven re-implementation of a vLLM-like engine (1..N replicas)."""
+    """Event-driven re-implementation of a vLLM-like engine (1..N replicas,
+    optionally elastic and closed-loop)."""
 
-    ARRIVAL, STEP_DONE = 0, 1
+    ARRIVAL, STEP_DONE, TICK, PROVISION = 0, 1, 2, 3
 
     def __init__(
         self,
         predictor: RuntimePredictor,
-        cfg: DESConfig = DESConfig(),
+        cfg: Optional[DESConfig] = None,
         *,
         num_replicas: int = 1,
         router=None,                 # repro.cluster.router.Router
+        autoscaler_policy=None,      # repro.cluster.autoscaler.AutoscalerPolicy
+        autoscaler_cfg=None,         # repro.cluster.autoscaler.AutoscalerConfig
     ):
         self.predictor = predictor
-        self.cfg = cfg
+        # per-instance default: a shared mutable default DESConfig would
+        # alias config state across simulators
+        self.cfg = cfg if cfg is not None else DESConfig()
         self.num_replicas = num_replicas
         if router is not None and getattr(router, "policy", None) == "pd_pool":
             raise ValueError(
@@ -122,32 +172,77 @@ class DiscreteEventSimulator:
                 f"router sized for {router.num_replicas} replicas, "
                 f"simulator has {num_replicas}")
         self.router = router
+        self.autoscaler_policy = autoscaler_policy
+        self.autoscaler_cfg = autoscaler_cfg
         self.replicas: List[_ReplicaState] = []
+        self.active: List[int] = []
+        self._finish_log: List[Tuple[float, float]] = []   # (finish, ttft)
 
+    # ----------------------------------------------------------- plumbing --
+    @staticmethod
+    def _to_sim(r, request_id: int) -> SimRequest:
+        toks = getattr(r, "prompt_tokens", None)
+        plen = getattr(r, "prompt_len", None) or len(toks)
+        return SimRequest(
+            request_id=request_id, prompt_len=plen,
+            max_new_tokens=r.max_new_tokens,
+            arrival_time=r.arrival_time,
+            prompt_tokens=tuple(toks) if toks is not None else None,
+            session_id=getattr(r, "session_id", None),
+            turn_index=getattr(r, "turn_index", 0))
+
+    def replica_seconds(self, t_end: float) -> float:
+        """Cost proxy matching :meth:`Cluster.replica_seconds`."""
+        total = 0.0
+        for rep in self.replicas:
+            end = rep.drained_at if rep.drained_at is not None else t_end
+            total += max(0.0, min(end, t_end) - rep.added_at)
+        return total
+
+    # ---------------------------------------------------------------- run --
     def run(self, requests) -> List[SimRequest]:
-        """``requests``: iterable of objects with prompt_tokens/prompt_len,
-        max_new_tokens, arrival_time (repro Request or SimRequest)."""
+        """``requests``: an iterable of request-like objects (repro Request
+        or SimRequest: prompt_tokens/prompt_len, max_new_tokens,
+        arrival_time) **or** a SessionWorkload (closed loop)."""
         from repro.cluster.router import RoundRobinRouter
 
         router = self.router or RoundRobinRouter(self.num_replicas)
-        sims: List[SimRequest] = []
-        for i, r in enumerate(requests):
-            toks = getattr(r, "prompt_tokens", None)
-            plen = getattr(r, "prompt_len", None) or len(toks)
-            sims.append(SimRequest(
-                request_id=i, prompt_len=plen,
-                max_new_tokens=r.max_new_tokens,
-                arrival_time=r.arrival_time,
-                prompt_tokens=tuple(toks) if toks is not None else None))
+
+        session_workload = None
+        if hasattr(requests, "initial_requests"):      # SessionWorkload
+            session_workload = requests
+            source = session_workload.initial_requests()
+            expected = session_workload.total_requests
+        else:
+            source = list(requests)
+            expected = len(source)
+
+        req_counter = itertools.count()
+        sims: List[SimRequest] = [self._to_sim(r, next(req_counter))
+                                  for r in source]
 
         self.replicas = [_ReplicaState(i) for i in range(self.num_replicas)]
+        self.active = list(range(self.num_replicas))
+        self._finish_log = []
+        asc_cfg = self.autoscaler_cfg
+        if self.autoscaler_policy is not None and asc_cfg is None:
+            from repro.cluster.autoscaler import AutoscalerConfig
+            asc_cfg = AutoscalerConfig()
+        view = _DESView(self)
+
         counter = itertools.count()
-        # event payload: SimRequest for ARRIVAL, replica index for STEP_DONE
+        # event payload: SimRequest for ARRIVAL, replica index for STEP_DONE,
+        # None for TICK / PROVISION
         events: List[Tuple[float, int, int, object]] = []
         for s in sims:
             heapq.heappush(events, (s.arrival_time, next(counter), self.ARRIVAL, s))
+        if self.autoscaler_policy is not None:
+            heapq.heappush(events, (asc_cfg.interval_s, next(counter),
+                                    self.TICK, None))
 
         now = 0.0
+        completed = 0
+        provisioning = 0
 
         def schedule_step(rep: _ReplicaState):
             if rep.step_in_flight:
@@ -185,15 +280,43 @@ class DiscreteEventSimulator:
             heapq.heappush(
                 events, (now + dur, next(counter), self.STEP_DONE, rep.index))
 
+        def drain_victim() -> Optional[int]:
+            # deterministic membership-only rule, mirrored from the
+            # emulator's Autoscaler._pick_victim
+            if len(self.active) <= 1:
+                return None
+            return max(self.active)
+
+        def apply_autoscale(delta: int):
+            nonlocal provisioning
+            committed = len(self.active) + provisioning
+            if delta > 0:
+                delta = min(delta, asc_cfg.max_replicas - committed)
+                for _ in range(max(0, delta)):
+                    provisioning += 1
+                    heapq.heappush(
+                        events, (now + asc_cfg.provision_delay_s,
+                                 next(counter), self.PROVISION, None))
+            elif delta < 0:
+                allowed = max(0, committed - asc_cfg.min_replicas)
+                for _ in range(min(-delta, allowed)):
+                    victim = drain_victim()
+                    if victim is None:
+                        break
+                    self.active.remove(victim)
+                    rep = self.replicas[victim]
+                    if rep.idle():
+                        rep.drained_at = now
+
         while events:
             now, _, kind, payload = heapq.heappop(events)
             if kind == self.ARRIVAL:
-                idx = router.route(payload, self.replicas)
+                idx = router.route(payload, self.replicas, active=self.active)
                 payload.replica = idx
                 rep = self.replicas[idx]
                 rep.waiting.append(payload)
                 schedule_step(rep)
-            else:  # STEP_DONE
+            elif kind == self.STEP_DONE:
                 rep = self.replicas[payload]
                 rep.step_in_flight = False
                 for s, n in rep.in_flight_batch:
@@ -210,7 +333,34 @@ class DiscreteEventSimulator:
                             and s.finish_time is None):
                         s.finish_time = now
                         rep.running.remove(s)
+                        completed += 1
+                        if s.ttft() is not None:
+                            self._finish_log.append((now, s.ttft()))
+                        if session_workload is not None:
+                            fu = session_workload.follow_up(s)
+                            if fu is not None:
+                                fu_sim = self._to_sim(fu, next(req_counter))
+                                sims.append(fu_sim)
+                                heapq.heappush(
+                                    events, (fu_sim.arrival_time,
+                                             next(counter), self.ARRIVAL,
+                                             fu_sim))
                 rep.in_flight_batch = []
                 schedule_step(rep)
+                if (rep.index not in self.active and rep.idle()
+                        and rep.drained_at is None):
+                    rep.drained_at = now         # drain complete
+            elif kind == self.TICK:
+                view._now = now
+                apply_autoscale(self.autoscaler_policy.decide(view))
+                if completed < expected:
+                    heapq.heappush(events, (now + asc_cfg.interval_s,
+                                            next(counter), self.TICK, None))
+            else:  # PROVISION
+                provisioning -= 1
+                idx = len(self.replicas)
+                self.replicas.append(_ReplicaState(idx, added_at=now))
+                self.active.append(idx)
+                router.grow(idx + 1)
 
         return sims

@@ -6,10 +6,11 @@ The runner is decoupled from any one engine: it drives a *target* — a single
 both expose (``submit`` / ``wait_until_complete`` / ``finished`` /
 ``step_log`` / ``clock``).  Dataflow:
 
-    Workload (synthesize/replay)  →  dispatcher (Actor: time-jumps to each
-    arrival, routes via the target's submit)  →  target replicas (engines
-    stepping on the shared virtual clock)  →  Metrics (Observer: collects
-    TTFT/TPOT/e2e/goodput percentiles from completion timestamps).
+    Workload (synthesize/replay/sessions)  →  dispatcher (Actor: time-jumps
+    to each arrival, routes via the target's submit)  →  target replicas
+    (engines stepping on the shared virtual clock)  →  Metrics (Observer:
+    TTFT/TPOT/e2e/goodput/SLO-attainment percentiles, per-session stats,
+    replica-seconds).
 
 The **request dispatcher is an Actor**: between arrivals it jumps virtual
 time to the next dispatch timestamp instead of sleeping.  The **metrics
@@ -18,12 +19,23 @@ virtual clock without participating in barriers.  In real/sleep modes the
 dispatcher degrades transparently: with no Timekeeper attached it
 wall-sleeps to each arrival (the exact strawman behaviour), so one code
 path drives all modes and all cluster sizes.
+
+Closed loop: given a :class:`~repro.workload.session.SessionWorkload`, the
+runner registers a completion listener on the target; each finished turn
+re-injects its follow-up (carrying the prior turn's tokens) through a
+*think-time actor* — a short-lived Timekeeper client registered
+synchronously in the finishing replica's step thread (before its next
+barrier round, the §4.3 trick), which jumps to ``finish + think`` and
+submits.  Virtual time therefore can never skip over a pending follow-up,
+even while the open-loop dispatcher is mid-jump toward a far-future arrival.
 """
 
 from __future__ import annotations
 
+import itertools
 import threading
 import time
+from collections import defaultdict
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence
 
@@ -73,6 +85,15 @@ class BenchmarkResult:
     routing_policy: Optional[str] = None
     # (ttft, tpot) per completed request; tpot is None for 1-token outputs
     slo_samples: List[tuple] = field(repr=False, default_factory=list)
+    # cost proxy: total replica-on virtual seconds across the run window
+    # (elastic membership: drained replicas stop accruing, added ones start
+    # at their join time; fixed clusters: num_replicas * makespan)
+    replica_seconds: float = 0.0
+    # closed-loop session stats (None for open-loop workloads): percentiles
+    # over *per-session mean* TTFT / TPOT — the chat-level experience
+    num_sessions: int = 0
+    session_ttft: Optional[LatencyStats] = None
+    session_tpot: Optional[LatencyStats] = None
 
     @property
     def speedup(self) -> float:
@@ -85,20 +106,26 @@ class BenchmarkResult:
         return (self.num_requests / self.makespan_virtual
                 if self.makespan_virtual else 0.0)
 
-    def goodput_rps(self, slo_ttft_s: float = float("inf"),
-                    slo_tpot_s: float = float("inf")) -> float:
-        """SLO-attaining completions per virtual second: only requests whose
-        TTFT and TPOT both meet the SLOs count (DistServe-style goodput).
-        A request with no TPOT sample (single-token output) is judged on
-        TTFT alone."""
-        if not self.makespan_virtual:
+    def slo_attainment(self, slo_ttft_s: float = float("inf"),
+                       slo_tpot_s: float = float("inf")) -> float:
+        """Fraction of completed requests meeting both SLOs.  A request with
+        no TPOT sample (single-token output) is judged on TTFT alone."""
+        if not self.slo_samples:
             return 0.0
         good = 0
         for ttft, tpot in self.slo_samples:
             ttft_ok = ttft is None or ttft <= slo_ttft_s
             tpot_ok = tpot is None or tpot <= slo_tpot_s
             good += int(ttft_ok and tpot_ok)
-        return good / self.makespan_virtual
+        return good / len(self.slo_samples)
+
+    def goodput_rps(self, slo_ttft_s: float = float("inf"),
+                    slo_tpot_s: float = float("inf")) -> float:
+        """SLO-attaining completions per virtual second (DistServe-style)."""
+        if not self.makespan_virtual:
+            return 0.0
+        return (self.slo_attainment(slo_ttft_s, slo_tpot_s)
+                * len(self.slo_samples) / self.makespan_virtual)
 
     def summary(self) -> dict:
         out = {
@@ -114,10 +141,15 @@ class BenchmarkResult:
             "speedup_x": self.speedup,
             "throughput_tok_s": self.throughput_tokens_per_s,
             "completed_rps": self.request_rate_completed,
+            "replica_seconds": self.replica_seconds,
         }
         if self.num_replicas > 1:
             out["num_replicas"] = self.num_replicas
             out["routing_policy"] = self.routing_policy
+        if self.num_sessions:
+            out["num_sessions"] = self.num_sessions
+            out["session_ttft_p50_ms"] = self.session_ttft.p50 * 1e3
+            out["session_ttft_p99_ms"] = self.session_ttft.p99 * 1e3
         return out
 
 
@@ -127,33 +159,49 @@ def _is_started(target) -> bool:
 
 
 class BenchmarkRunner:
-    """Drive a request stream through an engine or a cluster.
+    """Drive a request stream (open- or closed-loop) through an engine or a
+    cluster.
 
-    ``target`` needs only the uniform replica surface: ``submit``,
-    ``start``/``stop``, ``wait_until_complete``, ``finished``,
-    ``step_log``, and a ``clock`` attribute.
+    ``workload`` is either a list of :class:`Request` (open loop) or a
+    :class:`~repro.workload.session.SessionWorkload` (closed loop: follow-up
+    turns are released on completion + think time).  ``target`` needs only
+    the uniform replica surface: ``submit``, ``start``/``stop``,
+    ``wait_until_complete``, ``finished``, ``step_log``, and a ``clock``
+    attribute — plus ``add_completion_listener`` for closed-loop workloads.
+
+    ``autoscaler`` (optional, cluster targets): started/stopped with the
+    run; its membership changes are reflected in ``replica_seconds``.
     """
 
     def __init__(
         self,
         target,
-        requests: List[Request],
+        workload,
         *,
         transport=None,              # Timekeeper transport (emulate mode)
+        autoscaler=None,             # repro.cluster.autoscaler.Autoscaler
         name: str = "bench",
     ):
         self.target = target
         self.engine = target         # backwards-compatible alias
-        self.requests = sorted(requests, key=lambda r: r.arrival_time)
+        self.session_workload = (workload
+                                 if hasattr(workload, "initial_requests")
+                                 else None)
+        reqs = (self.session_workload.initial_requests()
+                if self.session_workload is not None else list(workload))
+        self.requests = sorted(reqs, key=lambda r: r.arrival_time)
+        self.expected = (self.session_workload.total_requests
+                         if self.session_workload is not None
+                         else len(self.requests))
         self.transport = transport
+        self.autoscaler = autoscaler
         self.name = name
         self.clock: VirtualClock = target.clock
+        self._think_ids = itertools.count()
+        self._thinkers: List[threading.Thread] = []
 
     # ---------------------------------------------------------- dispatch --
-    def _dispatch_loop(self) -> None:
-        client: Optional[TimeJumpClient] = None
-        if self.transport is not None:
-            client = TimeJumpClient(self.transport, f"{self.name}-dispatcher")
+    def _dispatch_loop(self, client: Optional[TimeJumpClient]) -> None:
         t0 = self.clock.now()
         try:
             for req in self.requests:
@@ -170,19 +218,80 @@ class BenchmarkRunner:
             if client is not None:
                 client.deregister()
 
+    # -------------------------------------------------------- closed loop --
+    def _on_complete(self, finished: List[Request]) -> None:
+        """Completion listener: runs in the finishing replica's step thread,
+        before its next barrier round.  Registering the think-time actor
+        *here* is what makes the re-injection race-free: the barrier cannot
+        advance past ``finish + think`` before the new actor's jump request
+        is pending (§4.3)."""
+        for req in finished:
+            fu = self.session_workload.follow_up(req)
+            if fu is None:
+                continue
+            client: Optional[TimeJumpClient] = None
+            if self.transport is not None:
+                client = TimeJumpClient(
+                    self.transport,
+                    f"{self.name}-think-{next(self._think_ids)}")
+            t = threading.Thread(
+                target=self._think_and_submit, args=(fu, client),
+                name=f"{self.name}-think", daemon=True)
+            t.start()
+            self._thinkers.append(t)
+
+    def _think_and_submit(self, fu: Request,
+                          client: Optional[TimeJumpClient]) -> None:
+        try:
+            if client is not None:
+                client.jump_to(fu.arrival_time)
+            else:
+                dt = fu.arrival_time - self.clock.now()
+                if dt > 0:
+                    self.clock.wall.sleep(dt)
+            fu.arrival_time = self.clock.now()
+            self.target.submit(fu)
+        finally:
+            if client is not None:
+                client.deregister()
+
     # --------------------------------------------------------------- run --
     def run(self, timeout: float = 600.0) -> BenchmarkResult:
         wall0 = time.monotonic()
         v0 = self.clock.now()
+        listener_armed = False
+        if self.session_workload is not None:
+            self.target.add_completion_listener(self._on_complete)
+            listener_armed = True
+        # The dispatcher's actor is registered HERE, before the autoscaler's
+        # tick actor can start jumping: were the autoscaler briefly the only
+        # registered actor, its ticks would free-run virtual time far ahead
+        # of the first arrival (barrier rounds resolve instantly for a lone
+        # actor) and shift the whole timeline.
+        disp_client: Optional[TimeJumpClient] = None
+        if self.transport is not None:
+            disp_client = TimeJumpClient(self.transport,
+                                         f"{self.name}-dispatcher")
         dispatcher = threading.Thread(
-            target=self._dispatch_loop, name=f"{self.name}-dispatch", daemon=True)
+            target=self._dispatch_loop, args=(disp_client,),
+            name=f"{self.name}-dispatch", daemon=True)
         started_here = False
         if not _is_started(self.target):
             self.target.start()
             started_here = True
+        if self.autoscaler is not None:
+            self.autoscaler.start()
         dispatcher.start()
-        ok = self.target.wait_until_complete(len(self.requests), timeout=timeout)
+        try:
+            ok = self.target.wait_until_complete(self.expected, timeout=timeout)
+        finally:
+            if self.autoscaler is not None:
+                self.autoscaler.stop()
+            if listener_armed:
+                self.target.remove_completion_listener(self._on_complete)
         dispatcher.join(timeout=10)
+        for t in self._thinkers:
+            t.join(timeout=10)
         wall = time.monotonic() - wall0
         v1 = self.clock.now()
         if started_here:
@@ -190,11 +299,17 @@ class BenchmarkRunner:
         if not ok:
             raise TimeoutError(
                 f"benchmark timed out: {len(self.target.finished)}/"
-                f"{len(self.requests)} finished")
-        return self._collect(wall, v1 - v0)
+                f"{self.expected} finished")
+        return self._collect(wall, v0, v1)
 
-    def _collect(self, wall: float, makespan: float) -> BenchmarkResult:
+    def _collect(self, wall: float, v0: float, v1: float) -> BenchmarkResult:
         reqs = self.target.finished
+        # Makespan ends at the last completion, not at teardown: trailing
+        # autoscaler ticks (which keep jumping the clock after the final
+        # finish) must not leak into throughput/goodput denominators.
+        finishes = [r.finish_time for r in reqs if r.finish_time is not None]
+        v_end = max(finishes) if finishes else v1
+        makespan = v_end - v0
         ttft = LatencyStats.of([r.ttft() for r in reqs if r.ttft() is not None])
         tpot = LatencyStats.of([r.tpot() for r in reqs
                                 if r.tpot() is not None and r.num_generated > 1])
@@ -205,6 +320,27 @@ class BenchmarkRunner:
         cpu = sum(s.cpu_overhead_wall for s in step_log)
         dev = sum(s.device_time for s in step_log)
         engines = getattr(self.target, "engines", None)
+        if hasattr(self.target, "replica_seconds"):
+            replica_s = self.target.replica_seconds(v0, v_end)
+        else:
+            replica_s = makespan            # a single engine, always on
+        by_session: Dict[int, List[Request]] = defaultdict(list)
+        for r in reqs:
+            if r.session_id is not None:
+                by_session[r.session_id].append(r)
+        session_ttft = session_tpot = None
+        if by_session:
+            mean_ttfts, mean_tpots = [], []
+            for rs in by_session.values():
+                ts = [r.ttft() for r in rs if r.ttft() is not None]
+                ps = [r.tpot() for r in rs
+                      if r.tpot() is not None and r.num_generated > 1]
+                if ts:
+                    mean_ttfts.append(float(np.mean(ts)))
+                if ps:
+                    mean_tpots.append(float(np.mean(ps)))
+            session_ttft = LatencyStats.of(mean_ttfts)
+            session_tpot = LatencyStats.of(mean_tpots)
         return BenchmarkResult(
             ttft=ttft, tpot=tpot, e2e=e2e,
             makespan_virtual=makespan,
@@ -222,17 +358,26 @@ class BenchmarkRunner:
                  r.tpot() if r.num_generated > 1 else None)
                 for r in reqs
             ],
+            replica_seconds=replica_s,
+            num_sessions=len(by_session),
+            session_ttft=session_ttft,
+            session_tpot=session_tpot,
         )
 
 
 def run_pipeline(workload_cfg, target, *, transport=None,
                  timeout: float = 600.0) -> BenchmarkResult:
     """One-call Workload → Cluster → Metrics pipeline: synthesize the
-    request stream from a WorkloadConfig and benchmark ``target`` with it."""
-    from .workload import synthesize
+    request stream from a WorkloadConfig (open loop) or SessionConfig
+    (closed loop) and benchmark ``target`` with it."""
+    from repro.workload import SessionConfig, SessionWorkload, synthesize
 
-    reqs = synthesize(workload_cfg)
-    return BenchmarkRunner(target, reqs, transport=transport).run(timeout=timeout)
+    if isinstance(workload_cfg, SessionConfig):
+        workload = SessionWorkload(workload_cfg)
+    else:
+        workload = synthesize(workload_cfg)
+    return BenchmarkRunner(target, workload,
+                           transport=transport).run(timeout=timeout)
 
 
 def compare_distributions(a: LatencyStats, b: LatencyStats) -> Dict[str, float]:

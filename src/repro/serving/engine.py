@@ -101,6 +101,20 @@ class LLMEngine:
         # BEFORE the engine's next barrier participation.  PD disaggregation
         # uses this to register the KV-mover actor race-free (§4.3).
         self.on_finish = None
+        # Additional completion subscribers with the same synchronous
+        # guarantee (closed-loop session workloads register their follow-up
+        # re-injection here; the Cluster reserves ``on_finish`` for itself).
+        self.completion_listeners: List = []
+
+    def add_completion_listener(self, fn) -> None:
+        """Subscribe ``fn(finished: List[Request])``; runs in the step thread
+        synchronously with completion, before the next barrier round — safe
+        to register new Timekeeper actors from (think-time actors, movers)."""
+        self.completion_listeners.append(fn)
+
+    def remove_completion_listener(self, fn) -> None:
+        if fn in self.completion_listeners:
+            self.completion_listeners.remove(fn)
 
     # ------------------------------------------------------------- intake --
     def submit(self, req: Request) -> None:
@@ -276,6 +290,8 @@ class LLMEngine:
                     self._live.pop(req.request_id, None)
             if self.on_finish is not None:
                 self.on_finish(finished)
+            for fn in list(self.completion_listeners):
+                fn(finished)
             with self._finish_cond:
                 self.finished.extend(finished)
                 self._finish_cond.notify_all()

@@ -32,6 +32,11 @@ class Request:
     arrival_time: float = 0.0
     request_id: int = field(default_factory=lambda: next(_req_counter))
 
+    # closed-loop session identity (repro.workload.session): follow-up turns
+    # are re-injected on completion and carry the prior turn's tokens
+    session_id: Optional[int] = None
+    turn_index: int = 0
+
     # progress
     state: RequestState = RequestState.WAITING
     num_prefilled: int = 0            # prompt tokens processed so far

@@ -12,7 +12,7 @@ from dataclasses import dataclass
 from typing import Optional
 
 from repro.core.client import LocalTransport, TimeJumpClient
-from repro.core.clock import VirtualClock
+from repro.core.clock import VirtualClock, WallSource
 from repro.core.emulation import VirtualDeviceContext
 from repro.core.hardware import get_chip
 from repro.core.predictor import (AnalyticalPredictor, ParallelSpec,
@@ -64,10 +64,15 @@ def build_stack(
     max_len: int = 512,
     jitter_cooldown: float = 0.0,
     use_worker_group: bool = True,
+    wall: Optional[WallSource] = None,
     name: str = "engine",
 ) -> ServingStack:
+    """``wall`` injects a deterministic wall source (e.g. ManualWallSource:
+    virtual time advances only through coordinated jumps — reproducibility
+    tests use it to get exact, jitter-free timelines)."""
     if mode == "emulate":
-        tk = Timekeeper(jitter_cooldown=jitter_cooldown)
+        tk = Timekeeper(clock=VirtualClock(wall),
+                        jitter_cooldown=jitter_cooldown)
         transport = LocalTransport(tk)
         clock = tk.clock
         pred = predictor or default_predictor(model_cfg, engine_cfg)
@@ -92,7 +97,7 @@ def build_stack(
         return ServingStack(engine, clock, transport, tk, devices, runner)
 
     if mode == "sleep":
-        clock = VirtualClock()
+        clock = VirtualClock(wall)
         pred = predictor or default_predictor(model_cfg, engine_cfg)
         runner = SleepModelRunner(pred, clock)
         engine = LLMEngine(engine_cfg, runner, clock, name=name)

@@ -1,81 +1,12 @@
-"""Workload synthesis: request streams for the fidelity benchmarks.
+"""Compatibility shim: the workload layer moved to :mod:`repro.workload`.
 
-ShareGPT-like length marginals (lognormal prompt, lognormal output — the
-shapes reported by Vidur/Splitwise trace studies) with Poisson arrivals, plus
-deterministic trace replay and a prefix-sharing workload (same system prompt
-across requests) for exercising the radix cache.  Seeded and fully
-deterministic so real/sleep/emulate runs see byte-identical request streams.
+Kept so historical imports (``from repro.serving.workload import
+WorkloadConfig, synthesize``) keep working; new code should import from
+``repro.workload`` which adds arrival processes and session workloads.
 """
 
-from __future__ import annotations
+from repro.workload.synth import (WorkloadConfig, lognormal_lengths,  # noqa: F401
+                                  replay_trace, synthesize)
 
-from dataclasses import dataclass
-from typing import List, Optional, Sequence
-
-import numpy as np
-
-from .request import Request
-
-
-@dataclass(frozen=True)
-class WorkloadConfig:
-    num_requests: int = 100
-    qps: float = 2.0                      # Poisson arrival rate
-    prompt_len_mean: float = 220.0        # ShareGPT-ish
-    prompt_len_sigma: float = 0.6         # lognormal sigma
-    output_len_mean: float = 180.0
-    output_len_sigma: float = 0.6
-    max_prompt_len: int = 2048
-    max_output_len: int = 1024
-    min_prompt_len: int = 4
-    min_output_len: int = 2
-    vocab_size: int = 32000
-    shared_prefix_len: int = 0            # >0: common system prompt
-    seed: int = 0
-
-
-def synthesize(cfg: WorkloadConfig) -> List[Request]:
-    rng = np.random.default_rng(cfg.seed)
-    n = cfg.num_requests
-
-    gaps = rng.exponential(1.0 / cfg.qps, size=n)
-    arrivals = np.cumsum(gaps)
-    arrivals[0] = 0.0
-
-    def lognormal_lengths(mean, sigma, lo, hi):
-        mu = np.log(mean) - sigma**2 / 2
-        lens = rng.lognormal(mu, sigma, size=n)
-        return np.clip(lens.astype(int), lo, hi)
-
-    prompt_lens = lognormal_lengths(cfg.prompt_len_mean, cfg.prompt_len_sigma,
-                                    cfg.min_prompt_len, cfg.max_prompt_len)
-    output_lens = lognormal_lengths(cfg.output_len_mean, cfg.output_len_sigma,
-                                    cfg.min_output_len, cfg.max_output_len)
-
-    shared = (rng.integers(1, cfg.vocab_size, size=cfg.shared_prefix_len)
-              .tolist() if cfg.shared_prefix_len else [])
-
-    reqs = []
-    for i in range(n):
-        body_len = max(int(prompt_lens[i]) - len(shared), 1)
-        body = rng.integers(1, cfg.vocab_size, size=body_len).tolist()
-        reqs.append(Request(
-            prompt_tokens=shared + body,
-            max_new_tokens=int(output_lens[i]),
-            arrival_time=float(arrivals[i]),
-        ))
-    return reqs
-
-
-def replay_trace(arrivals: Sequence[float], prompt_lens: Sequence[int],
-                 output_lens: Sequence[int], *, vocab_size: int = 32000,
-                 seed: int = 0) -> List[Request]:
-    rng = np.random.default_rng(seed)
-    return [
-        Request(
-            prompt_tokens=rng.integers(1, vocab_size, size=int(p)).tolist(),
-            max_new_tokens=int(o),
-            arrival_time=float(a),
-        )
-        for a, p, o in zip(arrivals, prompt_lens, output_lens)
-    ]
+__all__ = ["WorkloadConfig", "synthesize", "replay_trace",
+           "lognormal_lengths"]

@@ -35,10 +35,10 @@ def workload(n=40, qps=20.0, seed=7, **kw):
     return synthesize(WorkloadConfig(**base))
 
 
-def run_mode(mode, reqs, *, policy="vllm", batch_s=4e-3, **cfg_kw):
+def run_mode(mode, reqs, *, policy="vllm", batch_s=4e-3, wall=None, **cfg_kw):
     stack = build_stack(MODEL, engine_cfg(policy=policy, **cfg_kw), mode,
                         predictor=StaticPredictor(batch_s),
-                        use_worker_group=False)
+                        use_worker_group=False, wall=wall)
     try:
         runner = BenchmarkRunner(stack.engine, reqs,
                                  transport=stack.transport)
@@ -57,16 +57,30 @@ def test_emulate_matches_sleep_distributions():
     batches our pure-Python scheduler overhead dominates in a way vLLM's
     does not; benchmarks/fig8 sweeps this dependence explicitly).
 
+    Hardened with the ManualWallSource treatment (same as
+    test_two_actor_min_advancement): the *emulate* run uses a manual wall,
+    so its timeline is pure jump arithmetic — exactly reproducible, no
+    wall-rate CPU absorption, no OS jitter on that side of the comparison.
+    The sleep baseline must keep a real wall (its correctness comes from
+    genuinely concurrent wall-clock waiting; serialising a manual wall
+    across sleeper threads would distort the timeline), so residual noise is
+    sleep-side only and the gates + one retry absorb it.
+
     Operating point chosen for CI robustness: 40 ms batches and n=48 keep
     the wall-clock baseline's OS sleep jitter (~1-2 ms per step) small
     relative to the measured latencies; 20 ms batches with n=24 flake
     (the jitter is ~8% of a 26 ms median TTFT)."""
-    # One retry: shared CI boxes show bursty multi-ms noise that shifts an
-    # entire sleep-mode run; a *real* fidelity regression is systematic and
-    # fails both attempts, while a noise burst passes the re-measurement.
+    from repro.core.clock import ManualWallSource
+
+    # Deterministic side: compute once — identical on every attempt.
+    res_emu = run_mode("emulate", workload(n=48, qps=6.0), batch_s=40e-3,
+                       wall=ManualWallSource())
+    # One retry for the sleep side: shared CI boxes show bursty multi-ms
+    # noise that shifts an entire sleep-mode run; a *real* fidelity
+    # regression is systematic and fails both attempts, while a noise burst
+    # passes the re-measurement.
     for attempt in range(2):
         res_sleep = run_mode("sleep", workload(n=48, qps=6.0), batch_s=40e-3)
-        res_emu = run_mode("emulate", workload(n=48, qps=6.0), batch_s=40e-3)
 
         ttft_err = compare_distributions(res_sleep.ttft, res_emu.ttft)
         tpot_err = compare_distributions(res_sleep.tpot, res_emu.tpot)
@@ -87,8 +101,13 @@ def test_emulate_matches_sleep_distributions():
 
 
 def test_emulation_accelerates():
-    """Virtual seconds simulated per wall second must be >> 1 (Fig. 7)."""
-    res = run_mode("emulate", workload(n=40, qps=10.0), batch_s=20e-3)
+    """Virtual seconds simulated per wall second must be >> 1 (Fig. 7).
+
+    qps=2 gives a ~20 s virtual arrival span against sub-second wall time,
+    so the >5x gate holds with an order-of-magnitude margin even on a
+    loaded CI box (makespan is measured to the last completion, so wall
+    noise no longer pads the numerator)."""
+    res = run_mode("emulate", workload(n=40, qps=2.0), batch_s=20e-3)
     assert res.speedup > 5.0, f"speedup only {res.speedup:.1f}x"
     # sleep mode by construction runs at ~1x
     res_sleep = run_mode("sleep", workload(n=10, qps=20.0), batch_s=3e-3)
