@@ -85,6 +85,17 @@ def _autoscale(mode):
             f"elastic_parity_err={parity['max_err_steps']}steps")
 
 
+def _hetero(mode):
+    from benchmarks import fig_hetero as m
+    rows = m.main(n=_n(mode, 16, 10, 6))
+    parity = rows[-1]
+    fixed = next(r for r in rows if r.get("variant") == "fixed_6xh100")
+    auto = next(r for r in rows if r.get("variant") == "tier_aware")
+    save = 1 - auto["cost_dollars"] / fixed["cost_dollars"]
+    return (f"tier_aware_saves={save:.0%}_dollars@equal_attainment,"
+            f"hetero_parity_err={parity['max_err_steps']}steps")
+
+
 def _table1(mode):
     from benchmarks import table1_features as m
     rows = m.main()
@@ -114,6 +125,7 @@ SUITES = [
     ("fig9_arrival_rate", _fig9),
     ("fig_cluster_scaling", _cluster),
     ("fig_autoscale", _autoscale),
+    ("fig_hetero", _hetero),
     ("table1_features", _table1),
     ("roofline", _roofline),
 ]

@@ -14,7 +14,7 @@ from repro.configs import get_config
 from repro.serving.benchmark import BenchmarkRunner
 from repro.serving.scheduler import EngineConfig
 from repro.serving.stack import build_stack
-from repro.serving.workload import WorkloadConfig, synthesize
+from repro.workload import WorkloadConfig, synthesize
 
 SLO_TTFT_P99_S = 2.0
 GRID = [

@@ -18,7 +18,7 @@ from repro.serving.engine import LLMEngine
 from repro.serving.model_runner import TimeWarpModelRunner
 from repro.serving.scheduler import EngineConfig
 from repro.serving.stack import build_stack, default_predictor
-from repro.serving.workload import WorkloadConfig, synthesize
+from repro.workload import WorkloadConfig, synthesize
 
 MODEL = get_config("llama3_8b")
 

@@ -19,7 +19,7 @@ from repro.models.transformer import build_model
 from repro.serving.benchmark import BenchmarkRunner, compare_distributions
 from repro.serving.scheduler import EngineConfig
 from repro.serving.stack import build_stack
-from repro.serving.workload import WorkloadConfig, synthesize
+from repro.workload import WorkloadConfig, synthesize
 
 
 def workload(seed):

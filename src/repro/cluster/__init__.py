@@ -1,23 +1,28 @@
 """Multi-replica cluster emulation layer (data-parallel serving, PD pools,
-elastic membership + SLO-driven autoscaling).
+elastic membership, heterogeneous tiers + SLO-driven autoscaling).
 
 Public surface::
 
     from repro.cluster import Cluster, build_cluster, make_router
     from repro.cluster import Autoscaler, make_autoscaler_policy
+    from repro.cluster import TierSpec, make_tier_specs
 
 See ``cluster.py`` for the replica/timeline architecture, ``router.py`` for
-the pluggable routing policies, and ``autoscaler.py`` for the virtual-time
-scaling control loop.
+the pluggable routing policies, ``autoscaler.py`` for the virtual-time
+scaling control loop, and ``tiers.py`` for the hardware-tier arithmetic
+behind heterogeneous pools.
 """
 
 from .autoscaler import (AUTOSCALER_POLICIES, Autoscaler, AutoscalerConfig,
                          AutoscalerPolicy, QueueDepthPolicy, SchedulePolicy,
-                         TTFTSLOPolicy, make_autoscaler_policy)
+                         TTFTSLOPolicy, make_autoscaler_policy,
+                         provision_delay)
 from .cluster import Cluster, ClusterConfig, build_cluster
-from .router import (LeastOutstandingTokensRouter, PDPoolRouter,
-                     PrefixAffinityRouter, ReplicaView, RoundRobinRouter,
-                     Router, ROUTER_POLICIES, make_router)
+from .router import (CostNormalizedLoadRouter, LeastOutstandingTokensRouter,
+                     PDPoolRouter, PrefixAffinityRouter, ReplicaView,
+                     RoundRobinRouter, Router, ROUTER_POLICIES, make_router)
+from .tiers import (TierSpec, make_tier_spec, make_tier_specs,
+                    probe_throughput, probe_ttft, tier_engine_cfg)
 
 __all__ = [
     "Cluster",
@@ -27,10 +32,18 @@ __all__ = [
     "ReplicaView",
     "RoundRobinRouter",
     "LeastOutstandingTokensRouter",
+    "CostNormalizedLoadRouter",
     "PrefixAffinityRouter",
     "PDPoolRouter",
     "ROUTER_POLICIES",
     "make_router",
+    "TierSpec",
+    "make_tier_spec",
+    "make_tier_specs",
+    "probe_throughput",
+    "probe_ttft",
+    "tier_engine_cfg",
+    "provision_delay",
     "Autoscaler",
     "AutoscalerConfig",
     "AutoscalerPolicy",

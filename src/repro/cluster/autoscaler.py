@@ -16,6 +16,19 @@ Policies see replicas only through the small :class:`AutoscalerView`
 protocol, so identical policy objects drive the emulator's real engines and
 the DES baseline's event-loop replicas — extending the paper's §2.3
 "same control code everywhere" argument to the scaling control loop.
+
+**Tier-selecting scale-up** (heterogeneous pools): when
+:attr:`AutoscalerConfig.tiers` names candidate hardware tiers, every
+scale-up first asks the policy :meth:`AutoscalerPolicy.select_tier` which
+chip to provision.  The default rule picks the cheapest candidate;
+:class:`TTFTSLOPolicy` picks the *cheapest tier whose projected service
+TTFT still fits inside the SLO* (falling back to the fastest when none
+does) — scaling into cheaper chips exactly when they are fast enough.
+Per-tier provisioning delays come from
+:attr:`AutoscalerConfig.provision_delay_by_tier`.  Tier selection happens
+at tick time (deterministically, from immutable
+:class:`~repro.cluster.tiers.TierSpec` data), so the DES mirror makes the
+identical choice at the identical virtual time.
 """
 
 from __future__ import annotations
@@ -23,9 +36,11 @@ from __future__ import annotations
 import itertools
 import threading
 from dataclasses import dataclass
-from typing import List, Optional, Protocol, Sequence, Tuple
+from typing import List, Mapping, Optional, Protocol, Sequence, Tuple
 
 from repro.core.client import TimeJumpClient
+
+from .tiers import TierSpec
 
 __all__ = [
     "AutoscalerConfig",
@@ -36,6 +51,7 @@ __all__ = [
     "SchedulePolicy",
     "AUTOSCALER_POLICIES",
     "make_autoscaler_policy",
+    "provision_delay",
     "Autoscaler",
 ]
 
@@ -46,6 +62,30 @@ class AutoscalerConfig:
     provision_delay_s: float = 1.0    # scale-up latency (virtual-time jump)
     min_replicas: int = 1
     max_replicas: int = 8
+    # Heterogeneous scale-up: candidate tier names the policy may provision
+    # (empty = homogeneous, clone the last replica's tier) and optional
+    # per-tier provisioning delays (cheaper chips are usually easier to get;
+    # tiers absent from the mapping fall back to provision_delay_s).
+    tiers: Tuple[str, ...] = ()
+    provision_delay_by_tier: Optional[Mapping[str, float]] = None
+
+
+def provision_delay(cfg: AutoscalerConfig, tier: Optional[str]) -> float:
+    """Scale-up latency for ``tier`` under ``cfg`` (shared with the DES
+    mirror so both sides provision at identical virtual times).
+
+    >>> cfg = AutoscalerConfig(provision_delay_s=2.0,
+    ...                        provision_delay_by_tier={"l4": 0.5})
+    >>> provision_delay(cfg, "l4")
+    0.5
+    >>> provision_delay(cfg, "h100")
+    2.0
+    >>> provision_delay(cfg, None)
+    2.0
+    """
+    if tier is not None and cfg.provision_delay_by_tier:
+        return cfg.provision_delay_by_tier.get(tier, cfg.provision_delay_s)
+    return cfg.provision_delay_s
 
 
 class AutoscalerView(Protocol):
@@ -70,12 +110,28 @@ class AutoscalerPolicy:
 
     Policies are stateful (tick history); build a fresh one per run — same
     convention as Router objects.
+
+    On heterogeneous pools a policy also answers :meth:`select_tier` — which
+    hardware tier each scale-up should provision.  The base rule is
+    "cheapest candidate" (deterministic: cost, then name); selection must be
+    a pure function of the immutable specs (+ at most the view), never of
+    wall time or randomness, so the DES mirror reproduces it exactly.
+
+    >>> specs = [TierSpec("h100", "h100-sxm", 5.5 / 3600, 800.0, 0.02),
+    ...          TierSpec("l4", "l4", 0.8 / 3600, 200.0, 0.08)]
+    >>> AutoscalerPolicy().select_tier(None, specs).name
+    'l4'
     """
 
     name = "?"
 
     def decide(self, view: AutoscalerView) -> int:
         raise NotImplementedError
+
+    def select_tier(self, view: Optional[AutoscalerView],
+                    tiers: Sequence[TierSpec]) -> TierSpec:
+        assert tiers, "select_tier needs at least one candidate"
+        return min(tiers, key=lambda t: (t.cost_per_replica_s, t.name))
 
 
 class QueueDepthPolicy(AutoscalerPolicy):
@@ -113,11 +169,35 @@ class TTFTSLOPolicy(AutoscalerPolicy):
     def __init__(self, slo_ttft_s: float = 0.5,
                  target_attainment: float = 0.95,
                  window_s: float = 2.0,
-                 idle_depth: float = 0.5):
+                 idle_depth: float = 0.5,
+                 tier_headroom: float = 0.5):
         self.slo_ttft_s = slo_ttft_s
         self.target_attainment = target_attainment
         self.window_s = window_s
         self.idle_depth = idle_depth
+        self.tier_headroom = tier_headroom
+
+    def select_tier(self, view, tiers: Sequence[TierSpec]) -> TierSpec:
+        """Cheapest tier that *projects* to meet the TTFT SLO: its unloaded
+        service TTFT (prefill + first decode step, from the tier's own
+        predictor) must fit within ``tier_headroom`` of the SLO, the rest
+        being queueing budget.  No tier feasible → provision the fastest
+        (min projected TTFT) and let the next ticks keep scaling.
+
+        >>> fast = TierSpec("h100", "h100-sxm", 5.5 / 3600, 800.0, 0.02)
+        >>> slow = TierSpec("l4", "l4", 0.8 / 3600, 200.0, 0.08)
+        >>> TTFTSLOPolicy(slo_ttft_s=0.5).select_tier(None, [fast, slow]).name
+        'l4'
+        >>> TTFTSLOPolicy(slo_ttft_s=0.1).select_tier(None, [fast, slow]).name
+        'h100'
+        """
+        assert tiers, "select_tier needs at least one candidate"
+        budget = self.tier_headroom * self.slo_ttft_s
+        feasible = [t for t in tiers if t.projected_ttft_s <= budget]
+        if feasible:
+            return min(feasible,
+                       key=lambda t: (t.cost_per_replica_s, t.name))
+        return min(tiers, key=lambda t: (t.projected_ttft_s, t.name))
 
     def decide(self, view: AutoscalerView) -> int:
         ttfts = view.recent_ttfts(self.window_s)
@@ -138,7 +218,17 @@ class SchedulePolicy(AutoscalerPolicy):
     ``(virtual_time, delta)`` pairs applied at the first tick at-or-after
     each time.  Deterministic by construction — the elastic
     emulator-vs-DES parity scenarios use it so both sides scale at
-    identical virtual times regardless of load-probe raciness."""
+    identical virtual times regardless of load-probe raciness.
+
+    >>> from types import SimpleNamespace
+    >>> p = SchedulePolicy([(1.0, +1), (2.0, -1)])
+    >>> p.decide(SimpleNamespace(now=lambda: 0.5))
+    0
+    >>> p.decide(SimpleNamespace(now=lambda: 1.5))
+    1
+    >>> p.decide(SimpleNamespace(now=lambda: 1.6))   # event already consumed
+    0
+    """
 
     name = "schedule"
 
@@ -211,7 +301,9 @@ class Autoscaler:
     Actor when the cluster has a Timekeeper transport; wall-clock ticks
     otherwise, the sleep-mode degradation), ``stop()`` deregisters it.
     ``decision_log`` records ``(tick_time, delta_applied, active_after)`` for
-    benchmarks and tests.
+    benchmarks and tests; ``scaleups`` additionally records
+    ``(tick_time, tier_name)`` per provisioned replica (tier None =
+    homogeneous clone).
     """
 
     def __init__(self, cluster, policy: AutoscalerPolicy,
@@ -223,6 +315,12 @@ class Autoscaler:
         self.name = name
         self.view: AutoscalerView = _ClusterView(cluster)
         self.decision_log: List[tuple] = []
+        self.scaleups: List[Tuple[float, Optional[str]]] = []
+        # candidate TierSpecs for tier-selecting scale-up, resolved through
+        # the cluster's spec cache/factory so router weights, cost
+        # accounting, and selection all share one arithmetic
+        self.tier_candidates: List[TierSpec] = [
+            cluster.tier_spec(t) for t in self.cfg.tiers]
         self._stop = threading.Event()
         self._thread: Optional[threading.Thread] = None
         self._client: Optional[TimeJumpClient] = None
@@ -286,8 +384,13 @@ class Autoscaler:
             if delta > 0:
                 delta = min(delta, cfg.max_replicas - committed)
                 for _ in range(max(0, delta)):
+                    tier = None
+                    if self.tier_candidates:
+                        tier = self.policy.select_tier(
+                            self.view, self.tier_candidates).name
+                    self.scaleups.append((self.view.now(), tier))
                     self._provisioning += 1
-                    self._spawn_provisioner()
+                    self._spawn_provisioner(tier)
                 return max(0, delta)
             if delta < 0:
                 # never drain below min, and count in-flight provisions as
@@ -312,34 +415,38 @@ class Autoscaler:
                 return None
             return max(self.cluster.active)
 
-    def _spawn_provisioner(self) -> None:
+    def _spawn_provisioner(self, tier: Optional[str] = None) -> None:
         """Model the scale-up latency as a virtual-time jump.
 
         The provisioner's actor is registered *here*, in the tick thread —
         an Actor between jumps — so the barrier cannot advance past the
         provisioning interval before the jump request lands (§4.3 trick,
-        same as the PD KV movers)."""
+        same as the PD KV movers).  ``tier`` is the policy's tier choice
+        (made at tick time; the provisioner only pays that tier's delay and
+        joins the replica)."""
         client = None
         if self.cluster.transport is not None:
             client = TimeJumpClient(
                 self.cluster.transport,
                 f"{self.name}-prov-{next(self._prov_ids)}")
-        t = threading.Thread(target=self._provision, args=(client,),
+        t = threading.Thread(target=self._provision, args=(client, tier),
                              name=f"{self.name}-prov", daemon=True)
         t.start()
         self._prov_threads.append(t)
 
-    def _provision(self, client: Optional[TimeJumpClient]) -> None:
+    def _provision(self, client: Optional[TimeJumpClient],
+                   tier: Optional[str] = None) -> None:
         try:
+            delay = provision_delay(self.cfg, tier)
             try:
                 if client is not None:
-                    client.time_jump(self.cfg.provision_delay_s)
+                    client.time_jump(delay)
                 else:
-                    self.cluster.clock.wall.sleep(self.cfg.provision_delay_s)
+                    self.cluster.clock.wall.sleep(delay)
             except (KeyError, RuntimeError):
                 return                    # torn down mid-provision
             if not self._stop.is_set():
-                self.cluster.add_replica()
+                self.cluster.add_replica(tier=tier)
         finally:
             if client is not None:
                 client.deregister()

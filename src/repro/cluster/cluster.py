@@ -21,10 +21,23 @@ config-sweep story needs at scale:
   prefills into the decode pool, unifying ``repro.serving.disagg`` behind
   the Router interface.
 
+* **Heterogeneous pools** — each replica may run on a different hardware
+  *tier* (chip name from ``repro.core.hardware``): its predictor, KV-cache
+  capacity, and $/replica-second follow the chip, routing policies see
+  per-replica throughput weights and costs, and
+  :meth:`Cluster.add_replica` accepts a tier so the autoscaler can scale
+  into cheaper chips (see ``repro.cluster.tiers``).
+
 The cluster exposes the same non-blocking ``submit`` / ``poll`` /
 ``wait_until_complete`` surface as a single engine, so
 ``repro.serving.benchmark.BenchmarkRunner`` drives a 1-replica engine and an
 N-replica cluster through one code path (Workload → Cluster → Metrics).
+
+Listener invariant (closed-loop workloads build on this): completion
+listeners run *synchronously in the finishing replica's step thread*, so any
+actor a listener registers with the Timekeeper exists **before** the
+finishing replica re-enters the barrier — virtual time can never jump past
+work a completion is about to schedule (§4.3).
 """
 
 from __future__ import annotations
@@ -48,6 +61,7 @@ from repro.serving.request import Request, RequestState
 from repro.serving.scheduler import EngineConfig
 
 from .router import PDPoolRouter, Router, make_router
+from .tiers import TierSpec, make_tier_spec, tier_engine_cfg
 
 __all__ = ["ClusterConfig", "Cluster", "build_cluster"]
 
@@ -55,6 +69,11 @@ __all__ = ["ClusterConfig", "Cluster", "build_cluster"]
 @dataclass
 class ClusterConfig:
     kv_link_bandwidth: float = 50e9   # PD pools: inter-replica KV fabric (B/s)
+    # Per-replica hardware tiers (chip names); None = homogeneous/untiered.
+    # Carried through build_cluster so stats/cost accounting can report the
+    # mix; the authoritative per-replica record is Cluster.replica_tiers
+    # (which keeps growing as the autoscaler adds replicas).
+    tiers: Optional[List[Optional[str]]] = None
 
 
 class Cluster:
@@ -70,6 +89,8 @@ class Cluster:
         model_cfg: Optional[ModelConfig] = None,
         cfg: Optional[ClusterConfig] = None,
         replica_factory=None,
+        tier_specs: Optional[Dict[str, TierSpec]] = None,
+        tier_spec_factory=None,
     ):
         assert engines, "a cluster needs at least one replica"
         assert router.num_replicas == len(engines), \
@@ -99,6 +120,21 @@ class Cluster:
         # virtual times; None added_at means "member since cluster start".
         self._replica_factory = replica_factory
         self._membership_lock = threading.RLock()
+        # ---- heterogeneous tiers ----
+        # replica_tiers[i] is replica i's tier name (None = untiered);
+        # tier_specs caches TierSpec per tier name, lazily extended through
+        # tier_spec_factory when the autoscaler scales into a new tier.
+        self.replica_tiers: List[Optional[str]] = list(
+            (self.cfg.tiers or [None] * len(self.engines)))
+        assert len(self.replica_tiers) == len(self.engines), \
+            "need one tier entry per replica"
+        self._tier_specs: Dict[str, TierSpec] = dict(tier_specs or {})
+        self._tier_spec_factory = tier_spec_factory
+        for i, t in enumerate(self.replica_tiers):
+            if t is not None:
+                spec = self.tier_spec(t)
+                self.router.set_tier(i, weight=spec.throughput_factor,
+                                     cost=spec.cost_per_replica_s)
         self.active: List[int] = list(range(len(self.engines)))
         self._membership: Dict[int, dict] = {
             i: {"added": None, "drain_started": None, "drained": None}
@@ -214,28 +250,55 @@ class Cluster:
             if mover is not None:
                 mover.deregister()
 
+    # ------------------------------------------------------------- tiers --
+    def tier_spec(self, tier: str) -> TierSpec:
+        """The :class:`TierSpec` for ``tier``, computed lazily (and cached)
+        through the factory ``build_cluster`` wires — so scaling into a tier
+        the initial pool never used still gets consistent weights/costs."""
+        spec = self._tier_specs.get(tier)
+        if spec is None:
+            assert self._tier_spec_factory is not None, \
+                f"no spec for tier {tier!r} and no tier_spec_factory"
+            spec = self._tier_spec_factory(tier)
+            self._tier_specs[tier] = spec
+        return spec
+
     # --------------------------------------------------- elastic membership --
-    def add_replica(self, engine: Optional[LLMEngine] = None) -> int:
+    def add_replica(self, engine: Optional[LLMEngine] = None,
+                    tier: Optional[str] = None) -> int:
         """Scale up: join a new replica to the routing set.
 
         ``engine`` defaults to one built by the cluster's replica factory
         (``build_cluster`` wires one that clones the last replica's config
-        onto the shared Timekeeper/transport).  The join is immediate —
-        provisioning delay is the *caller's* job (the Autoscaler models it as
-        a virtual-time jump before calling this).  Returns the new index.
+        onto the shared Timekeeper/transport).  ``tier`` picks the hardware
+        tier of the factory-built replica (tier-selecting autoscaling);
+        omitted, the new replica clones the last replica's tier.  The join
+        is immediate — provisioning delay is the *caller's* job (the
+        Autoscaler models it as a virtual-time jump before calling this).
+        Returns the new index.
         """
         assert not self._pd, "elastic membership is not supported for pd_pool"
         with self._submit_lock, self._membership_lock:
             idx = len(self.engines)
+            if tier is None:
+                tier = self.replica_tiers[-1] if engine is None else None
             if engine is None:
                 assert self._replica_factory is not None, \
                     "no replica factory: pass an engine explicitly"
-                engine = self._replica_factory(idx)
+                # factory contract: (index, tier) -> LLMEngine, tier None
+                # meaning "whatever the config declares for this index"
+                engine = self._replica_factory(idx, tier)
             assert engine.clock is self.clock, \
                 "new replica must share the cluster's clock"
             engine.on_finish = self._complete
             self.engines.append(engine)
-            self.router.grow(idx + 1)
+            self.replica_tiers.append(tier)
+            if tier is not None:
+                spec = self.tier_spec(tier)
+                self.router.grow(idx + 1, weight=spec.throughput_factor,
+                                 cost=spec.cost_per_replica_s)
+            else:
+                self.router.grow(idx + 1)
             self.active.append(idx)
             self._membership[idx] = {"added": self.clock.now(),
                                      "drain_started": None, "drained": None}
@@ -288,21 +351,49 @@ class Cluster:
         with self._membership_lock:
             return len(self.active)
 
+    def _membership_windows(self, t_start: float, t_end: float) -> List[float]:
+        """Per-replica on-seconds overlapping [t_start, t_end].  A drained
+        replica stops accruing at the finish of its last in-flight request;
+        an added one starts at its (post-provisioning-delay) join time.
+        Caller holds ``_membership_lock``."""
+        out = []
+        for idx in range(len(self.engines)):
+            m = self._membership[idx]
+            a = t_start if m["added"] is None else max(t_start, m["added"])
+            drained = m["drained"]
+            if drained is None and idx in self._draining:
+                drained = t_end          # still draining at window end
+            b = t_end if drained is None else min(t_end, drained)
+            out.append(max(0.0, b - a))
+        return out
+
     def replica_seconds(self, t_start: float, t_end: float) -> float:
-        """Cost proxy: total replica-on time (virtual seconds) overlapping
-        the window [t_start, t_end].  A drained replica stops accruing at the
-        finish of its last in-flight request; an added one starts accruing at
-        its (post-provisioning-delay) join time."""
+        """Capacity proxy: total replica-on time (virtual seconds)
+        overlapping the window [t_start, t_end]."""
         with self._membership_lock:
+            return sum(self._membership_windows(t_start, t_end))
+
+    def tier_seconds(self, t_start: float, t_end: float) -> Dict[str, float]:
+        """Replica-on seconds per tier name over the window (untiered
+        replicas accrue under the key ``None``)."""
+        with self._membership_lock:
+            windows = self._membership_windows(t_start, t_end)
+            out: Dict[str, float] = {}
+            for tier, w in zip(self.replica_tiers, windows):
+                out[tier] = out.get(tier, 0.0) + w
+            return out
+
+    def replica_cost(self, t_start: float, t_end: float) -> float:
+        """Dollar cost of the window: each replica's on-seconds × its tier's
+        $/replica-second.  Untiered replicas cost $0 (no tier, no price) —
+        a fully untiered cluster reports 0.0 and ``replica_seconds`` stays
+        the cost proxy."""
+        with self._membership_lock:
+            windows = self._membership_windows(t_start, t_end)
             total = 0.0
-            for idx in range(len(self.engines)):
-                m = self._membership[idx]
-                a = t_start if m["added"] is None else max(t_start, m["added"])
-                drained = m["drained"]
-                if drained is None and idx in self._draining:
-                    drained = t_end      # still draining at window end
-                b = t_end if drained is None else min(t_end, drained)
-                total += max(0.0, b - a)
+            for tier, w in zip(self.replica_tiers, windows):
+                if tier is not None:
+                    total += w * self.tier_spec(tier).cost_per_replica_s
             return total
 
     def membership_events(self) -> List[dict]:
@@ -375,6 +466,7 @@ class Cluster:
             "num_replicas": len(self.engines),
             "num_active": self.num_active(),
             "membership": self.membership_events(),
+            "tiers": list(self.replica_tiers),
             "policy": getattr(self.router, "policy", "?"),
             "finished": len(self.finished),
             "steps": sum(r["steps"] for r in per_replica),
@@ -415,6 +507,9 @@ def build_cluster(
     policy: str = "round_robin",
     mode: str = "emulate",
     predictor: Optional[RuntimePredictor] = None,
+    tiers: Optional[Union[str, Sequence[str]]] = None,
+    tier_predictors: Optional[Dict[str, RuntimePredictor]] = None,
+    tier_specs: Optional[Dict[str, TierSpec]] = None,
     jitter_cooldown: float = 0.0,
     kv_link_bandwidth: float = 50e9,
     wall: Optional[WallSource] = None,
@@ -425,6 +520,15 @@ def build_cluster(
 
     ``engine_cfg`` may be a single config (homogeneous replicas) or one per
     replica (heterogeneous — e.g. differently-sized prefill/decode pools).
+    ``tiers`` makes the pool hardware-heterogeneous: a chip/tier name per
+    replica (or one name for all) — each replica's config is re-derived for
+    its chip (``chip`` field + KV capacity via
+    :func:`~repro.cluster.tiers.tier_engine_cfg`), its predictor follows the
+    chip, and routing/autoscaling see per-tier throughput weights and
+    $/replica-second.  ``tier_predictors`` overrides the predictor per tier
+    (benchmarks inject StaticPredictors); ``tier_specs`` injects
+    pre-computed :class:`TierSpec` objects so an experiment can share the
+    exact same tier arithmetic with the DES baseline.
     ``wall`` injects a deterministic wall source for reproducibility tests.
     ``mode`` is "emulate" (time-warp, the default) or "sleep" (strawman).
     """
@@ -434,18 +538,52 @@ def build_cluster(
             if isinstance(engine_cfg, EngineConfig) else list(engine_cfg))
     assert len(cfgs) == num_replicas, \
         f"need {num_replicas} engine configs, got {len(cfgs)}"
+    if isinstance(tiers, str):
+        tiers = [tiers] * num_replicas
+    tiers = list(tiers) if tiers is not None else None
+    if tiers is not None:
+        assert len(tiers) == num_replicas, \
+            f"need {num_replicas} tier names, got {len(tiers)}"
 
     router = make_router(policy, num_replicas, **(router_kwargs or {}))
+
+    def resolve_cfg(i: int, tier: Optional[str]) -> EngineConfig:
+        # autoscale-added replicas (i >= num_replicas) clone the last
+        # declared config; a tier re-derives chip + KV capacity
+        cfg = cfgs[min(i, len(cfgs) - 1)]
+        return cfg if tier is None else tier_engine_cfg(cfg, tier, model_cfg)
+
+    def resolve_pred(cfg: EngineConfig,
+                     tier: Optional[str]) -> RuntimePredictor:
+        if tier is not None and tier_predictors and tier in tier_predictors:
+            return tier_predictors[tier]
+        return predictor or default_predictor(model_cfg, cfg)
+
+    def default_tier(i: int) -> Optional[str]:
+        return None if tiers is None else tiers[min(i, len(tiers) - 1)]
+
+    def spec_factory(tier: str) -> TierSpec:
+        # base config: the first replica declared on this tier (so a
+        # heterogeneous engine_cfg list yields specs matching the replicas
+        # that actually run the tier); unknown tiers — autoscaler candidates
+        # the initial pool never used — clone the last declared config
+        base = cfgs[-1]
+        if tiers is not None and tier in tiers:
+            base = cfgs[min(tiers.index(tier), len(cfgs) - 1)]
+        cfg = tier_engine_cfg(base, tier, model_cfg)
+        return make_tier_spec(tier, cfg, predictor=resolve_pred(cfg, tier))
+
+    cluster_cfg = ClusterConfig(kv_link_bandwidth=kv_link_bandwidth,
+                                tiers=tiers)
 
     if mode == "emulate":
         tk = Timekeeper(clock=VirtualClock(wall), jitter_cooldown=jitter_cooldown)
         transport = LocalTransport(tk)
 
-        def make_engine(i: int) -> LLMEngine:
-            # autoscale-added replicas (i >= num_replicas) clone the last
-            # declared config
-            cfg = cfgs[min(i, len(cfgs) - 1)]
-            pred = predictor or default_predictor(model_cfg, cfg)
+        def make_engine(i: int, tier: Optional[str] = None) -> LLMEngine:
+            tier = tier if tier is not None else default_tier(i)
+            cfg = resolve_cfg(i, tier)
+            pred = resolve_pred(cfg, tier)
             chip = get_chip(cfg.chip)
             n_dev = cfg.tp * cfg.pp
             devices = VirtualDeviceContext(n_dev, chip)
@@ -460,22 +598,22 @@ def build_cluster(
 
         engines = [make_engine(i) for i in range(num_replicas)]
         return Cluster(engines, router, transport=transport, timekeeper=tk,
-                       model_cfg=model_cfg,
-                       cfg=ClusterConfig(kv_link_bandwidth=kv_link_bandwidth),
-                       replica_factory=make_engine)
+                       model_cfg=model_cfg, cfg=cluster_cfg,
+                       replica_factory=make_engine,
+                       tier_specs=tier_specs, tier_spec_factory=spec_factory)
 
     if mode == "sleep":
         clock = VirtualClock(wall)
 
-        def make_engine(i: int) -> LLMEngine:
-            cfg = cfgs[min(i, len(cfgs) - 1)]
-            pred = predictor or default_predictor(model_cfg, cfg)
-            runner = SleepModelRunner(pred, clock)
+        def make_engine(i: int, tier: Optional[str] = None) -> LLMEngine:
+            tier = tier if tier is not None else default_tier(i)
+            cfg = resolve_cfg(i, tier)
+            runner = SleepModelRunner(resolve_pred(cfg, tier), clock)
             return LLMEngine(cfg, runner, clock, name=f"{name}-r{i}")
 
         engines = [make_engine(i) for i in range(num_replicas)]
-        return Cluster(engines, router, model_cfg=model_cfg,
-                       cfg=ClusterConfig(kv_link_bandwidth=kv_link_bandwidth),
-                       replica_factory=make_engine)
+        return Cluster(engines, router, model_cfg=model_cfg, cfg=cluster_cfg,
+                       replica_factory=make_engine,
+                       tier_specs=tier_specs, tier_spec_factory=spec_factory)
 
     raise ValueError(f"unknown cluster mode {mode!r} (emulate | sleep)")

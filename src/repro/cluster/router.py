@@ -17,7 +17,11 @@ Policies
 ``least_outstanding_tokens``
     Place on the replica with the fewest remaining scheduled tokens
     (prefill left + decode left) — the token-aware analogue of
-    least-outstanding-requests, robust to skewed prompt lengths.
+    least-outstanding-requests, robust to skewed prompt lengths.  On a
+    heterogeneous pool the backlog is divided by the replica's tier
+    throughput weight, so "fewest tokens" becomes "shortest estimated
+    drain time" (an idle L4 should not outrank a lightly loaded H100 that
+    clears its queue sooner).
 ``prefix_affinity``
     Score replicas by their radix prefix-cache hit potential for the
     request's prompt and route to the best scorer; unseen prefixes fall
@@ -30,6 +34,38 @@ Policies
     least-loaded prefill replica, and after the KV handoff the cluster asks
     :meth:`PDPoolRouter.route_decode` for the decode-side placement.  This
     unifies ``repro.serving.disagg`` behind the same Router interface.
+``cost_normalized_load``
+    Heterogeneous-pool placement by *marginal dollar cost*: each replica is
+    scored by its estimated drain time (weighted backlog, as in
+    ``least_outstanding_tokens``) multiplied by its tier's $/replica-second,
+    so comparable load lands on the cheaper tier while a genuinely shorter
+    queue on an expensive tier still wins.  With no tier info configured
+    every weight/cost is 1.0 and the policy degrades to exactly
+    ``least_outstanding_tokens``.
+
+Tier info reaches a router through :meth:`Router.set_tier` (and the
+``weight``/``cost`` keywords of :meth:`Router.grow` for autoscale-added
+replicas); both the emulated :class:`~repro.cluster.cluster.Cluster` and the
+DES baseline derive those numbers from the same
+:class:`~repro.cluster.tiers.TierSpec` objects, so identically-constructed
+router instances behave identically on both sides.
+
+Invariant: ``route`` only ever returns an index from the ``active`` list it
+was given — a draining or not-yet-provisioned replica can never receive a
+fresh request, whatever the policy.  Deterministic tie-breaking (lowest
+index) is part of every policy's contract; it is what makes same-seed runs
+byte-identical.
+
+>>> class V:
+...     def __init__(self, tokens): self._t = tokens
+...     def outstanding_tokens(self): return self._t
+...     def prefix_match_len(self, toks): return 0
+>>> r = make_router("least_outstanding_tokens", 2)
+>>> r.route(None, [V(100), V(40)])
+1
+>>> r.set_tier(0, weight=4.0)          # replica 0 is a 4x-faster tier
+>>> r.route(None, [V(100), V(40)])     # 100/4 = 25 beats 40/1
+0
 """
 
 from __future__ import annotations
@@ -41,6 +77,7 @@ __all__ = [
     "Router",
     "RoundRobinRouter",
     "LeastOutstandingTokensRouter",
+    "CostNormalizedLoadRouter",
     "PrefixAffinityRouter",
     "PDPoolRouter",
     "ROUTER_POLICIES",
@@ -70,15 +107,29 @@ class Router:
     replicas leave it, freshly provisioned ones join it).  ``num_replicas``
     grows via :meth:`grow` when the cluster adds a replica; policies must
     only ever pick from ``active``.
+
+    Heterogeneous pools: ``weights[i]`` (tier decode throughput, default 1.0)
+    and ``costs[i]`` ($/replica-second, default 0.0 = untiered) let policies
+    normalize load and price placement per replica.  Both lists always cover
+    ``num_replicas`` entries.
     """
 
     def __init__(self, num_replicas: int):
         assert num_replicas >= 1
         self.num_replicas = num_replicas
         self.decisions: List[int] = []       # audit log (tests/benchmarks)
+        self.weights: List[float] = [1.0] * num_replicas
+        self.costs: List[float] = [0.0] * num_replicas
 
     def route(self, req, views: Sequence[ReplicaView],
               active: Optional[Sequence[int]] = None) -> int:
+        """Place one request; returns the chosen replica index.
+
+        ``views`` are the per-replica :class:`ReplicaView` probes (racy,
+        non-blocking reads); ``active`` restricts the choice to the current
+        routing membership.  The chosen index is appended to
+        :attr:`decisions` — the audit log tests and benchmarks replay.
+        """
         act = list(active) if active is not None else list(range(len(views)))
         assert act, "routing needs at least one active replica"
         idx = self._pick(req, views, act)
@@ -90,20 +141,41 @@ class Router:
               active: List[int]) -> int:
         raise NotImplementedError
 
-    def grow(self, num_replicas: int) -> None:
-        """Cluster scale-up: the replica index space expanded."""
+    def set_tier(self, idx: int, *, weight: float = 1.0,
+                 cost: float = 0.0) -> None:
+        """Record replica ``idx``'s tier throughput weight and $/second."""
+        assert 0 <= idx < self.num_replicas and weight > 0
+        self.weights[idx] = weight
+        self.costs[idx] = cost
+
+    def grow(self, num_replicas: int, *, weight: float = 1.0,
+             cost: float = 0.0) -> None:
+        """Cluster scale-up: the replica index space expanded.  ``weight``/
+        ``cost`` describe the tier of every newly added index (scale-up adds
+        one replica at a time in practice)."""
         assert num_replicas >= self.num_replicas
+        while len(self.weights) < num_replicas:
+            self.weights.append(weight)
+            self.costs.append(cost)
         self.num_replicas = num_replicas
 
     # replicas a fresh request may land on (overridden by pd_pool)
     def intake_indices(self) -> List[int]:
         return list(range(self.num_replicas))
 
+    # ------------------------------------------------ tier-aware scoring --
+    def _drain_time(self, views, i: int) -> float:
+        """Estimated seconds to clear replica ``i``'s backlog: outstanding
+        tokens over tier throughput.  With default weights this orders
+        replicas exactly like raw outstanding tokens."""
+        return views[i].outstanding_tokens() / self.weights[i]
 
-def _least_outstanding(views, indices) -> int:
-    """Lowest-load replica among ``indices``; lowest index wins ties so the
-    decision is deterministic under equal (or stale-equal) loads."""
-    return min(indices, key=lambda i: (views[i].outstanding_tokens(), i))
+    def _shortest_drain(self, views, indices) -> int:
+        """Lowest-load replica among ``indices`` by estimated drain time
+        (tier-weighted; plain outstanding tokens on homogeneous pools);
+        lowest index wins ties so the decision is deterministic under equal
+        (or stale-equal) loads."""
+        return min(indices, key=lambda i: (self._drain_time(views, i), i))
 
 
 class RoundRobinRouter(Router):
@@ -123,10 +195,32 @@ class RoundRobinRouter(Router):
 
 
 class LeastOutstandingTokensRouter(Router):
+    """Shortest estimated drain time (= fewest outstanding tokens on a
+    homogeneous pool; tier-throughput-normalized on a mixed one)."""
+
     policy = "least_outstanding_tokens"
 
     def _pick(self, req, views, active) -> int:
-        return _least_outstanding(views, active)
+        return self._shortest_drain(views, active)
+
+
+class CostNormalizedLoadRouter(Router):
+    """Cheapest marginal placement on a heterogeneous pool.
+
+    Score per replica: estimated drain time × tier $/second — roughly "what
+    does parking this request behind replica *i*'s queue cost".  Untiered
+    replicas (cost 0.0) are scored with cost 1.0 so the policy stays a
+    well-defined load balancer on homogeneous pools.  Ties break toward the
+    cheaper tier, then the lower index.
+    """
+
+    policy = "cost_normalized_load"
+
+    def _pick(self, req, views, active) -> int:
+        def score(i: int):
+            cost = self.costs[i] if self.costs[i] > 0 else 1.0
+            return (self._drain_time(views, i) * cost, cost, i)
+        return min(active, key=score)
 
 
 class PrefixAffinityRouter(Router):
@@ -156,20 +250,20 @@ class PrefixAffinityRouter(Router):
         if not toks:
             # No routing key (e.g. a DES SimRequest built from lengths
             # only): nothing to be affine to — place by load.
-            return _least_outstanding(views, active)
+            return self._shortest_drain(views, active)
         tokens = list(toks)
         scores = {i: views[i].prefix_match_len(tokens) for i in active}
         best = max(scores.values())
         if best > 0:
             idx = min((i for i in active if scores[i] == best),
-                      key=lambda i: (views[i].outstanding_tokens(), i))
+                      key=lambda i: (self._drain_time(views, i), i))
             self._sticky[self._key(tokens)] = idx
             return idx
         key = self._key(tokens)
         idx = self._sticky.get(key)
         if idx is None or idx not in active:
             # unseen session, or its sticky replica drained away: re-place
-            idx = _least_outstanding(views, active)
+            idx = self._shortest_drain(views, active)
             self._sticky[key] = idx
         return idx
 
@@ -201,24 +295,32 @@ class PDPoolRouter(Router):
     def _pick(self, req, views, active) -> int:
         pool = [i for i in self.prefill_indices if i in active]
         assert pool, "pd_pool: no active prefill replica"
-        return _least_outstanding(views, pool)
+        return self._shortest_drain(views, pool)
 
     def route_decode(self, req, views: Sequence[ReplicaView],
                      active: Optional[Sequence[int]] = None) -> int:
         pool = (self.decode_indices if active is None
                 else [i for i in self.decode_indices if i in active])
         assert pool, "pd_pool: no active decode replica"
-        return _least_outstanding(views, pool)
+        return self._shortest_drain(views, pool)
 
 
 ROUTER_POLICIES = {
     cls.policy: cls
     for cls in (RoundRobinRouter, LeastOutstandingTokensRouter,
-                PrefixAffinityRouter, PDPoolRouter)
+                CostNormalizedLoadRouter, PrefixAffinityRouter, PDPoolRouter)
 }
 
 
 def make_router(policy: str, num_replicas: int, **kwargs) -> Router:
+    """Build a fresh router (routers are stateful — one per run).
+
+    >>> make_router("round_robin", 2).policy
+    'round_robin'
+    >>> sorted(ROUTER_POLICIES)      # doctest: +NORMALIZE_WHITESPACE
+    ['cost_normalized_load', 'least_outstanding_tokens', 'pd_pool',
+     'prefix_affinity', 'round_robin']
+    """
     try:
         cls = ROUTER_POLICIES[policy]
     except KeyError:

@@ -24,6 +24,16 @@ the highest-index active replica (the same deterministic victim rule the
 emulator's Autoscaler uses), so emulator-vs-DES parity extends to runs where
 replicas join and leave mid-stream.
 
+Heterogeneous mode: ``replica_tiers`` gives each replica a hardware tier;
+``tier_predictors`` supplies the per-tier step-time predictors and
+``tier_specs`` the shared :class:`~repro.cluster.tiers.TierSpec` arithmetic
+(router throughput weights, $/replica-second, tier-selection inputs).  Build
+the spec dict **once** (``repro.cluster.tiers.make_tier_specs``) and pass the
+same mapping to ``build_cluster`` and here: tier-aware routing weights,
+scale-up tier choices (``policy.select_tier`` at tick time), and per-tier
+provisioning delays then agree between emulator and DES by construction,
+extending the parity argument to mixed pools.
+
 Closed-loop mode: ``run`` also accepts a
 :class:`~repro.workload.session.SessionWorkload`; turn completions re-inject
 the pre-sampled follow-up turns through the *same* ``follow_up`` rule the
@@ -92,7 +102,8 @@ class _ReplicaState:
     semantic gap the multi-replica comparison measures.
     """
 
-    def __init__(self, index: int, added_at: float = 0.0):
+    def __init__(self, index: int, added_at: float = 0.0,
+                 tier: Optional[str] = None, predictor=None):
         self.index = index
         self.waiting: List[SimRequest] = []
         self.running: List[SimRequest] = []
@@ -100,6 +111,8 @@ class _ReplicaState:
         self.in_flight_batch: List[Tuple[SimRequest, int]] = []
         self.added_at = added_at
         self.drained_at: Optional[float] = None
+        self.tier = tier                 # hardware tier name (None = untiered)
+        self.predictor = predictor       # tier-resolved step-time predictor
 
     # ------------------------------------------------------- ReplicaView --
     def outstanding_tokens(self) -> int:
@@ -156,12 +169,29 @@ class DiscreteEventSimulator:
         router=None,                 # repro.cluster.router.Router
         autoscaler_policy=None,      # repro.cluster.autoscaler.AutoscalerPolicy
         autoscaler_cfg=None,         # repro.cluster.autoscaler.AutoscalerConfig
+        replica_tiers=None,          # per-replica tier names (heterogeneous)
+        tier_predictors=None,        # tier name -> RuntimePredictor
+        tier_specs=None,             # tier name -> repro.cluster.tiers.TierSpec
     ):
         self.predictor = predictor
         # per-instance default: a shared mutable default DESConfig would
         # alias config state across simulators
         self.cfg = cfg if cfg is not None else DESConfig()
         self.num_replicas = num_replicas
+        self.replica_tiers = (list(replica_tiers) if replica_tiers is not None
+                              else [None] * num_replicas)
+        if len(self.replica_tiers) != num_replicas:
+            raise ValueError(
+                f"need {num_replicas} tier names, "
+                f"got {len(self.replica_tiers)}")
+        self.tier_predictors = dict(tier_predictors or {})
+        self.tier_specs = dict(tier_specs or {})
+        for t in set(self.replica_tiers):
+            if t is not None and t not in self.tier_specs:
+                raise ValueError(
+                    f"replica tier {t!r} has no TierSpec; build one dict via "
+                    "repro.cluster.tiers.make_tier_specs and share it with "
+                    "build_cluster")
         if router is not None and getattr(router, "policy", None) == "pd_pool":
             raise ValueError(
                 "the DES baseline does not model PD disaggregation "
@@ -191,12 +221,29 @@ class DiscreteEventSimulator:
             session_id=getattr(r, "session_id", None),
             turn_index=getattr(r, "turn_index", 0))
 
+    def _tier_predictor(self, tier: Optional[str]):
+        if tier is not None and tier in self.tier_predictors:
+            return self.tier_predictors[tier]
+        return self.predictor
+
     def replica_seconds(self, t_end: float) -> float:
-        """Cost proxy matching :meth:`Cluster.replica_seconds`."""
+        """Capacity proxy matching :meth:`Cluster.replica_seconds`."""
         total = 0.0
         for rep in self.replicas:
             end = rep.drained_at if rep.drained_at is not None else t_end
             total += max(0.0, min(end, t_end) - rep.added_at)
+        return total
+
+    def replica_cost(self, t_end: float) -> float:
+        """Dollar cost matching :meth:`Cluster.replica_cost` (untiered
+        replicas cost $0)."""
+        total = 0.0
+        for rep in self.replicas:
+            if rep.tier is None:
+                continue
+            end = rep.drained_at if rep.drained_at is not None else t_end
+            on = max(0.0, min(end, t_end) - rep.added_at)
+            total += on * self.tier_specs[rep.tier].cost_per_replica_s
         return total
 
     # ---------------------------------------------------------------- run --
@@ -221,13 +268,32 @@ class DiscreteEventSimulator:
         sims: List[SimRequest] = [self._to_sim(r, next(req_counter))
                                   for r in source]
 
-        self.replicas = [_ReplicaState(i) for i in range(self.num_replicas)]
+        self.replicas = [
+            _ReplicaState(i, tier=self.replica_tiers[i],
+                          predictor=self._tier_predictor(self.replica_tiers[i]))
+            for i in range(self.num_replicas)
+        ]
+        # mirror of Cluster.__init__'s tier wiring: routing policies see the
+        # same per-replica throughput weights / $ rates on both sides
+        for i, t in enumerate(self.replica_tiers):
+            if t is not None:
+                spec = self.tier_specs[t]
+                router.set_tier(i, weight=spec.throughput_factor,
+                                cost=spec.cost_per_replica_s)
         self.active = list(range(self.num_replicas))
         self._finish_log = []
         asc_cfg = self.autoscaler_cfg
         if self.autoscaler_policy is not None and asc_cfg is None:
             from repro.cluster.autoscaler import AutoscalerConfig
             asc_cfg = AutoscalerConfig()
+        asc_tier_specs = []
+        if asc_cfg is not None and getattr(asc_cfg, "tiers", ()):
+            missing = [t for t in asc_cfg.tiers if t not in self.tier_specs]
+            if missing:
+                raise ValueError(
+                    f"autoscaler tiers {missing} have no TierSpec; pass "
+                    "tier_specs= (shared with the emulated cluster)")
+            asc_tier_specs = [self.tier_specs[t] for t in asc_cfg.tiers]
         view = _DESView(self)
 
         counter = itertools.count()
@@ -274,7 +340,7 @@ class DiscreteEventSimulator:
                 SeqSpec(n, s.num_prefilled + s.num_generated + n)
                 for s, n in batch
             ])
-            dur = self.predictor.predict_step(spec).total + self.cfg.step_overhead_s
+            dur = rep.predictor.predict_step(spec).total + self.cfg.step_overhead_s
             rep.in_flight_batch = batch
             rep.step_in_flight = True
             heapq.heappush(
@@ -289,14 +355,21 @@ class DiscreteEventSimulator:
 
         def apply_autoscale(delta: int):
             nonlocal provisioning
+            from repro.cluster.autoscaler import provision_delay
             committed = len(self.active) + provisioning
             if delta > 0:
                 delta = min(delta, asc_cfg.max_replicas - committed)
                 for _ in range(max(0, delta)):
                     provisioning += 1
+                    # tier choice happens at tick time, mirroring
+                    # Autoscaler._apply; the PROVISION event carries it
+                    tier = None
+                    if asc_tier_specs:
+                        tier = self.autoscaler_policy.select_tier(
+                            view, asc_tier_specs).name
                     heapq.heappush(
-                        events, (now + asc_cfg.provision_delay_s,
-                                 next(counter), self.PROVISION, None))
+                        events, (now + provision_delay(asc_cfg, tier),
+                                 next(counter), self.PROVISION, tier))
             elif delta < 0:
                 allowed = max(0, committed - asc_cfg.min_replicas)
                 for _ in range(min(-delta, allowed)):
@@ -359,8 +432,19 @@ class DiscreteEventSimulator:
             else:  # PROVISION
                 provisioning -= 1
                 idx = len(self.replicas)
-                self.replicas.append(_ReplicaState(idx, added_at=now))
+                # payload is the tier chosen at tick time; None clones the
+                # last replica's tier (Cluster.add_replica's default)
+                tier = payload if payload is not None \
+                    else self.replicas[-1].tier
+                self.replicas.append(_ReplicaState(
+                    idx, added_at=now, tier=tier,
+                    predictor=self._tier_predictor(tier)))
                 self.active.append(idx)
-                router.grow(idx + 1)
+                if tier is not None:
+                    spec = self.tier_specs[tier]
+                    router.grow(idx + 1, weight=spec.throughput_factor,
+                                cost=spec.cost_per_replica_s)
+                else:
+                    router.grow(idx + 1)
 
         return sims

@@ -89,6 +89,11 @@ class BenchmarkResult:
     # (elastic membership: drained replicas stop accruing, added ones start
     # at their join time; fixed clusters: num_replicas * makespan)
     replica_seconds: float = 0.0
+    # heterogeneous pools: replica-on seconds per hardware tier over the run
+    # window, and their dollar cost (per-tier $/replica-second from the
+    # ChipSpec).  0.0 / None when the target is untiered.
+    cost_dollars: float = 0.0
+    tier_seconds: Optional[Dict[str, float]] = None
     # closed-loop session stats (None for open-loop workloads): percentiles
     # over *per-session mean* TTFT / TPOT — the chat-level experience
     num_sessions: int = 0
@@ -146,6 +151,8 @@ class BenchmarkResult:
         if self.num_replicas > 1:
             out["num_replicas"] = self.num_replicas
             out["routing_policy"] = self.routing_policy
+        if self.cost_dollars:
+            out["cost_dollars"] = self.cost_dollars
         if self.num_sessions:
             out["num_sessions"] = self.num_sessions
             out["session_ttft_p50_ms"] = self.session_ttft.p50 * 1e3
@@ -324,6 +331,11 @@ class BenchmarkRunner:
             replica_s = self.target.replica_seconds(v0, v_end)
         else:
             replica_s = makespan            # a single engine, always on
+        cost = tier_s = None
+        if hasattr(self.target, "replica_cost"):
+            cost = self.target.replica_cost(v0, v_end)
+        if hasattr(self.target, "tier_seconds"):
+            tier_s = self.target.tier_seconds(v0, v_end)
         by_session: Dict[int, List[Request]] = defaultdict(list)
         for r in reqs:
             if r.session_id is not None:
@@ -359,6 +371,8 @@ class BenchmarkRunner:
                 for r in reqs
             ],
             replica_seconds=replica_s,
+            cost_dollars=cost or 0.0,
+            tier_seconds=tier_s,
             num_sessions=len(by_session),
             session_ttft=session_ttft,
             session_tpot=session_tpot,

@@ -10,6 +10,25 @@ for small n; see tests/test_workload.py for the regression).
 
 All processes are seeded through the caller's ``numpy`` Generator, so request
 streams stay byte-identical across real/sleep/emulate/DES runs.
+
+Invariants every process guarantees (property-tested in
+tests/test_workload.py):
+
+* ``sample(n, rng)`` returns exactly ``n`` non-decreasing times;
+* renewal processes (poisson/gamma/onoff) place the first arrival at t=0 by
+  *shifting*; trace replay keeps absolute phase instead (see
+  :class:`RateTraceArrivals`);
+* ``mean_rate()`` equals the configured long-run rate regardless of the
+  burstiness knobs, so a burstiness sweep holds offered load constant.
+
+>>> import numpy as np
+>>> times = PoissonArrivals(qps=2.0).sample(5, np.random.default_rng(0))
+>>> len(times), float(times[0]), bool(np.all(np.diff(times) >= 0))
+(5, 0.0, True)
+>>> GammaArrivals(qps=2.0, cv2=8.0).mean_rate()   # burstiness != load
+2.0
+>>> make_arrival("onoff", 4.0, period_s=5.0, duty=0.5).name
+'onoff'
 """
 
 from __future__ import annotations

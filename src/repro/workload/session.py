@@ -24,6 +24,28 @@ Real-mode caveat: under ``mode="real"`` generated tokens are actual argmax
 outputs, not zeros, so precomputed follow-up prompts would diverge from what
 a real chat client would send.  Session workloads target the emulated/DES
 modes (the paper's sweep regime).
+
+Invariants (the closed-loop release rule): turn ``k+1``'s arrival is
+``finish(k) + think``, never earlier; a session's turn count never exceeds
+``max_turns`` and its context never exceeds ``max_context_len`` (sessions
+end early rather than overflow); ``initial_requests``/``follow_up`` build
+*fresh* Request objects per call so one workload object can drive several
+runs with byte-identical token streams.
+
+>>> sw = SessionWorkload(SessionConfig(num_sessions=4, qps=2.0,
+...                                    turns_mean=2.0, max_turns=3, seed=0))
+>>> 0 < sw.num_sessions <= 4
+True
+>>> sw.total_requests == sum(s.num_turns for s in sw.sessions)
+True
+>>> first = sw.initial_requests()
+>>> all(r.turn_index == 0 for r in first)
+True
+>>> follow = sw.follow_up(type("Done", (), {
+...     "session_id": first[0].session_id, "turn_index": 0,
+...     "finish_time": 7.5})())
+>>> follow is None or follow.arrival_time >= 7.5
+True
 """
 
 from __future__ import annotations

@@ -127,8 +127,8 @@ def test_pd_pool_splits_and_routes():
 
 def test_make_router_registry():
     assert set(ROUTER_POLICIES) == {
-        "round_robin", "least_outstanding_tokens", "prefix_affinity",
-        "pd_pool"}
+        "round_robin", "least_outstanding_tokens", "cost_normalized_load",
+        "prefix_affinity", "pd_pool"}
     with pytest.raises(ValueError):
         make_router("nope", 2)
 

@@ -1,0 +1,74 @@
+#!/usr/bin/env python
+"""Fail on broken intra-repo markdown links (CI `docs` job).
+
+Scans markdown files (default: docs/*.md + README.md) for
+``[text](target)`` links, resolves each relative target against the file's
+directory, and exits non-zero listing every target that does not exist.
+External links (http/https/mailto) and pure in-page anchors (``#...``) are
+skipped; a ``path#anchor`` target is checked for the path only.
+
+    python tools/check_links.py            # default file set
+    python tools/check_links.py README.md docs/*.md CHANGES.md
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+SKIP_PREFIXES = ("http://", "https://", "mailto:", "#")
+
+
+def iter_links(md: Path):
+    # blank out fenced code blocks (``` examples often contain pseudo-links)
+    # while keeping their newlines, so reported line numbers stay true
+    text = re.sub(r"```.*?```",
+                  lambda m: "\n" * m.group(0).count("\n"),
+                  md.read_text(), flags=re.DOTALL)
+    for lineno, line in enumerate(text.splitlines(), 1):
+        for m in LINK_RE.finditer(line):
+            yield lineno, m.group(1)
+
+
+def check_file(md: Path) -> list:
+    broken = []
+    for lineno, target in iter_links(md):
+        if target.startswith(SKIP_PREFIXES):
+            continue
+        path = target.split("#", 1)[0]
+        if not path:
+            continue
+        resolved = (md.parent / path).resolve()
+        if not resolved.exists():
+            broken.append((md, lineno, target))
+    return broken
+
+
+def main(argv) -> int:
+    if argv:
+        files = [Path(a) for a in argv]
+    else:
+        files = sorted((REPO_ROOT / "docs").glob("*.md"))
+        files.append(REPO_ROOT / "README.md")
+    missing_inputs = [f for f in files if not f.exists()]
+    if missing_inputs:
+        print(f"input files not found: {missing_inputs}", file=sys.stderr)
+        return 2
+    broken = []
+    for f in files:
+        broken.extend(check_file(f))
+    for md, lineno, target in broken:
+        print(f"{md.relative_to(REPO_ROOT)}:{lineno}: broken link -> {target}",
+              file=sys.stderr)
+    if broken:
+        print(f"{len(broken)} broken intra-repo link(s)", file=sys.stderr)
+        return 1
+    print(f"checked {len(files)} file(s): all intra-repo links resolve")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
