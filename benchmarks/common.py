@@ -56,7 +56,7 @@ def paper_parallelism(arch: str) -> dict:
 
 
 def sharegpt_workload(n=100, qps=2.0, seed=0, **kw):
-    from repro.serving.workload import WorkloadConfig, synthesize
+    from repro.workload import WorkloadConfig, synthesize
     base = dict(num_requests=n, qps=qps, prompt_len_mean=220.0,
                 output_len_mean=180.0, seed=seed)
     base.update(kw)
@@ -65,7 +65,7 @@ def sharegpt_workload(n=100, qps=2.0, seed=0, **kw):
 
 def small_workload(n=40, qps=20.0, seed=0, **kw):
     """CPU-runnable workload for real-mode fidelity benchmarks."""
-    from repro.serving.workload import WorkloadConfig, synthesize
+    from repro.workload import WorkloadConfig, synthesize
     base = dict(num_requests=n, qps=qps, prompt_len_mean=24.0,
                 output_len_mean=8.0, max_prompt_len=96, max_output_len=16,
                 vocab_size=500, seed=seed)

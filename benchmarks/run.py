@@ -96,6 +96,17 @@ def _hetero(mode):
             f"hetero_parity_err={parity['max_err_steps']}steps")
 
 
+def _distributed(mode):
+    from benchmarks import fig_distributed as m
+    rows = m.main(n=_n(mode, 40, 24, 10))
+    parities = [r for r in rows if "max_err_steps" in r]
+    proc = max((r for r in rows if r.get("backend") == "process"),
+               key=lambda r: r["speedup_x"])
+    return (f"process_speedup={proc['speedup_x']}x@{proc['replicas']}r,"
+            f"parity_err={max(p['max_err_steps'] for p in parities)}steps,"
+            f"decisions_equal={all(p['decisions_equal'] for p in parities)}")
+
+
 def _table1(mode):
     from benchmarks import table1_features as m
     rows = m.main()
@@ -126,6 +137,7 @@ SUITES = [
     ("fig_cluster_scaling", _cluster),
     ("fig_autoscale", _autoscale),
     ("fig_hetero", _hetero),
+    ("fig_distributed", _distributed),
     ("table1_features", _table1),
     ("roofline", _roofline),
 ]

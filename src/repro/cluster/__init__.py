@@ -1,5 +1,6 @@
 """Multi-replica cluster emulation layer (data-parallel serving, PD pools,
-elastic membership, heterogeneous tiers + SLO-driven autoscaling).
+elastic membership, heterogeneous tiers + SLO-driven autoscaling, replicas
+as threads or OS processes).
 
 Public surface::
 
@@ -7,17 +8,21 @@ Public surface::
     from repro.cluster import Autoscaler, make_autoscaler_policy
     from repro.cluster import TierSpec, make_tier_specs
 
-See ``cluster.py`` for the replica/timeline architecture, ``router.py`` for
-the pluggable routing policies, ``autoscaler.py`` for the virtual-time
-scaling control loop, and ``tiers.py`` for the hardware-tier arithmetic
-behind heterogeneous pools.
+    build_cluster(..., backend="process")   # replicas as OS processes
+
+See ``cluster.py`` for the replica/timeline architecture and the pluggable
+backend split, ``process_backend.py`` for the multi-process runtime over
+the time-warp socket transport, ``router.py`` for the pluggable routing
+policies, ``autoscaler.py`` for the virtual-time scaling control loop, and
+``tiers.py`` for the hardware-tier arithmetic behind heterogeneous pools.
 """
 
 from .autoscaler import (AUTOSCALER_POLICIES, Autoscaler, AutoscalerConfig,
                          AutoscalerPolicy, QueueDepthPolicy, SchedulePolicy,
-                         TTFTSLOPolicy, make_autoscaler_policy,
+                         TTFTSLOPolicy, drain_victim, make_autoscaler_policy,
                          provision_delay)
-from .cluster import Cluster, ClusterConfig, build_cluster
+from .cluster import Cluster, ClusterBase, ClusterConfig, build_cluster
+from .process_backend import ProcessCluster, ProcessReplicaHandle
 from .router import (CostNormalizedLoadRouter, LeastOutstandingTokensRouter,
                      PDPoolRouter, PrefixAffinityRouter, ReplicaView,
                      RoundRobinRouter, Router, ROUTER_POLICIES, make_router)
@@ -26,8 +31,12 @@ from .tiers import (TierSpec, make_tier_spec, make_tier_specs,
 
 __all__ = [
     "Cluster",
+    "ClusterBase",
     "ClusterConfig",
+    "ProcessCluster",
+    "ProcessReplicaHandle",
     "build_cluster",
+    "drain_victim",
     "Router",
     "ReplicaView",
     "RoundRobinRouter",

@@ -8,9 +8,11 @@ the decision through :meth:`Cluster.add_replica` /
 replica is brought up by a *provisioner* actor that first jumps
 ``provision_delay_s`` of virtual time (node allocation + weight loading,
 modeled, not slept) and only then joins the routing set.  Scale-down picks
-the highest-index active replica — a pure membership rule, deliberately free
-of racy load reads, so the emulator and the DES baseline drain the *same*
-replica under the same policy decisions (parity under elasticity).
+its victim through the shared :func:`drain_victim` rule — most expensive
+idle tier first, replica index as the deterministic tie-break — which the
+DES baseline calls verbatim, so the emulator and the DES drain the *same*
+replica under the same policy decisions (parity under elasticity, now
+tier-aware: giving back a quiet H100 saves more than a quiet L4).
 
 Policies see replicas only through the small :class:`AutoscalerView`
 protocol, so identical policy objects drive the emulator's real engines and
@@ -52,8 +54,43 @@ __all__ = [
     "AUTOSCALER_POLICIES",
     "make_autoscaler_policy",
     "provision_delay",
+    "drain_victim",
     "Autoscaler",
 ]
+
+
+def drain_victim(active, *, idle_of, cost_of) -> Optional[int]:
+    """Scale-down victim rule, shared verbatim by the emulator's
+    :class:`Autoscaler` and the DES mirror so both drain the *same* replica
+    under the same policy decisions (parity under elasticity).
+
+    Most expensive **idle** tier first — shedding a quiet H100 saves more
+    dollars than shedding a quiet L4 — with the replica index as the
+    deterministic tie-break (highest wins, preserving the historical
+    last-in-first-out shape on homogeneous pools).  When no active replica
+    is idle, the same (cost, index) ordering applies to the busy ones:
+    the drain then runs out its in-flight work before finalising.
+
+    ``idle_of(i)`` / ``cost_of(i)`` are the per-replica probes (emulator:
+    live engine counters + TierSpec rates; DES: event-loop state + the same
+    TierSpec dict).  Returns None when draining is impossible (<=1 active).
+
+    >>> drain_victim([0, 1, 2], idle_of=lambda i: i != 1,
+    ...              cost_of=lambda i: [3.0, 9.0, 1.0][i])
+    0
+    >>> drain_victim([0, 1, 2], idle_of=lambda i: False,
+    ...              cost_of=lambda i: [3.0, 9.0, 1.0][i])
+    1
+    >>> drain_victim([0, 1], idle_of=lambda i: True, cost_of=lambda i: 0.0)
+    1
+    >>> drain_victim([0], idle_of=lambda i: True, cost_of=lambda i: 0.0)
+    """
+    active = list(active)
+    if len(active) <= 1:
+        return None
+    idle = [i for i in active if idle_of(i)]
+    pool = idle if idle else active
+    return max(pool, key=lambda i: (cost_of(i), i))
 
 
 @dataclass(frozen=True)
@@ -127,6 +164,17 @@ class AutoscalerPolicy:
 
     def decide(self, view: AutoscalerView) -> int:
         raise NotImplementedError
+
+    def set_origin(self, t0: float) -> None:
+        """Anchor time-scripted policies to the run's virtual start.
+
+        Called once by the control loop before the first tick (the
+        emulator's :class:`Autoscaler` passes ``clock.now()``; the DES
+        passes ``0.0``, its event-loop origin).  Virtual time's absolute
+        value depends on the wall source — a ManualWallSource starts near
+        0, the process backend's host-shared ``time.time`` starts at the
+        unix epoch — so policies must never interpret wall-derived
+        absolutes.  Stateless policies ignore it."""
 
     def select_tier(self, view: Optional[AutoscalerView],
                     tiers: Sequence[TierSpec]) -> TierSpec:
@@ -216,9 +264,13 @@ class TTFTSLOPolicy(AutoscalerPolicy):
 class SchedulePolicy(AutoscalerPolicy):
     """Scripted membership changes: ``events`` is a list of
     ``(virtual_time, delta)`` pairs applied at the first tick at-or-after
-    each time.  Deterministic by construction — the elastic
-    emulator-vs-DES parity scenarios use it so both sides scale at
-    identical virtual times regardless of load-probe raciness.
+    each time, where times are measured **from the run's virtual start**
+    (the :meth:`set_origin` anchor — this is what keeps one schedule
+    meaningful across wall sources: a ManualWallSource timeline starts
+    near 0, the process backend's at the unix epoch).  Deterministic by
+    construction — the elastic emulator-vs-DES and thread-vs-process
+    parity scenarios use it so all sides scale at identical virtual
+    times regardless of load-probe raciness.
 
     >>> from types import SimpleNamespace
     >>> p = SchedulePolicy([(1.0, +1), (2.0, -1)])
@@ -228,6 +280,12 @@ class SchedulePolicy(AutoscalerPolicy):
     1
     >>> p.decide(SimpleNamespace(now=lambda: 1.6))   # event already consumed
     0
+    >>> p2 = SchedulePolicy([(1.0, +1)])
+    >>> p2.set_origin(100.0)                         # run started at t=100
+    >>> p2.decide(SimpleNamespace(now=lambda: 100.5))
+    0
+    >>> p2.decide(SimpleNamespace(now=lambda: 101.5))
+    1
     """
 
     name = "schedule"
@@ -235,9 +293,13 @@ class SchedulePolicy(AutoscalerPolicy):
     def __init__(self, events: Sequence[Tuple[float, int]]):
         self._events = sorted(events)
         self._cursor = 0
+        self._origin = 0.0
+
+    def set_origin(self, t0: float) -> None:
+        self._origin = t0
 
     def decide(self, view: AutoscalerView) -> int:
-        now = view.now()
+        now = view.now() - self._origin
         delta = 0
         while (self._cursor < len(self._events)
                and self._events[self._cursor][0] <= now):
@@ -332,6 +394,9 @@ class Autoscaler:
     # ---------------------------------------------------------- lifecycle --
     def start(self) -> "Autoscaler":
         assert self._thread is None, "autoscaler already started"
+        # Anchor time-scripted policies to the run's virtual start (the DES
+        # mirror anchors at its event-loop origin, 0.0).
+        self.policy.set_origin(self.cluster.clock.now())
         if self.cluster.transport is not None:
             self._client = TimeJumpClient(
                 self.cluster.transport, f"{self.name}-tick")
@@ -408,12 +473,17 @@ class Autoscaler:
         return 0
 
     def _pick_victim(self) -> Optional[int]:
-        """Highest-index active replica: deterministic, membership-only (no
-        racy load reads), so the DES mirror drains the same replica."""
+        """Tier-aware rule via :func:`drain_victim`: most expensive idle
+        tier first, index as the deterministic tie-break — identical code
+        to the DES mirror.  Idleness is a racy engine probe, but drains
+        only ever fire on quiet clusters (policy hysteresis), where the
+        probe is stable on both sides."""
         with self.cluster._membership_lock:
-            if len(self.cluster.active) <= 1:
-                return None
-            return max(self.cluster.active)
+            active = list(self.cluster.active)
+        return drain_victim(
+            active,
+            idle_of=lambda i: self.cluster.replicas[i].num_outstanding() == 0,
+            cost_of=self.cluster.replica_cost_rate)
 
     def _spawn_provisioner(self, tier: Optional[str] = None) -> None:
         """Model the scale-up latency as a virtual-time jump.

@@ -1,11 +1,23 @@
 """Multi-replica cluster emulation: N engines, one virtual timeline.
 
-A :class:`Cluster` owns N :class:`~repro.serving.engine.LLMEngine` replicas
-parked on a **single shared** :class:`~repro.core.clock.VirtualClock` /
-:class:`~repro.core.timekeeper.Timekeeper`.  Each replica is an independent
-continuous-batching engine (own scheduler, block pool, radix cache, model
-runner); the cluster adds the data-parallel control plane the paper's
-config-sweep story needs at scale:
+The cluster runtime is split into a backend-agnostic control plane
+(:class:`ClusterBase`: routing, elastic membership, completion fan-out,
+cost accounting) and two pluggable **backends** that decide where replica
+engines physically run:
+
+* **thread backend** (:class:`Cluster`, this module) — every replica is an
+  in-process :class:`~repro.serving.engine.LLMEngine` sharing one
+  :class:`~repro.core.clock.VirtualClock` object; Timekeeper fan-in is a
+  function call (:class:`~repro.core.client.LocalTransport`).
+* **process backend** (:class:`~repro.cluster.process_backend.ProcessCluster`)
+  — every replica's engine runs in its own OS process wired to a
+  :class:`~repro.core.transport.TimekeeperServer` over the framed-TCP
+  protocol, holding a broadcast-driven *replica* clock.  Same engine code,
+  same router objects, same runner — only the transport changes.
+
+Each replica is an independent continuous-batching engine (own scheduler,
+block pool, radix cache, model runner); the cluster adds the data-parallel
+control plane the paper's config-sweep story needs at scale:
 
 * **Routing** — a pluggable :class:`~repro.cluster.router.Router` policy
   places each request (round-robin, least-outstanding-tokens,
@@ -19,25 +31,44 @@ config-sweep story needs at scale:
 * **PD pools** — with the ``pd_pool`` policy the cluster reuses the
   emulated KV channel from ``repro.core.emulation`` to migrate completed
   prefills into the decode pool, unifying ``repro.serving.disagg`` behind
-  the Router interface.
+  the Router interface (thread backend only).
 
 * **Heterogeneous pools** — each replica may run on a different hardware
   *tier* (chip name from ``repro.core.hardware``): its predictor, KV-cache
   capacity, and $/replica-second follow the chip, routing policies see
   per-replica throughput weights and costs, and
-  :meth:`Cluster.add_replica` accepts a tier so the autoscaler can scale
-  into cheaper chips (see ``repro.cluster.tiers``).
+  :meth:`ClusterBase.add_replica` accepts a tier so the autoscaler can
+  scale into cheaper chips (see ``repro.cluster.tiers``).
 
 The cluster exposes the same non-blocking ``submit`` / ``poll`` /
 ``wait_until_complete`` surface as a single engine, so
-``repro.serving.benchmark.BenchmarkRunner`` drives a 1-replica engine and an
-N-replica cluster through one code path (Workload → Cluster → Metrics).
+``repro.serving.benchmark.BenchmarkRunner`` drives a 1-replica engine, an
+N-replica thread cluster, and an N-process cluster through one code path
+(Workload → Cluster → Metrics).
+
+Replica handle protocol (what a backend's replicas must expose)::
+
+    submit(req)                  enqueue; the replica's actors are
+                                 registered with the Timekeeper by return
+    num_outstanding() -> int     \
+    outstanding_tokens() -> int   } ReplicaView probes (router placement)
+    prefix_match_len(toks)->int  /
+    in_flight_ids() -> set       drain bookkeeping snapshot
+    retire()                     leave the Timekeeper permanently (drain)
+    start() / stop()             engine lifecycle
+    stats() -> dict              per-replica counters
+    step_log -> List[StepRecord] step accounting
+
+An in-process :class:`LLMEngine` satisfies it directly; the process backend
+satisfies it with an RPC proxy per child process.
 
 Listener invariant (closed-loop workloads build on this): completion
-listeners run *synchronously in the finishing replica's step thread*, so any
-actor a listener registers with the Timekeeper exists **before** the
-finishing replica re-enters the barrier — virtual time can never jump past
-work a completion is about to schedule (§4.3).
+listeners run *before the finishing replica re-enters the barrier* — in the
+finishing replica's step thread (thread backend) or in the parent's
+completion-frame handler while the child engine blocks on the ack (process
+backend) — so any actor a listener registers with the Timekeeper exists
+before the next barrier round; virtual time can never jump past work a
+completion is about to schedule (§4.3).
 """
 
 from __future__ import annotations
@@ -46,7 +77,7 @@ import itertools
 import pickle
 import threading
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Union
+from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 from repro.core.client import LocalTransport, TimeJumpClient
 from repro.core.clock import VirtualClock, WallSource
@@ -63,7 +94,7 @@ from repro.serving.scheduler import EngineConfig
 from .router import PDPoolRouter, Router, make_router
 from .tiers import TierSpec, make_tier_spec, tier_engine_cfg
 
-__all__ = ["ClusterConfig", "Cluster", "build_cluster"]
+__all__ = ["ClusterConfig", "ClusterBase", "Cluster", "build_cluster"]
 
 
 @dataclass
@@ -71,20 +102,31 @@ class ClusterConfig:
     kv_link_bandwidth: float = 50e9   # PD pools: inter-replica KV fabric (B/s)
     # Per-replica hardware tiers (chip names); None = homogeneous/untiered.
     # Carried through build_cluster so stats/cost accounting can report the
-    # mix; the authoritative per-replica record is Cluster.replica_tiers
+    # mix; the authoritative per-replica record is ClusterBase.replica_tiers
     # (which keeps growing as the autoscaler adds replicas).
     tiers: Optional[List[Optional[str]]] = None
 
 
-class Cluster:
-    """N engine replicas + router, sharing one virtual timeline."""
+class ClusterBase:
+    """Backend-agnostic cluster control plane over replica handles.
+
+    Subclasses provide replica construction/placement (thread engines or
+    process proxies) through :meth:`_new_replica` / :meth:`_attach_replica`;
+    everything else — routing, elastic membership, drain bookkeeping,
+    completion fan-out, replica-seconds/cost accounting — lives here and is
+    byte-identical across backends.
+    """
+
+    #: human-readable backend tag (stats/benchmark rows)
+    backend = "?"
 
     def __init__(
         self,
-        engines: Sequence[LLMEngine],
+        replicas: Sequence,
         router: Router,
         *,
-        transport: Optional[LocalTransport] = None,
+        clock: VirtualClock,
+        transport=None,
         timekeeper: Optional[Timekeeper] = None,
         model_cfg: Optional[ModelConfig] = None,
         cfg: Optional[ClusterConfig] = None,
@@ -92,14 +134,10 @@ class Cluster:
         tier_specs: Optional[Dict[str, TierSpec]] = None,
         tier_spec_factory=None,
     ):
-        assert engines, "a cluster needs at least one replica"
-        assert router.num_replicas == len(engines), \
-            f"router sized for {router.num_replicas} replicas, got {len(engines)}"
-        clock = engines[0].clock
-        for e in engines:
-            assert e.clock is clock, \
-                "all replicas must share one VirtualClock (one timeline)"
-        self.engines = list(engines)
+        assert replicas, "a cluster needs at least one replica"
+        assert router.num_replicas == len(replicas), \
+            f"router sized for {router.num_replicas} replicas, got {len(replicas)}"
+        self.replicas = list(replicas)
         self.router = router
         self.transport = transport
         self.timekeeper = timekeeper
@@ -125,8 +163,8 @@ class Cluster:
         # tier_specs caches TierSpec per tier name, lazily extended through
         # tier_spec_factory when the autoscaler scales into a new tier.
         self.replica_tiers: List[Optional[str]] = list(
-            (self.cfg.tiers or [None] * len(self.engines)))
-        assert len(self.replica_tiers) == len(self.engines), \
+            (self.cfg.tiers or [None] * len(self.replicas)))
+        assert len(self.replica_tiers) == len(self.replicas), \
             "need one tier entry per replica"
         self._tier_specs: Dict[str, TierSpec] = dict(tier_specs or {})
         self._tier_spec_factory = tier_spec_factory
@@ -135,47 +173,54 @@ class Cluster:
                 spec = self.tier_spec(t)
                 self.router.set_tier(i, weight=spec.throughput_factor,
                                      cost=spec.cost_per_replica_s)
-        self.active: List[int] = list(range(len(self.engines)))
+        self.active: List[int] = list(range(len(self.replicas)))
         self._membership: Dict[int, dict] = {
             i: {"added": None, "drain_started": None, "drained": None}
-            for i in range(len(self.engines))
+            for i in range(len(self.replicas))
         }
         self._draining: Dict[int, set] = {}   # idx -> in-flight request ids
         self._submit_lock = threading.Lock()  # serialises route+submit
+        # Placement audit log (parity benchmarks compare it across backends):
+        # one (session_id, turn_index, request_id, replica) row per submit,
+        # in submit order.
+        self.placements: List[Tuple] = []
         # Completion subscribers (closed-loop workloads, autoscaler views);
-        # called synchronously in the finishing replica's step thread.
+        # called synchronously before the finishing replica's next barrier
+        # participation.
         self.completion_listeners: List = []
 
-        self._pd = isinstance(router, PDPoolRouter)
-        if self._pd:
-            assert model_cfg is not None, \
-                "pd_pool routing needs model_cfg for KV-transfer sizing"
-            self.channel = EmulatedChannel(self.cfg.kv_link_bandwidth,
-                                           name="kv-transfer")
-            self._mover_ids = itertools.count()
-            self._movers: List[threading.Thread] = []
-            for i in router.prefill_indices:
-                self.engines[i].on_finish = self._pd_handoff
-            for i in router.decode_indices:
-                self.engines[i].on_finish = self._complete
-        else:
-            for e in self.engines:
-                e.on_finish = self._complete
+    # ------------------------------------------------------------ backend --
+    @property
+    def engines(self) -> List:
+        """The replica handles (in-process engines on the thread backend,
+        RPC proxies on the process backend) — same objects as
+        :attr:`replicas`, kept under the historical name."""
+        return self.replicas
+
+    def _new_replica(self, idx: int, tier: Optional[str]):
+        """Build (or activate) replica ``idx`` on ``tier``; backend hook."""
+        raise NotImplementedError
+
+    def _attach_replica(self, replica) -> None:
+        """Wire the backend's completion path into ``replica``; hook."""
+        raise NotImplementedError
 
     # ------------------------------------------------------------- intake --
     def submit(self, req: Request) -> int:
         """Route and enqueue one request; returns the chosen replica index.
 
-        Non-blocking: routing reads racy load/affinity probes, the engine
-        submit is a queue append + synchronous unpark.  Callers may be the
-        benchmark dispatcher *and* closed-loop think-time actors, so the
-        route+enqueue pair is serialised (router state is not thread-safe)."""
-        if self._pd:
-            req._disagg_total_new = req.max_new_tokens      # stash for decode
-            req.max_new_tokens = 1
+        Non-blocking on the engine side: routing reads racy load/affinity
+        probes, the replica submit returns once the request is enqueued AND
+        the replica's actors are registered with the Timekeeper (thread
+        backend: a synchronous unpark; process backend: the child's
+        submit-ack).  Callers may be the benchmark dispatcher *and*
+        closed-loop think-time actors, so the route+enqueue pair is
+        serialised (router state is not thread-safe)."""
         with self._submit_lock:
-            idx = self.router.route(req, self.engines, active=self.active)
-            self.engines[idx].submit(req)
+            idx = self.router.route(req, self.replicas, active=self.active)
+            self.placements.append(
+                (req.session_id, req.turn_index, req.request_id, idx))
+            self.replicas[idx].submit(req)
         return idx
 
     def submit_many(self, reqs: Sequence[Request]) -> List[int]:
@@ -183,9 +228,9 @@ class Cluster:
 
     # -------------------------------------------------------------- hooks --
     def add_completion_listener(self, fn) -> None:
-        """Subscribe ``fn(finished: List[Request])``; runs in the finishing
-        replica's step thread BEFORE its next barrier participation — safe to
-        register think-time actors from (closed-loop session re-injection)."""
+        """Subscribe ``fn(finished: List[Request])``; runs BEFORE the
+        finishing replica's next barrier participation — safe to register
+        think-time actors from (closed-loop session re-injection)."""
         self.completion_listeners.append(fn)
 
     def remove_completion_listener(self, fn) -> None:
@@ -193,7 +238,9 @@ class Cluster:
             self.completion_listeners.remove(fn)
 
     def _complete(self, finished: List[Request]) -> None:
-        """Runs in a replica's step thread, synchronously with completion."""
+        """Completion fan-out; the finishing replica is still barred from
+        its next barrier round while this runs (step thread on the thread
+        backend, pre-ack on the process backend)."""
         with self._finish_cond:
             self.finished.extend(finished)
             self._finish_cond.notify_all()
@@ -203,52 +250,6 @@ class Cluster:
         self._drain_progress(finished)
         for fn in list(self.completion_listeners):
             fn(finished)
-
-    def _pd_handoff(self, finished: List[Request]) -> None:
-        """Prefill completed: emulate the KV migration, then place the
-        request in the decode pool.  Runs synchronously in the prefill
-        replica's step thread — the KV-mover actor registers with the
-        Timekeeper *before* that replica can re-enter the barrier, so
-        virtual time cannot advance past the transfer's arrival (§4.3)."""
-        now = self.clock.now()
-        for req in finished:
-            kv_bytes = req.context_len * self.model_cfg.kv_bytes_per_token()
-            t_visible = self.channel.send(req, now, kv_bytes)
-            mover: Optional[TimeJumpClient] = None
-            if self.transport is not None:
-                mover = TimeJumpClient(
-                    self.transport, f"kv-mover-{next(self._mover_ids)}")
-            t = threading.Thread(
-                target=self._pd_transfer, args=(req, t_visible, mover),
-                name="kv-mover", daemon=True)
-            t.start()
-            self._movers.append(t)
-
-    def _pd_transfer(self, req: Request, t_visible: float,
-                     mover: Optional[TimeJumpClient]) -> None:
-        try:
-            if mover is not None:
-                mover.jump_to(t_visible)        # occupy the transfer duration
-            req.kv_transfer_time = (t_visible - req.finish_time
-                                    if req.finish_time is not None else 0.0)
-            # Re-arm for the decode stage: KV arrives whole; the first
-            # generated token becomes the last prompt token.
-            first_token = req.output_tokens[0] if req.output_tokens else 0
-            req.max_new_tokens = max(req._disagg_total_new - 1, 1)
-            req.prompt_tokens = list(req.prompt_tokens) + [first_token]
-            req.output_tokens = []
-            req.num_prefilled = 0
-            req.cached_prefix_len = 0
-            req.state = RequestState.WAITING
-            req.finish_time = None
-            req.kv_migrated = True
-            with self._submit_lock:
-                idx = self.router.route_decode(req, self.engines,
-                                               active=self.active)
-                self.engines[idx].submit(req)
-        finally:
-            if mover is not None:
-                mover.deregister()
 
     # ------------------------------------------------------------- tiers --
     def tier_spec(self, tier: str) -> TierSpec:
@@ -263,35 +264,33 @@ class Cluster:
             self._tier_specs[tier] = spec
         return spec
 
+    def replica_cost_rate(self, idx: int) -> float:
+        """Replica ``idx``'s $/replica-second (0.0 when untiered) — the
+        drain-victim rule ranks candidates by it."""
+        tier = self.replica_tiers[idx]
+        return 0.0 if tier is None else self.tier_spec(tier).cost_per_replica_s
+
     # --------------------------------------------------- elastic membership --
-    def add_replica(self, engine: Optional[LLMEngine] = None,
-                    tier: Optional[str] = None) -> int:
+    def add_replica(self, engine=None, tier: Optional[str] = None) -> int:
         """Scale up: join a new replica to the routing set.
 
-        ``engine`` defaults to one built by the cluster's replica factory
-        (``build_cluster`` wires one that clones the last replica's config
-        onto the shared Timekeeper/transport).  ``tier`` picks the hardware
-        tier of the factory-built replica (tier-selecting autoscaling);
-        omitted, the new replica clones the last replica's tier.  The join
-        is immediate — provisioning delay is the *caller's* job (the
-        Autoscaler models it as a virtual-time jump before calling this).
-        Returns the new index.
+        ``engine`` defaults to one built by the backend (thread: the replica
+        factory clones the last replica's config onto the shared
+        Timekeeper/transport; process: a warm child process is activated).
+        ``tier`` picks the hardware tier of the backend-built replica
+        (tier-selecting autoscaling); omitted, the new replica clones the
+        last replica's tier.  The join is immediate — provisioning delay is
+        the *caller's* job (the Autoscaler models it as a virtual-time jump
+        before calling this).  Returns the new index.
         """
-        assert not self._pd, "elastic membership is not supported for pd_pool"
         with self._submit_lock, self._membership_lock:
-            idx = len(self.engines)
+            idx = len(self.replicas)
             if tier is None:
                 tier = self.replica_tiers[-1] if engine is None else None
             if engine is None:
-                assert self._replica_factory is not None, \
-                    "no replica factory: pass an engine explicitly"
-                # factory contract: (index, tier) -> LLMEngine, tier None
-                # meaning "whatever the config declares for this index"
-                engine = self._replica_factory(idx, tier)
-            assert engine.clock is self.clock, \
-                "new replica must share the cluster's clock"
-            engine.on_finish = self._complete
-            self.engines.append(engine)
+                engine = self._new_replica(idx, tier)
+            self._attach_replica(engine)
+            self.replicas.append(engine)
             self.replica_tiers.append(tier)
             if tier is not None:
                 spec = self.tier_spec(tier)
@@ -308,10 +307,11 @@ class Cluster:
 
     def drain_replica(self, idx: int) -> None:
         """Scale down: stop routing to replica ``idx``, let its in-flight
-        requests finish, then park + deregister it.  The replica's engine
-        thread keeps running (parked actors cost nothing on the barrier);
-        ``stop()`` reaps it with the rest of the cluster."""
-        assert not self._pd, "elastic membership is not supported for pd_pool"
+        requests finish, then retire it from the Timekeeper (full
+        deregistration with an epoch bump — on the process backend this goes
+        out as a ``deregister`` frame after the last completion frame).  The
+        replica's engine keeps running (parked/retired actors cost nothing
+        on the barrier); ``stop()`` reaps it with the rest of the cluster."""
         # _submit_lock first: a concurrent submit must either fully enqueue
         # (and show up in the in-flight snapshot) or route after the removal.
         with self._submit_lock, self._membership_lock:
@@ -320,16 +320,14 @@ class Cluster:
             assert len(self.active) > 1, "cannot drain the last replica"
             self.active.remove(idx)
             self._membership[idx]["drain_started"] = self.clock.now()
-            engine = self.engines[idx]
-            with engine._live_lock:
-                in_flight = set(engine._live)
+            in_flight = set(self.replicas[idx].in_flight_ids())
             if in_flight:
                 self._draining[idx] = in_flight
             else:
                 self._finalize_drain(idx)
 
     def _drain_progress(self, finished: List[Request]) -> None:
-        """Called from ``_complete`` (a step thread) while drains are open."""
+        """Called from ``_complete`` while drains are open."""
         done_ids = {r.request_id for r in finished}
         with self._membership_lock:
             for idx in list(self._draining):
@@ -339,13 +337,12 @@ class Cluster:
                     self._finalize_drain(idx)
 
     def _finalize_drain(self, idx: int) -> None:
-        """In-flight work done: stamp the membership end and deregister the
-        replica's worker actor so the Timekeeper forgets it entirely (it
-        would otherwise merely park).  Caller holds ``_membership_lock``."""
+        """In-flight work done: stamp the membership end and retire the
+        replica's worker actors so the Timekeeper forgets them entirely
+        (they would otherwise merely park).  Caller holds
+        ``_membership_lock``."""
         self._membership[idx]["drained"] = self.clock.now()
-        client = getattr(self.engines[idx].runner, "client", None)
-        if client is not None:
-            client.deregister()
+        self.replicas[idx].retire()
 
     def num_active(self) -> int:
         with self._membership_lock:
@@ -357,7 +354,7 @@ class Cluster:
         an added one starts at its (post-provisioning-delay) join time.
         Caller holds ``_membership_lock``."""
         out = []
-        for idx in range(len(self.engines)):
+        for idx in range(len(self.replicas)):
             m = self._membership[idx]
             a = t_start if m["added"] is None else max(t_start, m["added"])
             drained = m["drained"]
@@ -402,18 +399,15 @@ class Cluster:
                     for i in sorted(self._membership)]
 
     # ---------------------------------------------------------- lifecycle --
-    def start(self) -> "Cluster":
-        for e in self.engines:
-            e.start()
+    def start(self):
+        for r in self.replicas:
+            r.start()
         self._started = True
         return self
 
     def stop(self) -> None:
-        for e in self.engines:
-            e.stop()
-        if self._pd:
-            for t in self._movers:
-                t.join(timeout=5)
+        for r in self.replicas:
+            r.stop()
         self._started = False
 
     def shutdown(self) -> None:
@@ -449,21 +443,22 @@ class Cluster:
     def step_log(self) -> List[StepRecord]:
         """All replicas' step records (benchmark overhead accounting)."""
         log: List[StepRecord] = []
-        for e in self.engines:
-            log.extend(e.step_log)
+        for r in self.replicas:
+            log.extend(r.step_log)
         return log
 
     def num_outstanding(self) -> int:
-        return sum(e.num_outstanding() for e in self.engines)
+        return sum(r.num_outstanding() for r in self.replicas)
 
     def outstanding_tokens(self) -> int:
-        return sum(e.outstanding_tokens() for e in self.engines)
+        return sum(r.outstanding_tokens() for r in self.replicas)
 
     def stats(self) -> dict:
-        """Aggregate of per-replica ``LLMEngine.stats()`` snapshots."""
-        per_replica = [e.stats() for e in self.engines]
+        """Aggregate of per-replica ``stats()`` snapshots."""
+        per_replica = [r.stats() for r in self.replicas]
         agg = {
-            "num_replicas": len(self.engines),
+            "backend": self.backend,
+            "num_replicas": len(self.replicas),
             "num_active": self.num_active(),
             "membership": self.membership_events(),
             "tiers": list(self.replica_tiers),
@@ -480,13 +475,144 @@ class Cluster:
             agg["timekeeper"] = self.timekeeper.stats.as_dict()
         return agg
 
+
+class Cluster(ClusterBase):
+    """Thread backend: N in-process engine replicas sharing one clock object."""
+
+    backend = "thread"
+
+    def __init__(
+        self,
+        engines: Sequence[LLMEngine],
+        router: Router,
+        *,
+        transport: Optional[LocalTransport] = None,
+        timekeeper: Optional[Timekeeper] = None,
+        model_cfg: Optional[ModelConfig] = None,
+        cfg: Optional[ClusterConfig] = None,
+        replica_factory=None,
+        tier_specs: Optional[Dict[str, TierSpec]] = None,
+        tier_spec_factory=None,
+    ):
+        assert engines, "a cluster needs at least one replica"
+        clock = engines[0].clock
+        for e in engines:
+            assert e.clock is clock, \
+                "all replicas must share one VirtualClock (one timeline)"
+        super().__init__(
+            engines, router, clock=clock, transport=transport,
+            timekeeper=timekeeper, model_cfg=model_cfg, cfg=cfg,
+            replica_factory=replica_factory, tier_specs=tier_specs,
+            tier_spec_factory=tier_spec_factory)
+
+        self._pd = isinstance(router, PDPoolRouter)
+        if self._pd:
+            assert model_cfg is not None, \
+                "pd_pool routing needs model_cfg for KV-transfer sizing"
+            self.channel = EmulatedChannel(self.cfg.kv_link_bandwidth,
+                                           name="kv-transfer")
+            self._mover_ids = itertools.count()
+            self._movers: List[threading.Thread] = []
+            for i in router.prefill_indices:
+                self.replicas[i].on_finish = self._pd_handoff
+            for i in router.decode_indices:
+                self.replicas[i].on_finish = self._complete
+        else:
+            for e in self.replicas:
+                e.on_finish = self._complete
+
+    # ------------------------------------------------------------ backend --
+    def _new_replica(self, idx: int, tier: Optional[str]) -> LLMEngine:
+        assert self._replica_factory is not None, \
+            "no replica factory: pass an engine explicitly"
+        # factory contract: (index, tier) -> LLMEngine, tier None
+        # meaning "whatever the config declares for this index"
+        engine = self._replica_factory(idx, tier)
+        return engine
+
+    def _attach_replica(self, engine: LLMEngine) -> None:
+        assert engine.clock is self.clock, \
+            "new replica must share the cluster's clock"
+        engine.on_finish = self._complete
+
+    # ------------------------------------------------------------- intake --
+    def submit(self, req: Request) -> int:
+        if self._pd:
+            req._disagg_total_new = req.max_new_tokens      # stash for decode
+            req.max_new_tokens = 1
+        return super().submit(req)
+
+    # --------------------------------------------------- elastic membership --
+    def add_replica(self, engine: Optional[LLMEngine] = None,
+                    tier: Optional[str] = None) -> int:
+        assert not self._pd, "elastic membership is not supported for pd_pool"
+        return super().add_replica(engine, tier)
+
+    def drain_replica(self, idx: int) -> None:
+        assert not self._pd, "elastic membership is not supported for pd_pool"
+        super().drain_replica(idx)
+
+    # ----------------------------------------------------------- pd pools --
+    def _pd_handoff(self, finished: List[Request]) -> None:
+        """Prefill completed: emulate the KV migration, then place the
+        request in the decode pool.  Runs synchronously in the prefill
+        replica's step thread — the KV-mover actor registers with the
+        Timekeeper *before* that replica can re-enter the barrier, so
+        virtual time cannot advance past the transfer's arrival (§4.3)."""
+        now = self.clock.now()
+        for req in finished:
+            kv_bytes = req.context_len * self.model_cfg.kv_bytes_per_token()
+            t_visible = self.channel.send(req, now, kv_bytes)
+            mover: Optional[TimeJumpClient] = None
+            if self.transport is not None:
+                mover = TimeJumpClient(
+                    self.transport, f"kv-mover-{next(self._mover_ids)}")
+            t = threading.Thread(
+                target=self._pd_transfer, args=(req, t_visible, mover),
+                name="kv-mover", daemon=True)
+            t.start()
+            self._movers.append(t)
+
+    def _pd_transfer(self, req: Request, t_visible: float,
+                     mover: Optional[TimeJumpClient]) -> None:
+        try:
+            if mover is not None:
+                mover.jump_to(t_visible)        # occupy the transfer duration
+            req.kv_transfer_time = (t_visible - req.finish_time
+                                    if req.finish_time is not None else 0.0)
+            # Re-arm for the decode stage: KV arrives whole; the first
+            # generated token becomes the last prompt token.
+            first_token = req.output_tokens[0] if req.output_tokens else 0
+            req.max_new_tokens = max(req._disagg_total_new - 1, 1)
+            req.prompt_tokens = list(req.prompt_tokens) + [first_token]
+            req.output_tokens = []
+            req.num_prefilled = 0
+            req.cached_prefix_len = 0
+            req.state = RequestState.WAITING
+            req.finish_time = None
+            req.kv_migrated = True
+            with self._submit_lock:
+                idx = self.router.route_decode(req, self.replicas,
+                                               active=self.active)
+                self.replicas[idx].submit(req)
+        finally:
+            if mover is not None:
+                mover.deregister()
+
+    # ---------------------------------------------------------- lifecycle --
+    def stop(self) -> None:
+        super().stop()
+        if self._pd:
+            for t in self._movers:
+                t.join(timeout=5)
+
     # ---------------------------------------------------- fault tolerance --
     def snapshot(self) -> bytes:
         """Cluster checkpoint: every replica's deterministic between-steps
         snapshot plus the router's placement state.  (PD pools: requests
         inside an in-flight KV transfer belong to no replica and are not
         captured — checkpoint quiescent clusters or non-PD policies.)"""
-        blobs = [e.snapshot() for e in self.engines]
+        blobs = [e.snapshot() for e in self.replicas]
         router_state = {
             "policy": getattr(self.router, "policy", None),
             "decisions": list(self.router.decisions),
@@ -506,6 +632,7 @@ def build_cluster(
     *,
     policy: str = "round_robin",
     mode: str = "emulate",
+    backend: str = "thread",
     predictor: Optional[RuntimePredictor] = None,
     tiers: Optional[Union[str, Sequence[str]]] = None,
     tier_predictors: Optional[Dict[str, RuntimePredictor]] = None,
@@ -514,9 +641,18 @@ def build_cluster(
     kv_link_bandwidth: float = 50e9,
     wall: Optional[WallSource] = None,
     router_kwargs: Optional[dict] = None,
+    warm_replicas: Optional[int] = None,
     name: str = "cluster",
-) -> Cluster:
+):
     """Wire N replica engines onto one shared Timekeeper + router.
+
+    ``backend`` picks where replicas run: ``"thread"`` (default) keeps every
+    engine in this process on a directly shared clock; ``"process"`` runs
+    each replica engine in its own OS process wired to a
+    :class:`~repro.core.transport.TimekeeperServer` over framed TCP
+    (``warm_replicas`` pre-spawns standby processes the autoscaler can
+    activate without paying process-start wall time mid-run; emulate mode
+    only, and ``wall`` must stay host-shared, i.e. None).
 
     ``engine_cfg`` may be a single config (homogeneous replicas) or one per
     replica (heterogeneous — e.g. differently-sized prefill/decode pools).
@@ -575,6 +711,29 @@ def build_cluster(
 
     cluster_cfg = ClusterConfig(kv_link_bandwidth=kv_link_bandwidth,
                                 tiers=tiers)
+
+    if backend == "process":
+        from .process_backend import build_process_cluster
+
+        assert mode == "emulate", \
+            "the process backend is emulate-only (sleep/real stay in-process)"
+        assert wall is None, (
+            "the process backend shares the host wall clock (time.time) "
+            "across processes; a custom wall source cannot cross them")
+        assert policy != "pd_pool", \
+            "pd_pool routing is not supported on the process backend"
+        return build_process_cluster(
+            model_cfg=model_cfg, router=router, num_replicas=num_replicas,
+            resolve_cfg=resolve_cfg, resolve_pred=resolve_pred,
+            default_tier=default_tier, cluster_cfg=cluster_cfg,
+            tier_specs=tier_specs, tier_spec_factory=spec_factory,
+            jitter_cooldown=jitter_cooldown,
+            warm_replicas=warm_replicas, name=name)
+
+    assert backend == "thread", \
+        f"unknown cluster backend {backend!r} (thread | process)"
+    assert warm_replicas is None, \
+        "warm_replicas only applies to the process backend"
 
     if mode == "emulate":
         tk = Timekeeper(clock=VirtualClock(wall), jitter_cooldown=jitter_cooldown)

@@ -1,0 +1,686 @@
+"""Process-mode cluster runtime: replicas as OS processes (paper §4–5).
+
+This is the deployment shape the paper's coordination protocol exists for:
+every replica's :class:`~repro.serving.engine.LLMEngine` runs in its **own
+OS process**, its worker actor wired to the parent's
+:class:`~repro.core.transport.TimekeeperServer` over the framed-TCP
+protocol.  The engine, runner, and :class:`~repro.core.client.TimeJumpClient`
+code are byte-identical to the in-process thread backend — only the
+``ActorTransport`` underneath changes (``SocketTransport`` with a
+broadcast-driven replica clock instead of ``LocalTransport`` on the shared
+clock object).
+
+Topology (one parent, N children)::
+
+    parent process                          child process i
+    ──────────────                          ───────────────
+    TimekeeperServer ◄────framed TCP────►  SocketTransport ── TimeJumpClient
+    LocalTransport (dispatcher, think        │                     │
+      actors, autoscaler ticks)              │              TimeWarpModelRunner
+    ProcessCluster                           │                     │
+      └─ ProcessReplicaHandle ◄──control──► _ReplicaServer ─── LLMEngine
+              (route/submit/probe/drain)       (command loop)
+
+Control protocol (length-prefixed pickle frames, one socket per replica;
+requests carry a ``rid`` echoed by the reply):
+
+==================  =====================================================
+``hello``           child → parent: announce replica index (handshake)
+``start_engine``    activate a warm child: ship the pickled engine spec
+                    (model/engine config + predictor); child builds and
+                    starts the engine
+``submit``          one pickled Request; the ack is sent only after
+                    ``engine.submit`` returned, i.e. after the child's
+                    worker actor re-registered with the Timekeeper — the
+                    dispatcher's next TIMEJUMP cannot resolve a barrier
+                    without the request's replica (same causality rule the
+                    thread backend gets from its synchronous unpark)
+``probe``           racy ReplicaView read: outstanding tokens/requests and
+                    (optionally) the radix prefix-match length
+``complete``        child → parent: pickled finished Requests.  The child's
+                    engine blocks in ``on_finish`` until ``complete_ack``
+                    comes back, so the parent runs every completion
+                    listener — think-time actor registration included —
+                    **before the finishing replica re-enters the barrier**
+                    (§4.3 over the wire; closed-loop sessions build on it)
+``retire``          drain final step (fire-and-forget): the child's worker
+                    actor deregisters from the Timekeeper — park, then a
+                    full departure with an epoch-bump broadcast
+``stop_engine``     stop the engine loop (cluster stop)
+``shutdown``        child exits
+==================  =====================================================
+
+Drain over the wire is therefore: stop routing (parent) → in-flight
+completion frames drain the parent's bookkeeping → ``retire`` frame →
+``deregister`` on the Timekeeper socket.
+
+Children are spawned with the ``spawn`` start method (never ``fork``: the
+parent runs engine/reader threads and may have JAX loaded).  Because a
+process spawn costs real wall time — which, under Eq. 1, would leak into
+virtual latencies mid-run — the cluster pre-spawns a **warm pool**
+(``warm_replicas``): standby shell processes that are connected but
+engine-less; ``add_replica`` activates one with a single ``start_engine``
+frame (milliseconds), so autoscaling pays only the *modeled* provisioning
+delay, exactly like the thread backend.
+"""
+
+from __future__ import annotations
+
+import itertools
+import multiprocessing
+import pickle
+import queue
+import socket
+import struct
+import threading
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional
+
+from repro.core.client import LocalTransport
+from repro.core.transport import TimekeeperServer, TransportClosed
+from repro.models.config import ModelConfig
+from repro.serving.request import Request
+from repro.serving.scheduler import EngineConfig
+
+from .cluster import ClusterBase, ClusterConfig
+from .router import Router
+from .tiers import TierSpec
+
+__all__ = ["ProcessCluster", "ProcessReplicaHandle", "build_process_cluster"]
+
+_LEN = struct.Struct(">I")
+_HANDSHAKE_TIMEOUT = 120.0      # spawn + interpreter boot + numpy import
+_RPC_TIMEOUT = 60.0
+_ACK_TIMEOUT = 60.0
+
+
+def _send_obj(sock: socket.socket, lock: threading.Lock, obj: dict) -> None:
+    body = pickle.dumps(obj)
+    with lock:
+        sock.sendall(_LEN.pack(len(body)) + body)
+
+
+def _recv_obj(sock: socket.socket) -> Optional[dict]:
+    buf = b""
+    while len(buf) < _LEN.size:
+        try:
+            chunk = sock.recv(_LEN.size - len(buf))
+        except OSError:
+            return None
+        if not chunk:
+            return None
+        buf += chunk
+    (length,) = _LEN.unpack(buf)
+    body = b""
+    while len(body) < length:
+        try:
+            chunk = sock.recv(length - len(body))
+        except OSError:
+            return None
+        if not chunk:
+            return None
+        body += chunk
+    return pickle.loads(body)
+
+
+@dataclass
+class _EngineSpec:
+    """Everything a child needs to build its replica engine (all picklable)."""
+    model_cfg: ModelConfig
+    engine_cfg: EngineConfig
+    predictor: object
+    name: str
+    tier: Optional[str] = None
+
+
+# =========================================================================
+# child side
+# =========================================================================
+
+class _ReplicaServer:
+    """Runs inside the child: one engine + the control-socket command loop."""
+
+    def __init__(self, ctrl: socket.socket, tk_addr: tuple, index: int):
+        self.ctrl = ctrl
+        self.tk_addr = tuple(tk_addr)
+        self.index = index
+        self.send_lock = threading.Lock()
+        self.engine = None
+        self.transport = None
+        self.worker_client = None
+        self._ack_events: Dict[int, threading.Event] = {}
+        self._ack_lock = threading.Lock()
+        self._cid = itertools.count()
+        self._cmd_q: "queue.Queue[Optional[dict]]" = queue.Queue()
+
+    # ------------------------------------------------------------ engine --
+    def _build_engine(self, spec: _EngineSpec) -> None:
+        from repro.core.client import TimeJumpClient
+        from repro.core.emulation import VirtualDeviceContext
+        from repro.core.hardware import get_chip
+        from repro.core.transport import SocketTransport
+        from repro.serving.engine import LLMEngine
+        from repro.serving.model_runner import TimeWarpModelRunner
+
+        if self.transport is None:
+            self.transport = SocketTransport(self.tk_addr)
+        cfg = spec.engine_cfg
+        chip = get_chip(cfg.chip)
+        n_dev = cfg.tp * cfg.pp
+        devices = VirtualDeviceContext(n_dev, chip)
+        kv_pool = int(cfg.num_blocks * cfg.block_size
+                      * spec.model_cfg.kv_bytes_per_token())
+        weights = spec.model_cfg.param_count() * spec.model_cfg.dtype_bytes
+        self.worker_client = TimeJumpClient(
+            self.transport, f"{spec.name}-worker")
+        runner = TimeWarpModelRunner(
+            spec.predictor, self.worker_client, devices=devices,
+            weight_bytes=weights, kv_pool_bytes=kv_pool)
+        self.engine = LLMEngine(cfg, runner, self.transport.clock,
+                                name=spec.name)
+        # Completion frames flow back BEFORE the engine's next barrier
+        # round: on_finish runs in the step thread and blocks on the ack.
+        self.engine.on_finish = self._on_finish
+        self.engine.start()
+
+    def _on_finish(self, finished: List[Request]) -> None:
+        cid = next(self._cid)
+        ev = threading.Event()
+        with self._ack_lock:
+            self._ack_events[cid] = ev
+        try:
+            _send_obj(self.ctrl, self.send_lock,
+                      {"op": "complete", "cid": cid, "reqs": finished})
+        except OSError:
+            return                        # parent died: nothing to wait for
+        # Block the step thread until the parent has run every completion
+        # listener (think-actor registration included): the worker actor
+        # cannot re-enter the barrier before the follow-up work exists.
+        ev.wait(timeout=_ACK_TIMEOUT)
+        with self._ack_lock:
+            self._ack_events.pop(cid, None)
+
+    # -------------------------------------------------------------- loop --
+    def run(self) -> None:
+        """Reader (main thread) + command executor (worker thread).
+
+        Acks are dispatched by the reader directly so a slow command — e.g.
+        ``stop_engine`` joining a step thread that is itself blocked on a
+        ``complete_ack`` — can never dam the ack behind it.
+        """
+        cmd_thread = threading.Thread(
+            target=self._cmd_loop, name=f"replica-{self.index}-cmds",
+            daemon=True)
+        cmd_thread.start()
+        try:
+            while True:
+                msg = _recv_obj(self.ctrl)
+                if msg is None:
+                    break                    # parent gone
+                if msg["op"] == "complete_ack":
+                    with self._ack_lock:
+                        ev = self._ack_events.get(msg["cid"])
+                    if ev is not None:
+                        ev.set()
+                    continue
+                if msg["op"] == "shutdown":
+                    break
+                self._cmd_q.put(msg)
+        finally:
+            # Release any step thread still waiting on an ack, then tear
+            # down: engine first (deregisters its actor), sockets last.
+            with self._ack_lock:
+                for ev in self._ack_events.values():
+                    ev.set()
+            self._cmd_q.put(None)
+            if self.engine is not None:
+                try:
+                    self.engine.stop()
+                except (TransportClosed, KeyError, RuntimeError, OSError):
+                    pass
+            if self.worker_client is not None:
+                try:
+                    self.worker_client.deregister()
+                except (TransportClosed, KeyError, RuntimeError, OSError):
+                    pass
+            if self.transport is not None:
+                self.transport.close()
+            try:
+                self.ctrl.close()
+            except OSError:
+                pass
+
+    def _cmd_loop(self) -> None:
+        while True:
+            msg = self._cmd_q.get()
+            if msg is None:
+                return
+            op, rid = msg["op"], msg.get("rid")
+            try:
+                reply = self._execute(op, msg)
+            except (TransportClosed, OSError) as e:
+                reply = {"op": "error", "error": f"replica transport: {e}"}
+            except Exception as e:  # noqa: BLE001 — ship it to the parent
+                reply = {"op": "error", "error": f"{type(e).__name__}: {e}"}
+            if rid is None:
+                continue                     # fire-and-forget op
+            reply["rid"] = rid
+            try:
+                _send_obj(self.ctrl, self.send_lock, reply)
+            except OSError:
+                return
+
+    def _execute(self, op: str, msg: dict) -> dict:
+        if op == "start_engine":
+            self._build_engine(msg["spec"])
+            return {"op": "ack"}
+        if op == "submit":
+            self.engine.submit(msg["req"])
+            return {"op": "ack"}
+        if op == "probe":
+            tokens = msg.get("tokens")
+            return {
+                "op": "probe_ack",
+                "num_outstanding": self.engine.num_outstanding(),
+                "outstanding_tokens": self.engine.outstanding_tokens(),
+                "prefix_match": (self.engine.prefix_match_len(tokens)
+                                 if tokens is not None else 0),
+            }
+        if op == "stats":
+            return {"op": "stats_ack", "stats": self.engine.stats()}
+        if op == "step_log":
+            return {"op": "step_log_ack", "log": list(self.engine.step_log)}
+        if op == "retire":
+            # drain final step: park semantics then the full departure —
+            # TimeJumpClient.park is a no-op once deregistered, so the
+            # engine loop's idle parking stays harmless afterwards
+            self.engine.retire()
+            return {"op": "ack"}
+        if op == "stop_engine":
+            self.engine.stop()
+            return {"op": "ack"}
+        return {"op": "error", "error": f"unknown op {op!r}"}
+
+
+def _replica_main(ctrl_addr, tk_addr, index: int) -> None:
+    """Child process entry point (multiprocessing ``spawn`` target)."""
+    ctrl = socket.create_connection(tuple(ctrl_addr))
+    ctrl.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+    server = _ReplicaServer(ctrl, tk_addr, index)
+    _send_obj(ctrl, server.send_lock, {"op": "hello", "replica": index})
+    server.run()
+
+
+# =========================================================================
+# parent side
+# =========================================================================
+
+class ProcessReplicaHandle:
+    """Parent-side proxy for one replica child process.
+
+    Satisfies the cluster's replica-handle protocol (``submit`` +
+    ReplicaView probes + drain/lifecycle hooks); every probe is a real RPC
+    into the child's engine counters, so routing policies see the same
+    racy-read semantics they see on the thread backend.  ``in_flight_ids``
+    is parent-side bookkeeping (submits minus completion frames) — exact,
+    because completions are the parent's own observation point.
+    """
+
+    def __init__(self, index: int, conn: socket.socket, proc):
+        self.index = index
+        self.conn = conn
+        self.proc = proc
+        self.name = f"replica-{index}"
+        self.on_complete: Optional[Callable[[List[Request]], None]] = None
+        self._send_lock = threading.Lock()
+        self._replies: Dict[int, "queue.Queue[dict]"] = {}
+        self._replies_lock = threading.Lock()
+        self._rid = itertools.count()
+        self._in_flight: set = set()
+        self._in_flight_lock = threading.Lock()
+        self.activated = False
+        self.retired = False
+        self.stopped = False
+        self._stats_cache: Optional[dict] = None
+        self._step_log_cache: Optional[list] = None
+        self._closed = False
+        self._reader = threading.Thread(
+            target=self._read_loop, name=f"replica-{index}-reader",
+            daemon=True)
+        self._reader.start()
+
+    # ------------------------------------------------------------ plumbing --
+    def _read_loop(self) -> None:
+        # try/finally: the fail-fast cleanup must run even if a completion
+        # listener raises out of on_complete — a dead reader that left
+        # _closed unset would turn every later RPC into a full-timeout
+        # stall instead of an immediate TransportClosed.
+        try:
+            while True:
+                msg = _recv_obj(self.conn)
+                if msg is None:
+                    break
+                if msg["op"] == "complete":
+                    finished = msg["reqs"]
+                    with self._in_flight_lock:
+                        self._in_flight -= {r.request_id for r in finished}
+                    try:
+                        if self.on_complete is not None:
+                            self.on_complete(finished)
+                    finally:
+                        # The ack releases the child's step thread:
+                        # listeners have run, follow-up actors are
+                        # registered, the replica may re-enter the barrier.
+                        try:
+                            _send_obj(self.conn, self._send_lock,
+                                      {"op": "complete_ack",
+                                       "cid": msg["cid"]})
+                        except OSError:
+                            pass
+                    continue
+                rid = msg.get("rid")
+                if rid is None:
+                    continue
+                with self._replies_lock:
+                    q = self._replies.get(rid)
+                if q is not None:
+                    q.put(msg)
+        finally:
+            self._closed = True
+            with self._replies_lock:
+                pending = list(self._replies.values())
+            for q in pending:
+                q.put({"op": "error", "error": "replica connection closed"})
+
+    def _rpc(self, msg: dict, timeout: float = _RPC_TIMEOUT) -> dict:
+        if self._closed:
+            raise TransportClosed(f"{self.name}: connection closed")
+        rid = next(self._rid)
+        msg["rid"] = rid
+        q: "queue.Queue[dict]" = queue.Queue(maxsize=1)
+        with self._replies_lock:
+            self._replies[rid] = q
+        try:
+            try:
+                _send_obj(self.conn, self._send_lock, msg)
+            except OSError as e:
+                raise TransportClosed(f"{self.name}: {e}") from None
+            try:
+                reply = q.get(timeout=timeout)
+            except queue.Empty:
+                raise TransportClosed(
+                    f"{self.name}: no reply to {msg['op']!r} within "
+                    f"{timeout}s") from None
+        finally:
+            with self._replies_lock:
+                self._replies.pop(rid, None)
+        if reply["op"] == "error":
+            raise RuntimeError(f"{self.name}: {reply['error']}")
+        return reply
+
+    def _send_oneway(self, msg: dict) -> None:
+        try:
+            _send_obj(self.conn, self._send_lock, msg)
+        except OSError:
+            pass
+
+    # ------------------------------------------------------------ replica --
+    def activate(self, spec: _EngineSpec) -> None:
+        self._rpc({"op": "start_engine", "spec": spec})
+        self.activated = True
+        self.name = spec.name
+
+    def submit(self, req: Request) -> None:
+        """Ship one request; returns once the child's engine enqueued it and
+        its worker actor is back on the Timekeeper barrier (the submit-ack
+        is the cross-process equivalent of the thread backend's synchronous
+        unpark — without it the dispatcher's next jump could skip the
+        request's processing entirely)."""
+        with self._in_flight_lock:
+            self._in_flight.add(req.request_id)
+        try:
+            self._rpc({"op": "submit", "req": req})
+        except Exception:
+            with self._in_flight_lock:
+                self._in_flight.discard(req.request_id)
+            raise
+
+    # --------------------------------------------------------- ReplicaView --
+    def num_outstanding(self) -> int:
+        return self._rpc({"op": "probe"})["num_outstanding"]
+
+    def outstanding_tokens(self) -> int:
+        return self._rpc({"op": "probe"})["outstanding_tokens"]
+
+    def prefix_match_len(self, tokens) -> int:
+        return self._rpc({"op": "probe", "tokens": list(tokens)})["prefix_match"]
+
+    def in_flight_ids(self) -> set:
+        with self._in_flight_lock:
+            return set(self._in_flight)
+
+    # ----------------------------------------------------------- lifecycle --
+    def start(self) -> None:
+        """No-op: the child's engine starts at activation (``start_engine``)."""
+
+    def retire(self) -> None:
+        """Drain final step — fire-and-forget by design: retirement can be
+        triggered from this handle's own completion path (the last in-flight
+        finish), where waiting for a reply would deadlock against the
+        child's pending ``complete_ack``."""
+        self.retired = True
+        self._send_oneway({"op": "retire"})
+
+    def stop(self) -> None:
+        if self.stopped or not self.activated:
+            return
+        # Snapshot accounting before the engine goes away mid-teardown.
+        try:
+            self._step_log_cache = self._rpc({"op": "step_log"})["log"]
+            self._stats_cache = self._rpc({"op": "stats"})["stats"]
+            self._rpc({"op": "stop_engine"})
+        except (TransportClosed, RuntimeError):
+            pass
+        self.stopped = True
+
+    def shutdown(self, timeout: float = 10.0) -> None:
+        self._send_oneway({"op": "shutdown"})
+        try:
+            self.conn.close()
+        except OSError:
+            pass
+        self.proc.join(timeout=timeout)
+        if self.proc.is_alive():
+            self.proc.terminate()
+            self.proc.join(timeout=5.0)
+
+    # ----------------------------------------------------------- accounting --
+    def stats(self) -> dict:
+        if self._stats_cache is not None:
+            return self._stats_cache
+        if not self.activated:
+            return {"name": self.name, "warm": True, "finished": 0,
+                    "outstanding_reqs": 0, "outstanding_tokens": 0,
+                    "steps": 0, "device_time_s": 0.0, "cpu_overhead_s": 0.0,
+                    "num_preemptions": 0, "prefix_hit_rate": 0.0}
+        try:
+            return self._rpc({"op": "stats"})["stats"]
+        except (TransportClosed, RuntimeError):
+            return self._stats_cache or {"name": self.name, "finished": 0,
+                                         "steps": 0, "device_time_s": 0.0,
+                                         "cpu_overhead_s": 0.0,
+                                         "num_preemptions": 0}
+
+    @property
+    def step_log(self) -> list:
+        if self._step_log_cache is not None:
+            return self._step_log_cache
+        if not self.activated:
+            return []
+        try:
+            return self._rpc({"op": "step_log"})["log"]
+        except (TransportClosed, RuntimeError):
+            return []
+
+
+class ProcessCluster(ClusterBase):
+    """Process backend: every replica engine in its own OS process.
+
+    The parent keeps the Timekeeper (served over TCP), the router, the
+    elastic-membership ledger, and the benchmark-facing surface; children
+    keep the engines.  The parent-side ``transport`` is a
+    :class:`~repro.core.client.LocalTransport` on the server's Timekeeper,
+    so the dispatcher / think-time / autoscaler actors of
+    ``BenchmarkRunner`` work unchanged — they are parent-process actors
+    coordinating with remote replica actors through one barrier.
+    """
+
+    backend = "process"
+
+    def __init__(
+        self,
+        handles: List[ProcessReplicaHandle],
+        router: Router,
+        *,
+        server: TimekeeperServer,
+        warm_pool: List[ProcessReplicaHandle],
+        spec_of: Callable[[int, Optional[str]], _EngineSpec],
+        spawn_replica: Callable[[int], ProcessReplicaHandle],
+        ctrl_listener: Optional[socket.socket] = None,
+        cfg: Optional[ClusterConfig] = None,
+        model_cfg: Optional[ModelConfig] = None,
+        tier_specs: Optional[Dict[str, TierSpec]] = None,
+        tier_spec_factory=None,
+    ):
+        self.server = server
+        self._warm_pool = list(warm_pool)
+        self._spec_of = spec_of
+        self._spawn_replica = spawn_replica
+        # kept open for pool-exhausted on-demand spawns; closed at shutdown
+        self._ctrl_listener = ctrl_listener
+        super().__init__(
+            handles, router, clock=server.timekeeper.clock,
+            transport=LocalTransport(server.timekeeper),
+            timekeeper=server.timekeeper, model_cfg=model_cfg, cfg=cfg,
+            tier_specs=tier_specs, tier_spec_factory=tier_spec_factory)
+        for h in handles + self._warm_pool:
+            h.on_complete = self._complete
+
+    # ------------------------------------------------------------ backend --
+    @property
+    def warm_available(self) -> int:
+        return len(self._warm_pool)
+
+    def _new_replica(self, idx: int, tier: Optional[str]):
+        """Activate a warm standby child (fast path: one ``start_engine``
+        frame); with the pool exhausted, spawn a fresh process — correct but
+        wall-expensive, so size ``warm_replicas`` to the autoscaler's
+        ``max_replicas`` for latency-faithful elastic runs."""
+        if self._warm_pool:
+            handle = self._warm_pool.pop(0)
+        else:
+            handle = self._spawn_replica(idx)
+            handle.on_complete = self._complete
+        handle.index = idx
+        handle.activate(self._spec_of(idx, tier))
+        return handle
+
+    def _attach_replica(self, handle) -> None:
+        handle.on_complete = self._complete
+
+    # ---------------------------------------------------------- lifecycle --
+    def shutdown(self) -> None:
+        self.stop()
+        for h in self.replicas + self._warm_pool:
+            h.shutdown()
+        self._warm_pool.clear()
+        if self._ctrl_listener is not None:
+            try:
+                self._ctrl_listener.close()
+            except OSError:
+                pass
+        # Server last: its close broadcasts the final releasing clock update
+        # to any child still mid-teardown.
+        self.server.close()
+
+    # --------------------------------------------------------- aggregates --
+    def stats(self) -> dict:
+        agg = super().stats()
+        agg["warm_standby"] = self.warm_available
+        return agg
+
+
+# =========================================================================
+# factory
+# =========================================================================
+
+def build_process_cluster(
+    *,
+    model_cfg: ModelConfig,
+    router: Router,
+    num_replicas: int,
+    resolve_cfg: Callable[[int, Optional[str]], EngineConfig],
+    resolve_pred: Callable[[EngineConfig, Optional[str]], object],
+    default_tier: Callable[[int], Optional[str]],
+    cluster_cfg: ClusterConfig,
+    tier_specs: Optional[Dict[str, TierSpec]] = None,
+    tier_spec_factory=None,
+    jitter_cooldown: float = 0.0,
+    warm_replicas: Optional[int] = None,
+    name: str = "cluster",
+) -> ProcessCluster:
+    """Spawn the Timekeeper server + child replica processes and wire them
+    into a :class:`ProcessCluster`.  Called through
+    :func:`repro.cluster.build_cluster` (``backend="process"``), which owns
+    the config/tier/predictor resolution shared with the thread backend."""
+    server = TimekeeperServer(jitter_cooldown=jitter_cooldown)
+
+    # Control listener: children dial back in and identify via `hello`.
+    listener = socket.create_server(("127.0.0.1", 0))
+    ctrl_addr = listener.getsockname()
+    ctx = multiprocessing.get_context("spawn")   # parent is multi-threaded:
+    # fork would duplicate it mid-lock; spawn re-imports a clean interpreter
+
+    total = max(num_replicas, warm_replicas or 0)
+
+    def spawn_replica(index: int) -> ProcessReplicaHandle:
+        proc = ctx.Process(
+            target=_replica_main,
+            args=(ctrl_addr, tuple(server.address), index),
+            name=f"{name}-r{index}", daemon=True)
+        proc.start()
+        listener.settimeout(_HANDSHAKE_TIMEOUT)
+        conn, _ = listener.accept()
+        conn.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        hello = _recv_obj(conn)
+        assert hello is not None and hello["op"] == "hello", \
+            f"replica {index} handshake failed"
+        return ProcessReplicaHandle(hello["replica"], conn, proc)
+
+    def spec_of(i: int, tier: Optional[str]) -> _EngineSpec:
+        tier = tier if tier is not None else default_tier(i)
+        cfg = resolve_cfg(i, tier)
+        return _EngineSpec(model_cfg=model_cfg, engine_cfg=cfg,
+                           predictor=resolve_pred(cfg, tier),
+                           name=f"{name}-r{i}", tier=tier)
+
+    handles: List[ProcessReplicaHandle] = []
+    warm: List[ProcessReplicaHandle] = []
+    try:
+        for i in range(total):
+            h = spawn_replica(i)
+            (handles if i < num_replicas else warm).append(h)
+        for i, h in enumerate(handles):
+            h.activate(spec_of(i, None))
+    except Exception:
+        for h in handles + warm:
+            h.shutdown(timeout=2.0)
+        listener.close()
+        server.close()
+        raise
+
+    return ProcessCluster(
+        handles, router, server=server, warm_pool=warm, spec_of=spec_of,
+        spawn_replica=spawn_replica, ctrl_listener=listener,
+        cfg=cluster_cfg, model_cfg=model_cfg,
+        tier_specs=tier_specs, tier_spec_factory=tier_spec_factory)

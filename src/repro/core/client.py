@@ -35,7 +35,14 @@ __all__ = ["ActorTransport", "TimeJumpClient", "Observer", "LocalTransport"]
 
 
 class ActorTransport(Protocol):
-    """Minimal surface an actor needs: a clock view + the fan-in request path."""
+    """Minimal surface an actor needs: a clock view + the fan-in request path.
+
+    ``clock`` is the authoritative shared clock for the in-process transport
+    and a broadcast-driven *replica* clock for the socket transport; the
+    :class:`TimeJumpClient` protocol loop is written against this protocol
+    only, which is what makes engine code byte-identical across the
+    in-process (thread) and socket (process) deployments.
+    """
 
     clock: VirtualClock
 
@@ -104,9 +111,12 @@ class TimeJumpClient:
     def park(self) -> None:
         """Leave the barrier but stay known to the Timekeeper (idle replica).
 
-        Transports without a park surface (e.g. the socket transport) fall
-        back to full deregistration — semantically equivalent, just without
-        the cheap-re-entry bookkeeping."""
+        Both built-in transports (:class:`LocalTransport` and the socket
+        transport's ``park``/``unpark`` frames) expose the park surface, so
+        engine code behaves identically in-process and cross-process.  A
+        custom transport without one falls back to full deregistration —
+        semantically equivalent, just without the cheap-re-entry
+        bookkeeping."""
         if not self._registered or self._parked:
             return
         park = getattr(self._transport, "park_actor", None)

@@ -136,7 +136,12 @@ class Timekeeper:
                 # drain teardown) re-checks instead of riding out its
                 # degradation timeout — with a manual wall source that
                 # timeout would never elapse and the thread would wedge.
+                # Fan the bump out to broadcast hooks too: a *remote* client
+                # holds a replica clock and only learns of epoch movement
+                # through broadcast frames (the in-process condition variable
+                # it cannot see).
                 self.clock.advance_to(self.clock.now())
+                self._fanout_locked()
 
     # -------------------------------------------------------- park/unpark --
     # Cluster-scale support: N replica engines share one Timekeeper and most
@@ -173,8 +178,12 @@ class Timekeeper:
             self._actors.clear()
             self._parked.clear()
             self._pending.clear()
-        # Final epoch bump releases any straggling waiters immediately.
-        self.clock.advance_to(-float("inf"))
+            # Final epoch bump releases any straggling waiters immediately —
+            # broadcast it so *remote* waiters (replica clocks on the socket
+            # transport, possibly parked) release too instead of riding out
+            # their degradation timeouts.
+            self.clock.advance_to(-float("inf"))
+            self._fanout_locked()
 
     @property
     def num_actors(self) -> int:
@@ -187,13 +196,24 @@ class Timekeeper:
             return len(self._parked)
 
     def add_broadcast_hook(self, hook: Callable[[float, int], None]) -> None:
-        """Fan-out path: called as hook(offset, epoch) after each resolution.
+        """Fan-out path: called as hook(offset, epoch) after *every* clock
+        epoch bump — barrier resolutions, the deregistration fallback bump,
+        and the final bump in :meth:`close`.
 
-        The socket transport uses this to push updates to remote replicas;
-        in-process clients share ``self.clock`` and need no hook.
+        The socket transport uses this to push updates to remote replica
+        clocks; in-process clients share ``self.clock`` and need no hook.
+        Hooks run with the Timekeeper lock held and must not block (the
+        socket transport's hook is a queue append).
         """
         with self._lock:
             self._broadcast_hooks.append(hook)
+
+    def _fanout_locked(self) -> None:
+        """Push the clock's current (offset, epoch) to every broadcast hook.
+        Caller holds ``self._lock``."""
+        offset, epoch = self.clock.offset, self.clock.epoch
+        for hook in self._broadcast_hooks:
+            hook(offset, epoch)
 
     # ---------------------------------------------------------- protocol --
     def request_jump(self, actor_id: str, t_target: float) -> int:
@@ -245,5 +265,4 @@ class Timekeeper:
         self.stats.rounds += 1
         self._last_advance_wall = self.clock.wall.time()
         self._pending.clear()
-        for hook in self._broadcast_hooks:
-            hook(after, epoch)
+        self._fanout_locked()

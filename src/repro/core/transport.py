@@ -9,11 +9,36 @@ same architecture on stdlib TCP sockets:
 * **fan-in** — each client connection gets a reader thread on the server;
   jump requests are applied to the shared :class:`Timekeeper` and acked
   with the pre-resolution epoch.
-* **fan-out** — barrier resolutions enqueue one ``(offset, epoch)`` record;
-  a single broadcast thread serializes it *once* and writes it to every
-  connection (constant serialization cost per round, per §4.2).
+* **fan-out** — every clock epoch bump (barrier resolutions, deregistration
+  fallback bumps, the final bump on close) enqueues one ``(offset, epoch)``
+  record; a single broadcast thread serializes it *once* and writes it to
+  every connection (constant serialization cost per round, per §4.2).
 
 Framing: 4-byte big-endian length prefix + msgpack body.
+
+Frame ops (fan-in requests carry a ``rid``; the reply echoes it):
+
+====================  ====================================================
+``register``          join the barrier set
+``deregister``        leave permanently; re-evaluates the barrier, and the
+                      epoch is bumped + broadcast even if no round resolves
+``park`` ``unpark``   leave/re-join the barrier while staying known to the
+                      Timekeeper (idle replica engines — the cluster-scale
+                      fast path); parking re-evaluates the barrier so a
+                      parked remote replica can never stall a round
+``jump``              Algorithm 1 fan-in; ack carries the pre-resolution
+                      epoch to wait past
+``time``              one-shot observer query
+``clock``             fan-out broadcast (no rid): replica clock update
+====================  ====================================================
+
+Every successful ack additionally piggybacks the server's current
+``(clock_offset, clock_epoch)``, which the client installs on receipt.
+Broadcasts and acks are FIFO per connection, but a *cross-channel* message
+(the cluster control plane runs on separate sockets) can outrun a clock
+broadcast; the piggyback bounds that staleness at one RPC — an actor that
+just acked an operation acts on a clock at least as fresh as the server
+state the ack observed.
 
 Clients hold a *replica* :class:`VirtualClock` driven by clock-update frames.
 Server and clients must share a wall epoch, so both sides default to
@@ -35,9 +60,13 @@ import msgpack
 from .clock import UnixWallSource, VirtualClock
 from .timekeeper import Timekeeper
 
-__all__ = ["TimekeeperServer", "SocketTransport"]
+__all__ = ["TimekeeperServer", "SocketTransport", "TransportClosed"]
 
 _LEN = struct.Struct(">I")
+
+
+class TransportClosed(ConnectionError):
+    """The transport's socket is gone (server close / peer death)."""
 
 
 def _send_frame(sock: socket.socket, obj: dict) -> None:
@@ -92,6 +121,7 @@ class TimekeeperServer:
             lambda off, ep: self._bcast_q.put((off, ep))
         )
         self._stop = threading.Event()
+        self._closed = False
         self._accept_thread = threading.Thread(
             target=self._accept_loop, name="timekeeper-accept", daemon=True
         )
@@ -103,7 +133,10 @@ class TimekeeperServer:
 
     # ---------------------------------------------------------- fan-out ---
     def _broadcast_loop(self) -> None:
-        while not self._stop.is_set():
+        # Runs until the None sentinel: close() enqueues the Timekeeper's
+        # final epoch bump *before* the sentinel, so remote waiters always
+        # see the releasing update before their connection dies.
+        while True:
             item = self._bcast_q.get()
             if item is None:
                 return
@@ -142,6 +175,8 @@ class TimekeeperServer:
             ).start()
 
     def _serve_conn(self, cid: int, conn: socket.socket) -> None:
+        # Every actor this connection ever registered (parked ones included:
+        # park keeps the actor known, so its death must still deregister it).
         actors_here: set[str] = set()
         tk = self.timekeeper
         try:
@@ -150,39 +185,47 @@ class TimekeeperServer:
                 if msg is None:
                     break
                 op = msg["op"]
-                if op == "jump":
-                    try:
+                try:
+                    if op == "jump":
                         epoch = tk.request_jump(msg["actor"], msg["target"])
-                        reply = {"op": "jump_ack", "rid": msg["rid"], "epoch": epoch}
-                    except KeyError as e:
-                        reply = {"op": "error", "rid": msg["rid"], "error": str(e)}
-                    _send_frame(conn, reply)
-                elif op == "register":
-                    tk.register_actor(msg["actor"])
-                    actors_here.add(msg["actor"])
-                    _send_frame(
-                        conn,
-                        {
-                            "op": "register_ack",
-                            "rid": msg["rid"],
-                            "offset": tk.clock.offset,
-                            "epoch": tk.clock.epoch,
-                        },
-                    )
-                elif op == "deregister":
-                    tk.deregister_actor(msg["actor"])
-                    actors_here.discard(msg["actor"])
-                    _send_frame(conn, {"op": "deregister_ack", "rid": msg["rid"]})
-                elif op == "time":
-                    _send_frame(
-                        conn,
-                        {
-                            "op": "time_ack",
-                            "rid": msg["rid"],
-                            "offset": tk.clock.offset,
-                            "epoch": tk.clock.epoch,
-                        },
-                    )
+                        reply = {"op": "jump_ack", "rid": msg["rid"],
+                                 "epoch": epoch}
+                    elif op == "register":
+                        tk.register_actor(msg["actor"])
+                        actors_here.add(msg["actor"])
+                        reply = {"op": "register_ack", "rid": msg["rid"]}
+                    elif op == "deregister":
+                        tk.deregister_actor(msg["actor"])
+                        actors_here.discard(msg["actor"])
+                        reply = {"op": "deregister_ack", "rid": msg["rid"]}
+                    elif op == "park":
+                        tk.park_actor(msg["actor"])
+                        reply = {"op": "park_ack", "rid": msg["rid"]}
+                    elif op == "unpark":
+                        tk.unpark_actor(msg["actor"])
+                        reply = {"op": "unpark_ack", "rid": msg["rid"]}
+                    elif op == "time":
+                        reply = {"op": "time_ack", "rid": msg["rid"]}
+                    else:
+                        reply = {"op": "error", "rid": msg.get("rid"),
+                                 "error": f"unknown op {op!r}"}
+                except (KeyError, RuntimeError) as e:
+                    # Unregistered actor / closed Timekeeper: the *request*
+                    # fails, the connection (and its other actors) live on.
+                    reply = {"op": "error", "rid": msg["rid"], "error": str(e)}
+                if reply["op"] != "error":
+                    # Every ack piggybacks the current clock pair (distinct
+                    # keys: jump_ack's "epoch" is the *pre-resolution* value
+                    # the client waits past).  The reply path is FIFO with
+                    # this connection's broadcasts, but a *cross-channel*
+                    # message (e.g. a cluster-plane submit racing the
+                    # fan-out) can outrun them — piggybacking bounds that
+                    # staleness at one RPC, so an actor acting on an ack
+                    # always acts on a clock at least as fresh as the state
+                    # that ack observed.
+                    reply["clock_offset"] = tk.clock.offset
+                    reply["clock_epoch"] = tk.clock.epoch
+                _send_frame(conn, reply)
         finally:
             # Connection death == actor death: deregister so the barrier is
             # never wedged by a crashed worker (fault tolerance).
@@ -200,8 +243,20 @@ class TimekeeperServer:
                 pass
 
     def close(self) -> None:
+        """Tear down: final clock broadcast first, then the sockets.
+
+        ``Timekeeper.close`` bumps the epoch and fans it out through the
+        broadcast hook, so every remote client — parked actors included —
+        receives a releasing clock update *before* its connection is cut;
+        nobody rides out a degradation timeout at shutdown.
+        """
+        if self._closed:
+            return
+        self._closed = True
         self._stop.set()
-        self._bcast_q.put(None)
+        self.timekeeper.close()          # enqueues the final clock update
+        self._bcast_q.put(None)          # sentinel AFTER the final update
+        self._bcast_thread.join(timeout=5)
         try:
             self._listener.close()
         except OSError:
@@ -213,24 +268,34 @@ class TimekeeperServer:
                 except OSError:
                     pass
             self._conns.clear()
-        self.timekeeper.close()
 
 
 class SocketTransport:
     """Client-side transport: replica clock + request/reply over one socket.
 
-    Satisfies the :class:`repro.core.client.ActorTransport` protocol, so
-    :class:`TimeJumpClient` works unchanged over it.  Thread-safe: multiple
-    actors in one process may share a transport.
+    Satisfies the :class:`repro.core.client.ActorTransport` protocol —
+    including the park/unpark surface — so :class:`TimeJumpClient` (and
+    therefore the engine code built on it) is byte-identical over this
+    transport and the in-process :class:`~repro.core.client.LocalTransport`.
+    Thread-safe: multiple actors in one process may share a transport.
+
+    ``rpc_timeout`` bounds every request/reply round trip: a server that
+    stops answering (wedged, dead, partitioned) surfaces as
+    :class:`TransportClosed` after that many wall seconds instead of
+    blocking the actor forever — the caller still holds a replica clock
+    that advances at wall rate, so this is the degradation path of §4.2.1,
+    never a correctness loss.
     """
 
-    def __init__(self, address: tuple[str, int]):
+    def __init__(self, address: tuple[str, int], *, rpc_timeout: float = 30.0):
         self._sock = socket.create_connection(address)
         self._sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        self.rpc_timeout = float(rpc_timeout)
         self.clock = VirtualClock(UnixWallSource())
         self._send_lock = threading.Lock()
         self._replies: Dict[str, "queue.Queue[dict]"] = {}
         self._replies_lock = threading.Lock()
+        self._closed = False
         self._reader = threading.Thread(
             target=self._read_loop, name="timekeeper-client-reader", daemon=True
         )
@@ -238,23 +303,38 @@ class SocketTransport:
 
     # ------------------------------------------------------------ plumbing --
     def _read_loop(self) -> None:
-        while True:
-            msg = _recv_frame(self._sock)
-            if msg is None:
-                return
-            if msg["op"] == "clock":
-                # Fan-out path: install the broadcast into the replica clock.
-                self.clock.apply_update(msg["offset"], msg["epoch"])
-                continue
-            rid = msg.get("rid")
-            if rid is None:
-                continue
+        try:
+            while True:
+                msg = _recv_frame(self._sock)
+                if msg is None:
+                    break
+                if msg["op"] == "clock":
+                    # Fan-out path: install the broadcast into the replica.
+                    self.clock.apply_update(msg["offset"], msg["epoch"])
+                    continue
+                rid = msg.get("rid")
+                if rid is None:
+                    continue
+                with self._replies_lock:
+                    q = self._replies.get(rid)
+                if q is not None:
+                    q.put(msg)
+        finally:
+            # Socket gone (server close / network death): fail every pending
+            # RPC immediately and bump the replica clock epoch so local
+            # waiters re-check instead of sleeping out their full
+            # degradation timeout.  In a finally so no exception path can
+            # leave the transport looking alive with a dead reader.
+            self._closed = True
             with self._replies_lock:
-                q = self._replies.get(rid)
-            if q is not None:
-                q.put(msg)
+                pending = list(self._replies.values())
+            for q in pending:
+                q.put({"op": "closed", "error": "transport closed"})
+            self.clock.advance_to(self.clock.now())
 
-    def _rpc(self, msg: dict, timeout: float = 30.0) -> dict:
+    def _rpc(self, msg: dict, timeout: Optional[float] = None) -> dict:
+        if self._closed:
+            raise TransportClosed("transport closed")
         rid = uuid.uuid4().hex
         msg["rid"] = rid
         q: "queue.Queue[dict]" = queue.Queue(maxsize=1)
@@ -262,22 +342,47 @@ class SocketTransport:
             self._replies[rid] = q
         try:
             with self._send_lock:
-                _send_frame(self._sock, msg)
-            reply = q.get(timeout=timeout)
+                try:
+                    _send_frame(self._sock, msg)
+                except OSError as e:
+                    raise TransportClosed(f"transport closed: {e}") from None
+            try:
+                reply = q.get(timeout=timeout if timeout is not None
+                              else self.rpc_timeout)
+            except queue.Empty:
+                raise TransportClosed(
+                    f"no reply to {msg['op']!r} within "
+                    f"{timeout if timeout is not None else self.rpc_timeout}s"
+                ) from None
         finally:
             with self._replies_lock:
                 self._replies.pop(rid, None)
+        if reply["op"] == "closed":
+            raise TransportClosed(reply["error"])
         if reply["op"] == "error":
             raise KeyError(reply["error"])
+        if "clock_offset" in reply:
+            # Acks piggyback the server clock (see the server's reply path):
+            # installing it here means every RPC refreshes the replica, so a
+            # caller acting on an ack can never act on a clock staler than
+            # the server state that ack observed.
+            self.clock.apply_update(reply["clock_offset"],
+                                    reply["clock_epoch"])
         return reply
 
     # -------------------------------------------------- ActorTransport API --
     def register_actor(self, actor_id: str) -> None:
-        reply = self._rpc({"op": "register", "actor": actor_id})
-        self.clock.apply_update(reply["offset"], reply["epoch"])
+        self._rpc({"op": "register", "actor": actor_id})
 
     def deregister_actor(self, actor_id: str) -> None:
         self._rpc({"op": "deregister", "actor": actor_id})
+
+    def park_actor(self, actor_id: str) -> None:
+        """Leave the barrier but stay known (idle replica fast path)."""
+        self._rpc({"op": "park", "actor": actor_id})
+
+    def unpark_actor(self, actor_id: str) -> None:
+        self._rpc({"op": "unpark", "actor": actor_id})
 
     def send_jump_request(self, actor_id: str, t_target: float) -> int:
         return self._rpc({"op": "jump", "actor": actor_id, "target": t_target})[
@@ -286,11 +391,11 @@ class SocketTransport:
 
     def observer_time(self) -> float:
         """One-shot observer query (also refreshes the replica)."""
-        reply = self._rpc({"op": "time"})
-        self.clock.apply_update(reply["offset"], reply["epoch"])
+        self._rpc({"op": "time"})
         return self.clock.now()
 
     def close(self) -> None:
+        self._closed = True
         try:
             self._sock.shutdown(socket.SHUT_RDWR)
         except OSError:

@@ -19,10 +19,12 @@ paper's semantic-gap argument to N replicas.
 Elastic mode: the simulator consumes the same
 :class:`~repro.cluster.autoscaler.AutoscalerPolicy` objects as the emulated
 cluster — policy ticks are events every ``interval_s``, scale-ups append a
-fresh replica after the modeled ``provision_delay_s``, and scale-downs drain
-the highest-index active replica (the same deterministic victim rule the
-emulator's Autoscaler uses), so emulator-vs-DES parity extends to runs where
-replicas join and leave mid-stream.
+fresh replica after the modeled ``provision_delay_s``, and scale-downs pick
+their victim through the shared
+:func:`~repro.cluster.autoscaler.drain_victim` rule (most expensive idle
+tier first, index tie-break — literally the same function the emulator's
+Autoscaler calls), so emulator-vs-DES parity extends to runs where replicas
+join and leave mid-stream, on mixed pools included.
 
 Heterogeneous mode: ``replica_tiers`` gives each replica a hardware tier;
 ``tier_predictors`` supplies the per-tier step-time predictors and
@@ -295,6 +297,10 @@ class DiscreteEventSimulator:
                     "tier_specs= (shared with the emulated cluster)")
             asc_tier_specs = [self.tier_specs[t] for t in asc_cfg.tiers]
         view = _DESView(self)
+        if self.autoscaler_policy is not None:
+            # Same anchoring call the emulator's Autoscaler makes at start:
+            # the DES timeline originates at 0.0 by construction.
+            self.autoscaler_policy.set_origin(0.0)
 
         counter = itertools.count()
         # event payload: SimRequest for ARRIVAL, replica index for STEP_DONE,
@@ -346,12 +352,18 @@ class DiscreteEventSimulator:
             heapq.heappush(
                 events, (now + dur, next(counter), self.STEP_DONE, rep.index))
 
-        def drain_victim() -> Optional[int]:
-            # deterministic membership-only rule, mirrored from the
-            # emulator's Autoscaler._pick_victim
-            if len(self.active) <= 1:
-                return None
-            return max(self.active)
+        def pick_drain_victim() -> Optional[int]:
+            # the exact rule object the emulator's Autoscaler._pick_victim
+            # calls: most expensive idle tier first, index tie-break
+            from repro.cluster.autoscaler import drain_victim
+
+            def cost_of(i: int) -> float:
+                t = self.replicas[i].tier
+                return 0.0 if t is None else self.tier_specs[t].cost_per_replica_s
+
+            return drain_victim(self.active,
+                                idle_of=lambda i: self.replicas[i].idle(),
+                                cost_of=cost_of)
 
         def apply_autoscale(delta: int):
             nonlocal provisioning
@@ -373,7 +385,7 @@ class DiscreteEventSimulator:
             elif delta < 0:
                 allowed = max(0, committed - asc_cfg.min_replicas)
                 for _ in range(min(-delta, allowed)):
-                    victim = drain_victim()
+                    victim = pick_drain_victim()
                     if victim is None:
                         break
                     self.active.remove(victim)

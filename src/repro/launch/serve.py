@@ -44,7 +44,7 @@ def main() -> None:
     from repro.serving.benchmark import BenchmarkRunner
     from repro.serving.scheduler import EngineConfig
     from repro.serving.stack import build_stack
-    from repro.serving.workload import WorkloadConfig, synthesize
+    from repro.workload import WorkloadConfig, synthesize
 
     engine_cfg = EngineConfig(
         policy=args.policy, max_num_seqs=args.max_num_seqs,

@@ -164,6 +164,13 @@ class LLMEngine:
         with self._live_lock:
             return len(self._live)
 
+    def in_flight_ids(self) -> set:
+        """Snapshot of submitted-but-unfinished request ids (drain
+        bookkeeping: the cluster waits for exactly this set before retiring
+        a replica)."""
+        with self._live_lock:
+            return set(self._live)
+
     def outstanding_tokens(self) -> int:
         """Remaining scheduled work in tokens (prefill left + decode left).
 
@@ -218,6 +225,16 @@ class LLMEngine:
     @property
     def is_running(self) -> bool:
         return self._thread is not None and self._thread.is_alive()
+
+    def retire(self) -> None:
+        """Leave the shared timeline permanently (cluster drain): the
+        replica's worker actors deregister from the Timekeeper — a full
+        departure with an epoch bump, not a park — while the engine thread
+        keeps running (it idles parked-less and costs nothing on the
+        barrier); ``stop()`` reaps it with the rest of the cluster."""
+        retire = getattr(self.runner, "retire", None)
+        if retire is not None:
+            retire()
 
     def run_loop(self) -> None:
         while not self._stop.is_set():

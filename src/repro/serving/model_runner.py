@@ -119,6 +119,15 @@ class TimeWarpModelRunner:
         elif self.client is not None:
             self.client.unpark()
 
+    def retire(self) -> None:
+        """Permanent departure from the Timekeeper (cluster drain): a real
+        deregistration — with the barrier re-evaluation + epoch bump that
+        park lacks — so a drained replica is forgotten entirely."""
+        if self.workers is not None:
+            self.workers.park()          # WorkerGroup park == deregister all
+        elif self.client is not None:
+            self.client.deregister()
+
     def shutdown(self) -> None:
         self.park()
         if self.workers is not None:
@@ -143,6 +152,7 @@ class SleepModelRunner:
 
     def park(self) -> None: ...
     def unpark(self) -> None: ...
+    def retire(self) -> None: ...
     def shutdown(self) -> None: ...
 
 

@@ -1,12 +1,24 @@
-"""Compatibility shim: the workload layer moved to :mod:`repro.workload`.
+"""DEPRECATED compatibility shim: the workload layer moved to
+:mod:`repro.workload`.
 
 Kept so historical imports (``from repro.serving.workload import
 WorkloadConfig, synthesize``) keep working; new code should import from
-``repro.workload`` which adds arrival processes and session workloads.
+``repro.workload``, which adds arrival processes and session workloads.
+Importing this module emits a :class:`DeprecationWarning` (once per
+process, per the import cache).
 """
+
+import warnings
 
 from repro.workload.synth import (WorkloadConfig, lognormal_lengths,  # noqa: F401
                                   replay_trace, synthesize)
+
+warnings.warn(
+    "repro.serving.workload is deprecated; import from repro.workload "
+    "instead (same names, plus arrival processes and session workloads)",
+    DeprecationWarning,
+    stacklevel=2,
+)
 
 __all__ = ["WorkloadConfig", "synthesize", "replay_trace",
            "lognormal_lengths"]

@@ -163,6 +163,14 @@ class SessionWorkload:
                 context = prompt + [_DUMMY] * out
             if sess.turns:
                 self.sessions.append(sess)
+        # Precomputed id -> list-index map (sessions whose first turn didn't
+        # fit max_context_len are dropped, so ids aren't dense).  Built
+        # eagerly because follow_up() is called from completion contexts
+        # that may run concurrently — engine step threads (thread backend)
+        # or per-replica completion-frame reader threads (process backend)
+        # — and a lazily-built dict would race its own construction.
+        self._id_index = {s.session_id: i
+                          for i, s in enumerate(self.sessions)}
 
     # ---------------------------------------------------------- accounting --
     @property
@@ -191,8 +199,12 @@ class SessionWorkload:
     def follow_up(self, finished) -> Optional[Request]:
         """The closed-loop rule: given a *finished* turn (anything exposing
         ``session_id`` / ``turn_index`` / ``finish_time`` — an engine
-        :class:`Request` or a DES ``SimRequest``), build the next turn with
-        ``arrival = finish + think`` — or None if the conversation is over."""
+        :class:`Request`, the unpickled copy a process-mode replica ships
+        back in its completion frame, or a DES ``SimRequest``), build the
+        next turn with ``arrival = finish + think`` — or None if the
+        conversation is over.  Thread-safe (pure reads over pre-sampled
+        specs): completion contexts on all backends may call it
+        concurrently."""
         sid = getattr(finished, "session_id", None)
         if sid is None:
             return None
@@ -206,9 +218,4 @@ class SessionWorkload:
                              finished.finish_time + spec.think_time)
 
     def _index_of(self, session_id: int) -> int:
-        # session_ids are assigned densely but sessions whose first turn
-        # didn't fit max_context_len are dropped; map id -> list index.
-        if not hasattr(self, "_id_index"):
-            self._id_index = {s.session_id: i
-                              for i, s in enumerate(self.sessions)}
         return self._id_index[session_id]

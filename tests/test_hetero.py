@@ -14,8 +14,9 @@ import pytest
 
 from repro.cluster import (Autoscaler, AutoscalerConfig, QueueDepthPolicy,
                            SchedulePolicy, TierSpec, TTFTSLOPolicy,
-                           build_cluster, make_router, make_tier_specs,
-                           probe_throughput, provision_delay, tier_engine_cfg)
+                           build_cluster, drain_victim, make_router,
+                           make_tier_specs, probe_throughput,
+                           provision_delay, tier_engine_cfg)
 from repro.configs import get_config, get_reduced_config
 from repro.core.clock import ManualWallSource
 from repro.core.hardware import get_chip
@@ -393,3 +394,92 @@ def test_des_rejects_unknown_tier():
     with pytest.raises(ValueError):
         DiscreteEventSimulator(StaticPredictor(5e-3), num_replicas=1,
                                replica_tiers=["l4"])
+
+
+# =========================================================================
+# tier-aware drain victim selection (shared emulator/DES rule)
+# =========================================================================
+
+def test_drain_victim_prefers_expensive_idle_tier():
+    costs = {0: 5.5 / 3600, 1: 0.8 / 3600, 2: 5.5 / 3600}
+    # all idle: the pricier tier goes first, index breaks the h100 tie
+    assert drain_victim([0, 1, 2], idle_of=lambda i: True,
+                        cost_of=costs.get) == 2
+    assert drain_victim([0, 1], idle_of=lambda i: True,
+                        cost_of=costs.get) == 0
+    # only the cheap replica is idle: it wins over busy expensive ones
+    assert drain_victim([0, 1, 2], idle_of=lambda i: i == 1,
+                        cost_of=costs.get) == 1
+    # nobody idle: same (cost, index) order over the busy set
+    assert drain_victim([0, 1, 2], idle_of=lambda i: False,
+                        cost_of=costs.get) == 2
+    # untiered pool (cost 0.0 everywhere): historical highest-index rule
+    assert drain_victim([0, 1, 2], idle_of=lambda i: True,
+                        cost_of=lambda i: 0.0) == 2
+    assert drain_victim([0], idle_of=lambda i: True,
+                        cost_of=lambda i: 0.0) is None
+
+
+def test_autoscaler_drains_expensive_idle_tier_first():
+    """Mixed quiet pool [h100, l4, h100]: the scripted scale-down must give
+    back an idle h100 (highest index breaks the tie), not the historical
+    highest-index-only victim semantics' cheapest... i.e. never the l4."""
+    reqs = workload(n=8, qps=1e4)
+    tail = workload(n=1, qps=1.0, seed=9)
+    tail[0].arrival_time = 1.0        # keeps the run alive past the drain
+    cluster = build(["h100", "l4", "h100"])
+    asc = Autoscaler(cluster, SchedulePolicy([(0.4, -1)]),
+                     AutoscalerConfig(interval_s=0.05, provision_delay_s=0.1,
+                                      min_replicas=1, max_replicas=3))
+    try:
+        BenchmarkRunner(cluster, reqs + tail, transport=cluster.transport,
+                        autoscaler=asc).run(timeout=120)
+        drained = [m["replica"] for m in cluster.membership_events()
+                   if m["drained"] is not None]
+        assert drained == [2], \
+            f"expected the idle h100 at index 2 to drain, got {drained}"
+        assert len(cluster.finished) == 9
+    finally:
+        cluster.shutdown()
+
+
+def test_hetero_drain_parity_emulator_vs_des():
+    """Scripted drain on a mixed [h100, l4, h100] pool: the shared
+    drain_victim rule must retire the same replica at the same virtual time
+    on both sides, keeping per-request latencies within one slow step."""
+    events = [(0.4, -1)]
+    asc_cfg = AutoscalerConfig(interval_s=0.05, provision_delay_s=0.1,
+                               min_replicas=1, max_replicas=3)
+    reqs = workload(n=12, qps=40.0)
+    reqs[-1].arrival_time = 1.0
+    reqs_des = copy.deepcopy(reqs)
+    ecfg = engine_cfg(enable_prefix_caching=False)
+
+    cluster = build(["h100", "l4", "h100"], ecfg=ecfg)
+    asc = Autoscaler(cluster, SchedulePolicy(events), asc_cfg)
+    try:
+        BenchmarkRunner(cluster, reqs, transport=cluster.transport,
+                        autoscaler=asc).run(timeout=120)
+        emu = {r.request_id: r.e2e_latency() for r in cluster.finished}
+        emu_drained = [m["replica"] for m in cluster.membership_events()
+                       if m["drained"] is not None]
+    finally:
+        cluster.shutdown()
+
+    des = DiscreteEventSimulator(
+        StaticPredictor(DT["h100"]),
+        DESConfig(max_num_seqs=8, max_batched_tokens=64, step_overhead_s=0.0),
+        num_replicas=3, router=make_router("round_robin", 3),
+        autoscaler_policy=SchedulePolicy(events), autoscaler_cfg=asc_cfg,
+        replica_tiers=["h100", "l4", "h100"],
+        tier_predictors=tier_predictors(), tier_specs=tier_specs(ecfg))
+    sims = des.run(reqs_des)
+
+    des_drained = [r.index for r in des.replicas if r.drained_at is not None]
+    assert emu_drained == des_drained == [2]
+    slow = max(DT.values())
+    for orig, sim in zip(reqs_des, sims):
+        assert sim.finish_time is not None
+        err = abs(emu[orig.request_id] - (sim.finish_time - sim.arrival_time))
+        assert err <= slow + 1e-9, \
+            f"request {orig.request_id} diverges by {err / slow:.2f} steps"

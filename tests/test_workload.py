@@ -228,3 +228,33 @@ def test_session_synthesis_deterministic(seed):
             assert ta.prompt_tokens == tb.prompt_tokens
             assert ta.max_new_tokens == tb.max_new_tokens
             assert ta.think_time == tb.think_time
+
+
+# =========================================================================
+# compat shim deprecation
+# =========================================================================
+
+def test_serving_workload_shim_warns_deprecation_once():
+    """The repro.serving.workload shim must emit exactly one
+    DeprecationWarning at import time — and none on re-import (module
+    cache), so legacy call sites are nudged without being spammed."""
+    import importlib
+    import sys
+    import warnings
+
+    sys.modules.pop("repro.serving.workload", None)
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        import repro.serving.workload as shim
+    dep = [w for w in rec if issubclass(w.category, DeprecationWarning)
+           and "repro.workload" in str(w.message)]
+    assert len(dep) == 1, f"expected exactly one warning, got {len(dep)}"
+
+    with warnings.catch_warnings(record=True) as rec2:
+        warnings.simplefilter("always")
+        import repro.serving.workload  # noqa: F401  (cached: no new warning)
+    assert not [w for w in rec2 if issubclass(w.category, DeprecationWarning)]
+
+    # the shim still re-exports the moved surface
+    assert shim.WorkloadConfig is WorkloadConfig
+    assert shim.synthesize is synthesize
