@@ -13,11 +13,15 @@ from pathlib import Path
 from typing import Dict, List, Optional
 
 ARTIFACTS = Path(__file__).parent / "artifacts"
-ARTIFACTS.mkdir(exist_ok=True)
 
 
 def emit(name: str, rows: List[Dict]) -> None:
-    """Persist benchmark rows as a JSONL artifact."""
+    """Persist benchmark rows as a JSONL artifact.
+
+    The artifacts directory is created here, not at import time: importing a
+    benchmark module (docs examples, tests, ``--only`` filtering) must stay
+    side-effect free."""
+    ARTIFACTS.mkdir(exist_ok=True)
     path = ARTIFACTS / f"{name}.jsonl"
     with open(path, "w") as f:
         for r in rows:

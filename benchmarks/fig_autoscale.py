@@ -3,9 +3,12 @@
 The sweep the elastic traffic layer exists for: a closed-loop session
 workload (multi-turn chat, follow-ups carry the prior turn's tokens) with a
 tunable burstiness knob (gamma inter-arrival cv²) drives a cluster whose
-membership is controlled by an :class:`~repro.cluster.autoscaler.Autoscaler`
-— all under time-warp emulation with a ManualWallSource, so every cell is a
-deterministic pure-jump timeline reproducible from its seed.
+membership is controlled by an :class:`~repro.cluster.autoscaler.Autoscaler`.
+Every cell is a :class:`~repro.scenario.Scenario` derived from the
+``autoscale_burst`` preset — the policy variants differ only in their
+``autoscale`` sub-spec — executed by :func:`repro.scenario.run` on the
+thread backend (ManualWallSource: every cell is a deterministic pure-jump
+timeline reproducible from its seed).
 
 Per cell we report TTFT percentiles, SLO attainment, and **replica-seconds**
 (the cost proxy: how much capacity × time the configuration burned).  The
@@ -14,31 +17,21 @@ fixed-N deployment's attainment while spending meaningfully fewer
 replica-seconds on bursty traffic (fixed-N pays for capacity that idles
 between bursts; the autoscaler rents it only during them).
 
-A parity block re-runs an elastic (scale-up + drain mid-run, scripted
-SchedulePolicy) scenario on the DES baseline sharing the same router,
-predictor, and autoscaler policy objects — per-request latencies must agree
-within one predictor step, extending the §2.3 semantic-gap argument to
-elastic membership.
+The parity block is a :func:`repro.scenario.compare` of an elastic
+(scale-up + drain mid-run, scripted schedule policy) scenario on the thread
+emulator vs the DES baseline — per-request latencies must agree within one
+predictor step, extending the §2.3 semantic-gap argument to elastic
+membership.
 """
 
 from __future__ import annotations
 
-import copy
+import dataclasses
 
 from benchmarks.common import emit, print_table
-from repro.cluster import (Autoscaler, AutoscalerConfig, SchedulePolicy,
-                           build_cluster, make_autoscaler_policy, make_router)
-from repro.configs import get_config
-from repro.core.clock import ManualWallSource
-from repro.core.predictor import StaticPredictor
-from repro.des.simulator import DESConfig, DiscreteEventSimulator
-from repro.serving.benchmark import BenchmarkRunner
-from repro.serving.scheduler import EngineConfig
-from repro.workload import SessionConfig, SessionWorkload, WorkloadConfig, synthesize
+from repro.scenario import (AutoscaleSpec, compare, get_preset, run,
+                            scenario_with)
 
-BATCH_S = 20e-3
-MAX_NUM_SEQS = 8
-MAX_BATCHED_TOKENS = 512
 MAX_REPLICAS = 4
 
 BURSTINESS = [1.0, 8.0]                  # gamma cv² (1 = Poisson)
@@ -49,51 +42,39 @@ POLICIES = ["fixed", "queue_depth", "ttft_slo"]
 # 1-replica floor misses the leading burst's SLO no matter how fast the
 # policy reacts (provisioning latency is physical), which is the classic
 # min-capacity sizing decision, not a policy defect.
-ASC = AutoscalerConfig(interval_s=0.1, provision_delay_s=0.5,
-                       min_replicas=2, max_replicas=MAX_REPLICAS)
+MIN_REPLICAS = 2
 
 
-def _engine_cfg(prefix_caching: bool = True) -> EngineConfig:
-    return EngineConfig(policy="vllm", max_num_seqs=MAX_NUM_SEQS,
-                        max_batched_tokens=MAX_BATCHED_TOKENS, block_size=16,
-                        num_blocks=16384, chip="h200-sxm",
-                        enable_prefix_caching=prefix_caching)
-
-
-def _sessions(n: int, cv2: float) -> SessionWorkload:
-    """Bursty chat sessions: bursts of conversations arrive together, think
-    times open idle valleys between turns — the traffic shape where elastic
-    capacity pays off."""
-    arrival_kwargs = None if cv2 == 1.0 else {"cv2": cv2}
-    arrival = "poisson" if cv2 == 1.0 else "gamma"
-    return SessionWorkload(SessionConfig(
-        num_sessions=n, qps=6.0, arrival=arrival,
-        arrival_kwargs=arrival_kwargs, turns_mean=3.0, max_turns=5,
-        think_time_mean=1.5, prompt_len_mean=180.0, followup_len_mean=60.0,
-        output_len_mean=40.0, max_output_len=128, seed=13))
+def cell(policy: str, cv2: float, slo: float, n: int):
+    """One grid cell as a scenario: the preset base with the burstiness /
+    SLO coordinates applied, and the autoscale sub-spec swapped per policy
+    variant (``fixed`` = peak-provisioned pool, no autoscaler)."""
+    s = scenario_with(
+        get_preset("autoscale_burst"),
+        name=f"autoscale[{policy},cv2={cv2},slo={slo}]",
+        **{"workload.num_sessions": n,
+           "workload.arrival": "poisson" if cv2 == 1.0 else "gamma",
+           "workload.arrival_kwargs": (None if cv2 == 1.0
+                                       else {"cv2": cv2}),
+           "slo.ttft_s": slo})
+    if policy == "fixed":
+        return dataclasses.replace(
+            s, autoscale=None,
+            pool=dataclasses.replace(s.pool, replicas=MAX_REPLICAS))
+    kwargs = ({"slo_ttft_s": slo, "target_attainment": 0.98,
+               "window_s": 2.0} if policy == "ttft_slo"
+              else {"target_depth": 3.0, "low_watermark": 0.5})
+    return dataclasses.replace(
+        s,
+        pool=dataclasses.replace(s.pool, replicas=MIN_REPLICAS),
+        autoscale=AutoscaleSpec(
+            policy=policy, kwargs=kwargs, interval_s=0.1,
+            provision_delay_s=0.5, min_replicas=MIN_REPLICAS,
+            max_replicas=MAX_REPLICAS))
 
 
 def measure(policy: str, cv2: float, slo: float, n: int) -> dict:
-    model_cfg = get_config("llama3_8b")
-    fixed = policy == "fixed"
-    num_replicas = MAX_REPLICAS if fixed else ASC.min_replicas
-    cluster = build_cluster(model_cfg, _engine_cfg(), num_replicas,
-                            policy="least_outstanding_tokens",
-                            predictor=StaticPredictor(BATCH_S),
-                            wall=ManualWallSource())
-    autoscaler = None
-    if not fixed:
-        kwargs = ({"slo_ttft_s": slo, "target_attainment": 0.98,
-                   "window_s": 2.0} if policy == "ttft_slo"
-                  else {"target_depth": 3.0, "low_watermark": 0.5})
-        autoscaler = Autoscaler(
-            cluster, make_autoscaler_policy(policy, **kwargs), ASC)
-    try:
-        res = BenchmarkRunner(cluster, _sessions(n, cv2),
-                              transport=cluster.transport,
-                              autoscaler=autoscaler).run(timeout=3600)
-    finally:
-        cluster.shutdown()
+    res = run(cell(policy, cv2, slo, n), backend="thread", timeout=3600)
     return {
         "policy": policy,
         "cv2": cv2,
@@ -103,7 +84,7 @@ def measure(policy: str, cv2: float, slo: float, n: int) -> dict:
         "ttft_p50_ms": round(res.ttft.p50 * 1e3, 1),
         "ttft_p99_ms": round(res.ttft.p99 * 1e3, 1),
         "session_ttft_p50_ms": round(res.session_ttft.p50 * 1e3, 1),
-        "slo_attainment": round(res.slo_attainment(slo_ttft_s=slo), 4),
+        "slo_attainment": round(res.slo_attainment(), 4),
         "replica_seconds": round(res.replica_seconds, 2),
         "makespan_s": round(res.makespan_virtual, 2),
         "wall_s": round(res.wall_seconds, 2),
@@ -111,58 +92,46 @@ def measure(policy: str, cv2: float, slo: float, n: int) -> dict:
     }
 
 
-ELASTIC_EVENTS = [(0.3, +1), (2.0, -1)]
+ELASTIC_EVENTS = ((0.3, 1), (2.0, -1))
 
 
 def des_parity(n: int) -> dict:
-    """Elastic scale-up + drain mid-run, emulator vs DES, same scripted
-    policy / router / predictor objects (fresh instances per run — policies
-    and routers are stateful)."""
-    model_cfg = get_config("llama3_8b")
-    asc_cfg = AutoscalerConfig(interval_s=0.1, provision_delay_s=0.5,
-                               min_replicas=1, max_replicas=2)
-    # arrival-bound regime (one replica keeps up between bursts): the parity
-    # question is whether elasticity itself introduces divergence, not
-    # whether deep-overload batching cascades do (fig_cluster covers load)
-    reqs = synthesize(WorkloadConfig(
-        num_requests=n, qps=4.0, prompt_len_mean=180, output_len_mean=40,
-        seed=13))
-    reqs_des = copy.deepcopy(reqs)
+    """Elastic scale-up + drain mid-run, emulator vs DES through one
+    ``compare`` call (the scenario carries the scripted schedule; both
+    backends get fresh policy/router objects built from it).
 
-    cluster = build_cluster(model_cfg, _engine_cfg(prefix_caching=False), 1,
-                            policy="round_robin",
-                            predictor=StaticPredictor(BATCH_S),
-                            wall=ManualWallSource())
-    asc = Autoscaler(cluster, SchedulePolicy(ELASTIC_EVENTS), asc_cfg)
-    try:
-        BenchmarkRunner(cluster, reqs, transport=cluster.transport,
-                        autoscaler=asc).run(timeout=3600)
-        emu_latency = {r.request_id: r.e2e_latency()
-                       for r in cluster.finished}
-        scaled = len(cluster.engines)
-    finally:
-        cluster.shutdown()
-
-    des = DiscreteEventSimulator(
-        StaticPredictor(BATCH_S),
-        DESConfig(max_num_seqs=MAX_NUM_SEQS,
-                  max_batched_tokens=MAX_BATCHED_TOKENS, step_overhead_s=0.0),
-        num_replicas=1, router=make_router("round_robin", 1),
-        autoscaler_policy=SchedulePolicy(ELASTIC_EVENTS),
-        autoscaler_cfg=asc_cfg)
-    sims = des.run(reqs_des)
-
-    errs = [abs(emu_latency[orig.request_id]
-                - (sim.finish_time - sim.arrival_time))
-            for orig, sim in zip(reqs_des, sims)]
+    Arrival-bound open-loop regime (one replica keeps up between bursts):
+    the parity question is whether elasticity itself introduces divergence,
+    not whether deep-overload batching cascades do (fig_cluster covers
+    load)."""
+    scenario = scenario_with(
+        get_preset("autoscale_burst"),
+        name="autoscale_parity",
+        **{"workload.kind": "open",
+           "workload.arrival": "poisson",
+           "workload.arrival_kwargs": None,
+           "workload.qps": 4.0,
+           "workload.num_requests": n,
+           "workload.max_output_len": 1024,
+           "pool.replicas": 1,
+           "pool.enable_prefix_caching": False,
+           "routing.policy": "round_robin",
+           "autoscale": {
+               "policy": "schedule",
+               "schedule": list(list(e) for e in ELASTIC_EVENTS),
+               "interval_s": 0.1, "provision_delay_s": 0.5,
+               "min_replicas": 1, "max_replicas": 2},
+           "slo.ttft_s": None})
+    cres = compare(scenario, backends=("thread", "des"), timeout=3600)
+    emu, des = cres.results["thread"], cres.results["des"]
     return {
         "policy": "schedule(+1@0.3,-1@2.0)",
-        "emu_completed": len(emu_latency),
-        "des_completed": sum(1 for s in sims if s.finish_time is not None),
-        "emu_replicas": scaled,
-        "des_replicas": len(des.replicas),
-        "max_err_steps": round(max(errs) / BATCH_S, 3),
-        "mean_err_steps": round(sum(errs) / len(errs) / BATCH_S, 3),
+        "emu_completed": emu.num_requests,
+        "des_completed": des.num_requests,
+        "emu_replicas": len(emu.replica_tiers),
+        "des_replicas": len(des.replica_tiers),
+        "max_err_steps": round(cres.max_err_steps, 3),
+        "ttft_err_steps": round(cres.max_ttft_err_s / cres.slow_step_s, 3),
     }
 
 
@@ -186,9 +155,9 @@ def main(n: int = 16) -> list:
     # headline: SLO-driven scaling matches fixed-N attainment at lower cost
     # on the bursty workload
     cv2, slo = BURSTINESS[-1], SLOS[-1]
-    cell = {r["policy"]: r for r in out
-            if r["cv2"] == cv2 and r["slo_ttft_s"] == slo}
-    fixed, auto = cell["fixed"], cell["ttft_slo"]
+    cell_rows = {r["policy"]: r for r in out
+                 if r["cv2"] == cv2 and r["slo_ttft_s"] == slo}
+    fixed, auto = cell_rows["fixed"], cell_rows["ttft_slo"]
     assert auto["slo_attainment"] >= fixed["slo_attainment"] - 0.02, \
         (f"SLO-driven attainment {auto['slo_attainment']} fell below "
          f"fixed-N {fixed['slo_attainment']}")

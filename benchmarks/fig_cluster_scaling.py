@@ -1,30 +1,25 @@
 """Cluster scaling — replicas × routing policy × arrival rate, GPU-free.
 
 The sweep the multi-replica layer exists for: a data-parallel deployment
-grid evaluated entirely under time-warp emulation.  For each cell we report
-cluster-level TTFT/TPOT percentiles, completed-request goodput, and the
-emulation speedup; a parity column cross-checks the 2-replica emulator
-against the 2-replica DES baseline sharing the *same* Router policy
-(completed counts must match; per-request virtual finish latencies must
-agree within the predictor's step granularity — the §2.3 semantic-gap
-argument extended to cluster scale).
+grid evaluated entirely under time-warp emulation.  The grid is **data**:
+one base :class:`~repro.scenario.Scenario` (the ``cluster_scaling`` preset)
+expanded through a :class:`~repro.scenario.Sweep` over replicas × policy ×
+QPS, every cell executed by the one :func:`repro.scenario.run` entry point.
+For each cell we report cluster-level TTFT/TPOT percentiles,
+completed-request goodput, and the emulation speedup; the parity block is a
+:func:`repro.scenario.compare` of the same 2-replica scenario on the
+thread emulator vs the DES baseline (completed counts must match;
+per-request latencies must agree within the predictor's step granularity —
+the §2.3 semantic-gap argument extended to cluster scale).
 
-Derived: max per-request emulator/DES divergence (in predictor steps) and
-the goodput scaling from 1 -> max replicas.
+Derived: max emulator/DES divergence (in predictor steps) and the goodput
+scaling from 1 -> max replicas.
 """
 
 from __future__ import annotations
 
-import copy
-
-from benchmarks.common import emit, print_table, sharegpt_workload
-from repro.cluster import build_cluster, make_router
-from repro.configs import get_config
-from repro.core.clock import ManualWallSource
-from repro.core.predictor import StaticPredictor
-from repro.des.simulator import DESConfig, DiscreteEventSimulator
-from repro.serving.benchmark import BenchmarkRunner
-from repro.serving.scheduler import EngineConfig
+from benchmarks.common import emit, print_table
+from repro.scenario import Sweep, compare, get_preset, run, scenario_with
 
 REPLICAS = [1, 2, 4]
 POLICIES = ["round_robin", "prefix_affinity"]
@@ -33,45 +28,41 @@ POLICIES = ["round_robin", "prefix_affinity"]
 # overloads a single replica ~2.5x so replica scaling shows up in TTFT tail
 # and SLO goodput.
 QPS = [4.0, 24.0]
-BATCH_S = 20e-3
 SLO_TTFT_S = 1.0
 
-MAX_NUM_SEQS = 8
-MAX_BATCHED_TOKENS = 512
+
+def _base(n: int):
+    return scenario_with(get_preset("cluster_scaling"),
+                         **{"workload.num_requests": n,
+                            "slo.ttft_s": SLO_TTFT_S})
 
 
-def _engine_cfg(prefix_caching: bool = True) -> EngineConfig:
-    return EngineConfig(policy="vllm", max_num_seqs=MAX_NUM_SEQS,
-                        max_batched_tokens=MAX_BATCHED_TOKENS, block_size=16,
-                        num_blocks=16384, chip="h200-sxm",
-                        enable_prefix_caching=prefix_caching)
+def grid(n: int):
+    """The figure's cells as scenarios: a Sweep grid, plus the one
+    policy-coupled tweak (prefix_affinity cells share a system prompt so
+    affinity has something to exploit)."""
+    cells = Sweep(_base(n), {
+        "pool.replicas": REPLICAS,
+        "routing.policy": POLICIES,
+        "workload.qps": QPS,
+    }).expand()
+    return [
+        scenario_with(s, **{"workload.shared_prefix_len": 64})
+        if s.routing.policy == "prefix_affinity" else s
+        for s in cells
+    ]
 
 
-def _workload(n, qps, policy):
-    # prefix_affinity cells use a shared system prompt so affinity has
-    # something to exploit; round_robin cells use fully distinct prompts.
-    shared = 64 if policy == "prefix_affinity" else 0
-    return sharegpt_workload(n=n, qps=qps, seed=13, prompt_len_mean=180,
-                             output_len_mean=40, shared_prefix_len=shared)
-
-
-def measure(num_replicas: int, policy: str, qps: float, n: int) -> dict:
-    model_cfg = get_config("llama3_8b")
-    cluster = build_cluster(model_cfg, _engine_cfg(), num_replicas,
-                            policy=policy, predictor=StaticPredictor(BATCH_S))
-    try:
-        res = BenchmarkRunner(cluster, _workload(n, qps, policy),
-                              transport=cluster.transport).run(timeout=3600)
-    finally:
-        cluster.shutdown()
+def measure(scenario) -> dict:
+    res = run(scenario, backend="thread", timeout=3600)
     return {
-        "replicas": num_replicas,
-        "policy": policy,
-        "qps": qps,
+        "replicas": scenario.pool.replicas,
+        "policy": scenario.routing.policy,
+        "qps": scenario.workload.qps,
         "ttft_p50_ms": round(res.ttft.p50 * 1e3, 1),
         "ttft_p99_ms": round(res.ttft.p99 * 1e3, 1),
         "tpot_p50_ms": round(res.tpot.p50 * 1e3, 2),
-        "goodput_rps": round(res.goodput_rps(slo_ttft_s=SLO_TTFT_S), 3),
+        "goodput_rps": round(res.goodput_rps(), 3),
         "completed_rps": round(res.request_rate_completed, 3),
         "virtual_s": round(res.makespan_virtual, 1),
         "wall_s": round(res.wall_seconds, 2),
@@ -80,53 +71,30 @@ def measure(num_replicas: int, policy: str, qps: float, n: int) -> dict:
 
 
 def des_parity(n: int, qps: float = 4.0) -> dict:
-    """2-replica emulator vs 2-replica DES, same router policy + predictor.
-
-    A ManualWallSource pins the emulator timeline to pure jump arithmetic so
-    the comparison isolates engine semantics (no wall-rate CPU absorption).
-    """
-    model_cfg = get_config("llama3_8b")
-    reqs = _workload(n, qps, "round_robin")
-    reqs_des = copy.deepcopy(reqs)
-
-    cluster = build_cluster(model_cfg, _engine_cfg(prefix_caching=False), 2,
-                            policy="round_robin",
-                            predictor=StaticPredictor(BATCH_S),
-                            wall=ManualWallSource())
-    try:
-        res = BenchmarkRunner(cluster, reqs,
-                              transport=cluster.transport).run(timeout=3600)
-        emu_latency = {r.request_id: r.e2e_latency()
-                       for r in cluster.finished}
-    finally:
-        cluster.shutdown()
-
-    sims = DiscreteEventSimulator(
-        StaticPredictor(BATCH_S),
-        DESConfig(max_num_seqs=MAX_NUM_SEQS,
-                  max_batched_tokens=MAX_BATCHED_TOKENS,
-                  step_overhead_s=0.0),
-        num_replicas=2, router=make_router("round_robin", 2)).run(reqs_des)
-
-    des_done = sum(1 for s in sims if s.finish_time is not None)
-    errs = [abs(emu_latency[orig.request_id]
-                - (sim.finish_time - sim.arrival_time))
-            for orig, sim in zip(reqs_des, sims)]
+    """2-replica emulator vs 2-replica DES through ``compare``: same
+    scenario JSON, same router/predictor arithmetic by construction (the
+    thread backend runs on a ManualWallSource, so the comparison isolates
+    engine semantics — no wall-rate CPU absorption)."""
+    scenario = scenario_with(
+        _base(n), name="cluster_scaling_parity",
+        **{"workload.qps": qps, "pool.replicas": 2,
+           "pool.enable_prefix_caching": False,
+           "routing.policy": "round_robin"})
+    cres = compare(scenario, backends=("thread", "des"), timeout=3600)
     return {
         "replicas": 2,
         "policy": "round_robin",
         "qps": qps,
-        "emu_completed": len(emu_latency),
-        "des_completed": des_done,
-        "max_err_steps": round(max(errs) / BATCH_S, 3),
-        "mean_err_steps": round(sum(errs) / len(errs) / BATCH_S, 3),
+        "emu_completed": cres.results["thread"].num_requests,
+        "des_completed": cres.results["des"].num_requests,
+        "decisions_equal": cres.decisions_equal,
+        "max_err_steps": round(cres.max_err_steps, 3),
+        "ttft_err_steps": round(cres.max_ttft_err_s / cres.slow_step_s, 3),
     }
 
 
 def rows(n: int = 40) -> list:
-    out = [measure(r, p, q, n)
-           for r in REPLICAS for p in POLICIES for q in QPS]
-    return out
+    return [measure(s) for s in grid(n)]
 
 
 def main(n: int = 40) -> list:

@@ -1,24 +1,30 @@
 """Distributed time-warp emulation — replica count × transport backend.
 
 The experiment the process-mode runtime exists for: the *same* cluster
-deployment evaluated with replicas as in-process threads
-(``backend="thread"``, the PR-1 runtime) and as OS processes wired to the
-Timekeeper over framed TCP (``backend="process"``, the paper's §5
-deployment shape).  For each cell we report cluster-level TTFT/TPOT
-percentiles, virtual makespan, wall time, and the emulation speedup
-(virtual seconds per wall second) — the speedup column is the headline:
-coordinating real processes over sockets still runs the timeline orders of
-magnitude faster than wall-clock sleeping would.
+scenario evaluated with replicas as in-process threads
+(``backend="thread"``) and as OS processes wired to the Timekeeper over
+framed TCP (``backend="process"``, the paper's §5 deployment shape) — the
+backend is literally the one argument that changes between cells, because
+every cell is the same :class:`~repro.scenario.Scenario` handed to
+:func:`repro.scenario.run`.  For each cell we report cluster-level
+TTFT/TPOT percentiles, virtual makespan, wall time, and the emulation
+speedup (virtual seconds per wall second) — the speedup column is the
+headline: coordinating real processes over sockets still runs the timeline
+orders of magnitude faster than wall-clock sleeping would.
 
 Parity is the acceptance bar (the repo's analogue of the paper's
-distributed-causality claim): a same-seed workload driven through both
+distributed-causality claim), enforced by :func:`repro.scenario.compare` on
+the ``distributed_parity`` preset: a same-seed scenario driven through both
 backends must produce **identical routing decisions** and per-request
 TTFT / TPOT within **one slow-step** (the deliberately coarse predictor
 step, so bounded wall-rate absorption — socket round trips run at wall
 rate under Eq. 1 — cannot masquerade as a semantic difference; a single
 admission-boundary slip costs strictly less than one step by
-construction).
-A second parity cell runs a closed-loop session workload with the
+construction).  The preset's uniformly spaced arrivals land every request
+on an idle replica, so service starts continuously and no step boundary
+can flip (see the preset docstring).
+
+A second parity cell runs a closed-loop session scenario with the
 autoscaler enabled (scripted scale-up + drain over a warm process pool):
 per-turn placements and latencies must again agree, proving the
 cross-process completion-listener path and wire-level add/drain preserve
@@ -29,14 +35,8 @@ from __future__ import annotations
 
 import argparse
 
-from benchmarks.common import emit, print_table, sharegpt_workload
-from repro.cluster import (Autoscaler, AutoscalerConfig, SchedulePolicy,
-                           build_cluster)
-from repro.configs import get_config
-from repro.core.predictor import StaticPredictor
-from repro.serving.benchmark import BenchmarkRunner
-from repro.serving.scheduler import EngineConfig
-from repro.workload import SessionConfig, SessionWorkload
+from benchmarks.common import emit, print_table
+from repro.scenario import compare, get_preset, run, scenario_with
 
 BACKENDS = ["thread", "process"]
 REPLICAS = [1, 2, 4]
@@ -46,71 +46,28 @@ QPS = 6.0
 # backend; the parity bar is "within one of these".  Sized so that even a
 # noisy shared CI machine's wall-rate absorption stays well inside a step.
 SLOW_STEP_S = 100e-3
-MAX_NUM_SEQS = 8
-MAX_BATCHED_TOKENS = 512
 
 
-def _engine_cfg() -> EngineConfig:
-    return EngineConfig(policy="vllm", max_num_seqs=MAX_NUM_SEQS,
-                        max_batched_tokens=MAX_BATCHED_TOKENS, block_size=16,
-                        num_blocks=16384, chip="h200-sxm",
-                        enable_prefix_caching=False)
-
-
-def _workload(n: int, qps: float = QPS):
-    return sharegpt_workload(n=n, qps=qps, seed=17, prompt_len_mean=150,
-                             output_len_mean=8, max_output_len=12)
-
-
-def _build(backend: str, replicas: int, *, warm: int = 0):
-    return build_cluster(get_config("llama3_8b"), _engine_cfg(), replicas,
-                         policy="round_robin",
-                         predictor=StaticPredictor(SLOW_STEP_S),
-                         backend=backend,
-                         warm_replicas=warm or None)
-
-
-def _run(backend: str, replicas: int, n: int, *, workload=None, qps: float = QPS,
-         autoscaler_events=None, warm: int = 0):
-    """One cell: returns (BenchmarkResult, decisions, placements, latencies).
-
-    ``latencies``: per-request (ttft, e2e) keyed by submit order for open
-    loop, by (session_id, turn_index) for closed loop."""
-    cluster = _build(backend, replicas, warm=warm)
-    asc = None
-    if autoscaler_events is not None:
-        asc = Autoscaler(cluster, SchedulePolicy(autoscaler_events),
-                         AutoscalerConfig(interval_s=0.1,
-                                          provision_delay_s=0.1,
-                                          min_replicas=1,
-                                          max_replicas=replicas + 1))
-    try:
-        reqs = workload if workload is not None else _workload(n, qps)
-        res = BenchmarkRunner(cluster, reqs, transport=cluster.transport,
-                              autoscaler=asc).run(timeout=3600)
-
-        def sample(r):
-            # the parity quantities of the acceptance bar: TTFT and TPOT
-            return (r.ttft(), r.tpot() if r.num_generated > 1 else 0.0)
-
-        if getattr(reqs, "initial_requests", None) is not None:
-            lat = {(r.session_id, r.turn_index): sample(r)
-                   for r in cluster.finished}
-            placements = {(s, t): idx for s, t, _, idx in cluster.placements}
-        else:
-            ordered = sorted(cluster.finished, key=lambda r: r.arrival_time)
-            lat = {k: sample(r) for k, r in enumerate(ordered)}
-            placements = list(cluster.router.decisions)
-        decisions = list(cluster.router.decisions)
-        drained = [m["replica"] for m in cluster.membership_events()
-                   if m["drained"] is not None]
-        return res, decisions, placements, lat, drained
-    finally:
-        cluster.shutdown()
+def measure_scenario(replicas: int, n: int):
+    """One measure cell: an open-loop Poisson stream on a llama3-8b pool
+    with the deliberately slow step (same spec runs on both backends)."""
+    return scenario_with(
+        get_preset("cluster_scaling"),
+        name=f"distributed[{replicas}r]",
+        **{"workload.num_requests": n,
+           "workload.qps": QPS,
+           "workload.prompt_len_mean": 150.0,
+           "workload.output_len_mean": 8.0,
+           "workload.max_output_len": 12,
+           "pool.replicas": replicas,
+           "pool.step_time_s": SLOW_STEP_S,
+           "pool.enable_prefix_caching": False,
+           "slo.ttft_s": None,
+           "seed": 17})
 
 
 def measure(backend: str, replicas: int, n: int) -> dict:
-    res, _, _, _, _ = _run(backend, replicas, n)
+    res = run(measure_scenario(replicas, n), backend=backend, timeout=3600)
     return {
         "backend": backend,
         "replicas": replicas,
@@ -125,96 +82,79 @@ def measure(backend: str, replicas: int, n: int) -> dict:
     }
 
 
-def _latency_errs(lat_a: dict, lat_b: dict):
-    """Max per-request |TTFT| and |TPOT| difference between two backends.
-
-    These are the acceptance-bar quantities: a single admission-boundary
-    slip bounds the TTFT difference by *strictly less than* one step
-    (step − arrival shift), and TPOT spreads any absorbed wall time over
-    the whole decode, so both stay inside one slow-step by construction —
-    unlike raw e2e, which accumulates absorption over every round."""
-    assert lat_a.keys() == lat_b.keys(), "backends completed different sets"
-    ttft_err = max(abs(lat_a[k][0] - lat_b[k][0]) for k in lat_a)
-    tpot_err = max(abs(lat_a[k][1] - lat_b[k][1]) for k in lat_a)
-    return ttft_err, tpot_err
-
-
 def parity(replicas: int, n: int) -> dict:
-    """Same seed through both backends: identical routing decisions,
-    per-request TTFT/TPOT within one slow-step.
-
-    The parity cells use *deterministically spaced* arrivals with headroom
-    over the per-request service time, unlike the Poisson measure cells.
-    The reason is principled, not cosmetic: when a request arrives at a
-    busy replica, its admission quantizes to a step boundary, and the
-    few-ms wall-rate shift between backends can flip which step admits it
-    — a full slow-step of TTFT difference from a millisecond of absorbed
-    wall time.  With every arrival landing on an idle replica, service
-    starts continuously (no boundary to flip), so the comparison measures
-    exactly what it should: coordination + transport semantics, with
-    wall-rate absorption bounded at a fraction of a step."""
-    n = min(n, 12)
-
-    def spaced():
-        reqs = sharegpt_workload(n=n, qps=1.0, seed=17, prompt_len_mean=150,
-                                 output_len_mean=4, max_output_len=5)
-        for i, r in enumerate(reqs):
-            r.arrival_time = 0.35 * i     # > service/replicas: no queueing
-        return reqs
-
-    _, dec_t, _, lat_t, _ = _run("thread", replicas, n, workload=spaced())
-    _, dec_p, _, lat_p, _ = _run("process", replicas, n, workload=spaced())
-    ttft_err, tpot_err = _latency_errs(lat_t, lat_p)
+    """Same scenario through both backends via ``compare``: identical
+    routing decisions, per-request TTFT/TPOT within one slow-step.  The
+    ``distributed_parity`` preset carries the methodology (uniform spaced
+    arrivals, idle-replica headroom, slow 50 ms step)."""
+    scenario = scenario_with(
+        get_preset("distributed_parity"),
+        name=f"parity_{replicas}r",
+        **{"pool.replicas": replicas,
+           "workload.num_requests": min(n, 12)})
+    cres = compare(scenario, backends=("thread", "process"), timeout=3600)
     return {
         "cell": f"parity_{replicas}r",
         "replicas": replicas,
-        "decisions_equal": dec_t == dec_p,
-        "ttft_err_steps": round(ttft_err / SLOW_STEP_S, 3),
-        "tpot_err_steps": round(tpot_err / SLOW_STEP_S, 3),
-        "max_err_steps": round(max(ttft_err, tpot_err) / SLOW_STEP_S, 3),
+        "decisions_equal": cres.decisions_equal,
+        "ttft_err_steps": round(cres.max_ttft_err_s / cres.slow_step_s, 3),
+        "tpot_err_steps": round(cres.max_tpot_err_s / cres.slow_step_s, 3),
+        "max_err_steps": round(cres.max_err_steps, 3),
     }
 
 
+def session_autoscale_scenario(n_sessions: int):
+    """Closed-loop sessions + scripted autoscaler (scale up at 0.7s, drain
+    at 1.8s of virtual time — both inside the measured window, not the
+    teardown race).  Uniformly spaced session starts for the same reason
+    the open-loop parity preset spaces arrivals: turns that land on idle
+    replicas start service continuously, so a few ms of cross-backend wall
+    absorption cannot flip a step-boundary admission and masquerade as a
+    one-step semantic difference.  On the process backend the scale-up
+    activates a warm standby child, so it pays only the *modeled*
+    provisioning delay."""
+    return scenario_with(
+        get_preset("distributed_parity"),
+        name="session_autoscale_parity",
+        **{"workload.kind": "sessions",
+           "workload.arrival": "uniform",
+           "workload.qps": 2.0,
+           "workload.num_sessions": n_sessions,
+           "workload.turns_mean": 2.0, "workload.max_turns": 3,
+           "workload.think_time_mean": 0.8,
+           "workload.prompt_len_mean": 80.0,
+           "workload.followup_len_mean": 30.0,
+           "workload.output_len_mean": 4.0, "workload.max_output_len": 5,
+           "pool.replicas": 2,
+           # lighter step than the open-loop parity cell: per-turn service
+           # must stay inside the 0.5 s session spacing so every turn lands
+           # on an idle replica and submission order stays deterministic
+           "pool.step_time_s": 50e-3,
+           "autoscale": {
+               "policy": "schedule",
+               "schedule": [[0.7, 1], [1.8, -1]],
+               "interval_s": 0.1, "provision_delay_s": 0.1,
+               "min_replicas": 1, "max_replicas": 3},
+           "seed": 23})
+
+
 def session_autoscale_parity(n_sessions: int) -> dict:
-    """Closed-loop sessions + autoscaler (scale up at 0.7s, drain at 1.8s of
-    virtual time — both inside the measured window, not the teardown race)
-    through both backends: per-turn placements identical, latencies within
-    one slow-step, same drain victim.  The process side activates a warm
-    standby child, so scale-up pays only the *modeled* provisioning delay.
-    Like :func:`parity`, the cell is sized to mild queueing (two base
-    replicas, short turns) so accumulated wall-rate absorption on a loaded
-    CI machine stays well inside the one-slow-step bar."""
-    events = [(0.7, +1), (1.8, -1)]
-
-    def sessions():
-        sw = SessionWorkload(SessionConfig(
-            num_sessions=n_sessions, qps=1.0, turns_mean=2.0, max_turns=3,
-            think_time_mean=0.8, prompt_len_mean=80, followup_len_mean=30,
-            output_len_mean=4, max_output_len=5, seed=23))
-        # Deterministically spaced session starts, for the same reason the
-        # open-loop parity cell spaces arrivals (see `parity`): turns that
-        # land on idle replicas start service continuously, so a few ms of
-        # cross-backend wall absorption cannot flip a step-boundary
-        # admission and masquerade as a one-step semantic difference.
-        for i, s in enumerate(sw.sessions):
-            s.arrival_time = 0.5 * i
-        return sw
-
-    _, _, pl_t, lat_t, dr_t = _run("thread", 2, 0, workload=sessions(),
-                                   autoscaler_events=events)
-    _, _, pl_p, lat_p, dr_p = _run("process", 2, 0, workload=sessions(),
-                                   autoscaler_events=events, warm=3)
-    ttft_err, tpot_err = _latency_errs(lat_t, lat_p)
+    """Per-turn placements identical, latencies within one slow-step, same
+    drain victim — ``compare`` checks all three (drain/scale-up divergence
+    raises ParityError)."""
+    cres = compare(session_autoscale_scenario(n_sessions),
+                   backends=("thread", "process"), timeout=3600)
+    thread = cres.results["thread"]
     return {
         "cell": "session_autoscale_parity",
         "replicas": 2,
-        "decisions_equal": pl_t == pl_p,
-        "drain_victims_equal": dr_t == dr_p,
-        "scaled_and_drained": bool(dr_t),
-        "turns": len(lat_t),
-        "ttft_err_steps": round(ttft_err / SLOW_STEP_S, 3),
-        "tpot_err_steps": round(tpot_err / SLOW_STEP_S, 3),
-        "max_err_steps": round(max(ttft_err, tpot_err) / SLOW_STEP_S, 3),
+        "decisions_equal": cres.decisions_equal,
+        "drain_victims_equal": cres.drained_equal,
+        "scaled_and_drained": bool(thread.drained),
+        "turns": len(thread.latencies),
+        "ttft_err_steps": round(cres.max_ttft_err_s / cres.slow_step_s, 3),
+        "tpot_err_steps": round(cres.max_tpot_err_s / cres.slow_step_s, 3),
+        "max_err_steps": round(cres.max_err_steps, 3),
     }
 
 

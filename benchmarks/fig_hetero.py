@@ -2,10 +2,11 @@
 
 The sweep the heterogeneous cluster layer exists for: mixed hardware pools
 (H100 + L4 tiers with per-tier predictors, KV capacities, and
-$/replica-second from ``repro.core.hardware``) under tier-aware routing
-(``least_outstanding_tokens`` drain-time-normalized, ``cost_normalized_load``
-pricing each placement) — all on one deterministic virtual timeline
-(ManualWallSource), so every cell reproduces from its seed.
+$/replica-second from ``repro.core.hardware``) under tier-aware routing —
+every cell a :class:`~repro.scenario.Scenario` derived from the
+``hetero_mix`` preset, the grid a :class:`~repro.scenario.Sweep` over
+tier-mix × policy × QPS, all executed by :func:`repro.scenario.run` on the
+deterministic thread backend.
 
 Three blocks:
 
@@ -14,41 +15,28 @@ Three blocks:
    dollar cost of the run.  The interesting read: at moderate load a
    half-L4 pool holds attainment at a fraction of the all-H100 pool's cost.
 2. **Cost-aware autoscaling headline** — a peak-provisioned homogeneous
-   4×H100 baseline vs a 2×H100 floor whose TTFT-SLO autoscaler *selects
+   6×H100 baseline vs a 2×H100 floor whose TTFT-SLO autoscaler *selects
    tiers*: each scale-up provisions the cheapest tier whose projected
    service TTFT fits the SLO (here: L4).  Asserted: the tier-aware policy
    matches the baseline's attainment (±2%) at no more dollar cost.
 3. **Mixed-pool parity** — an H100+L4 pool scaling up mid-run under the
-   tier-selecting autoscaler (scripted SchedulePolicy, default
-   cheapest-tier selection), emulator vs DES sharing the same router /
-   tier-spec / predictor objects; per-request latencies must agree within
-   one (slow-tier) predictor step — the §2.3 semantic-gap argument
-   extended to heterogeneous pools.
+   tier-selecting autoscaler (scripted schedule, default cheapest-tier
+   selection), emulator vs DES through one :func:`repro.scenario.compare`
+   call; per-request latencies must agree within one (slow-tier) predictor
+   step — the §2.3 semantic-gap argument extended to heterogeneous pools.
 """
 
 from __future__ import annotations
 
-import copy
 import dataclasses
 
 from benchmarks.common import emit, print_table
-from repro.cluster import (Autoscaler, AutoscalerConfig, SchedulePolicy,
-                           build_cluster, make_autoscaler_policy, make_router,
-                           make_tier_specs)
-from repro.configs import get_config
-from repro.core.clock import ManualWallSource
-from repro.core.predictor import StaticPredictor
-from repro.des.simulator import DESConfig, DiscreteEventSimulator
-from repro.serving.benchmark import BenchmarkRunner
-from repro.serving.scheduler import EngineConfig
-from repro.workload import SessionConfig, SessionWorkload, WorkloadConfig, synthesize
+from repro.scenario import (AutoscaleSpec, Sweep, compare, get_preset, run,
+                            scenario_with)
 
-MAX_NUM_SEQS = 8
-MAX_BATCHED_TOKENS = 512
-
-# Per-tier step durations for the StaticPredictor instances: the H100 tier
-# steps 2.5× faster than the L4 tier (roughly their bf16 roofline ratio for
-# a small dense model), while costing ~6.9× more per hour — which is exactly
+# Per-tier step durations (see the hetero_mix preset): the H100 tier steps
+# 2.5× faster than the L4 tier (roughly their bf16 roofline ratio for a
+# small dense model), while costing ~6.9× more per hour — which is exactly
 # the trade the cost-aware policies arbitrage.
 BATCH_S = {"h100": 8e-3, "l4": 20e-3}
 SLO_TTFT_S = 0.5
@@ -62,52 +50,34 @@ POLICIES = ["least_outstanding_tokens", "cost_normalized_load"]
 QPS = [4.0, 10.0]
 
 
-def _engine_cfg(prefix_caching: bool = True) -> EngineConfig:
-    return EngineConfig(policy="vllm", max_num_seqs=MAX_NUM_SEQS,
-                        max_batched_tokens=MAX_BATCHED_TOKENS, block_size=16,
-                        num_blocks=16384,
-                        enable_prefix_caching=prefix_caching)
+def _base(n: int):
+    return scenario_with(get_preset("hetero_mix"),
+                         **{"workload.num_requests": n,
+                            "slo.ttft_s": SLO_TTFT_S})
 
 
-def _tier_predictors():
-    return {t: StaticPredictor(s) for t, s in BATCH_S.items()}
+def grid(n: int):
+    """The static-mix cells: one Sweep over tiers × policy × QPS."""
+    return Sweep(_base(n), {
+        "pool.tiers": [MIXES[m] for m in MIXES],
+        "routing.policy": POLICIES,
+        "workload.qps": QPS,
+    }).expand()
 
 
-def _specs(ecfg):
-    return make_tier_specs(get_config("llama3_8b"), ecfg,
-                           list(BATCH_S), tier_predictors=_tier_predictors())
+_MIX_NAME = {tuple(v): k for k, v in MIXES.items()}
 
 
-def _build(tiers, policy, ecfg=None):
-    ecfg = ecfg or _engine_cfg()
-    return build_cluster(get_config("llama3_8b"), ecfg, len(tiers),
-                         policy=policy, tiers=list(tiers),
-                         tier_predictors=_tier_predictors(),
-                         tier_specs=_specs(ecfg), wall=ManualWallSource())
-
-
-# =========================================================================
-# 1. static tier-mix sweep
-# =========================================================================
-
-def measure_mix(mix: str, policy: str, qps: float, n: int) -> dict:
-    reqs = synthesize(WorkloadConfig(
-        num_requests=n, qps=qps, prompt_len_mean=180, output_len_mean=40,
-        seed=13))
-    cluster = _build(MIXES[mix], policy)
-    try:
-        res = BenchmarkRunner(cluster, reqs,
-                              transport=cluster.transport).run(timeout=3600)
-    finally:
-        cluster.shutdown()
+def measure_mix(scenario) -> dict:
+    res = run(scenario, backend="thread", timeout=3600)
     return {
-        "mix": mix,
-        "policy": policy,
-        "qps": qps,
+        "mix": _MIX_NAME[tuple(scenario.pool.tiers)],
+        "policy": scenario.routing.policy,
+        "qps": scenario.workload.qps,
         "requests": res.num_requests,
         "ttft_p50_ms": round(res.ttft.p50 * 1e3, 1),
         "ttft_p99_ms": round(res.ttft.p99 * 1e3, 1),
-        "slo_attainment": round(res.slo_attainment(slo_ttft_s=SLO_TTFT_S), 4),
+        "slo_attainment": round(res.slo_attainment(), 4),
         "replica_seconds": round(res.replica_seconds, 2),
         "cost_dollars": round(res.cost_dollars, 6),
         "wall_s": round(res.wall_seconds, 2),
@@ -129,55 +99,57 @@ FIXED_REPLICAS = 6          # homogeneous-H100 peak provisioning
 FLOOR_REPLICAS = 2          # tier-aware variant's always-on H100 floor
 
 
-def _sessions(n: int) -> SessionWorkload:
-    """Bursty chat sessions (gamma cv²=8): the traffic shape where renting
-    cheap burst capacity beats paying for peak H100s."""
-    return SessionWorkload(SessionConfig(
-        num_sessions=n, qps=20.0, arrival="gamma",
-        arrival_kwargs={"cv2": 8.0}, turns_mean=3.0, max_turns=5,
-        think_time_mean=0.5, prompt_len_mean=200.0, followup_len_mean=60.0,
-        output_len_mean=20.0, max_output_len=64, seed=13))
+def autoscale_scenario(variant: str, n: int):
+    """Bursty chat sessions (gamma cv²=8) — the traffic shape where renting
+    cheap burst capacity beats paying for peak H100s.  Small per-replica
+    slot counts so session bursts genuinely queue on the elastic variant's
+    floor (that queueing is the scaling signal)."""
+    fixed = variant == "fixed_6xh100"
+    replicas = FIXED_REPLICAS if fixed else FLOOR_REPLICAS
+    s = scenario_with(
+        get_preset("hetero_mix"),
+        name=f"hetero_autoscale[{variant}]",
+        **{"workload.kind": "sessions",
+           "workload.qps": 20.0,
+           "workload.arrival": "gamma",
+           "workload.arrival_kwargs": {"cv2": 8.0},
+           "workload.num_sessions": n,
+           "workload.turns_mean": 3.0, "workload.max_turns": 5,
+           "workload.think_time_mean": 0.5,
+           "workload.prompt_len_mean": 200.0,
+           "workload.followup_len_mean": 60.0,
+           "workload.output_len_mean": 20.0,
+           "workload.max_output_len": 64,
+           "pool.max_num_seqs": 2,
+           "pool.replicas": replicas,
+           "pool.tiers": ["h100"],
+           "routing.policy": "least_outstanding_tokens"})
+    if fixed:
+        return s
+    return dataclasses.replace(s, autoscale=AutoscaleSpec(
+        policy="ttft_slo",
+        kwargs={"slo_ttft_s": SCALE_TRIGGER_TTFT_S,
+                "target_attainment": 0.98, "window_s": 1.0},
+        interval_s=0.1, min_replicas=FLOOR_REPLICAS,
+        max_replicas=FIXED_REPLICAS,
+        provision_delay_s=0.5,
+        tiers=("h100", "l4"),
+        # cheaper chips are easier to get — and the delay is paid in
+        # virtual time on both emulator and DES identically
+        provision_delay_by_tier={"l4": 0.3, "h100": 0.5}))
 
 
 def measure_autoscale(variant: str, n: int) -> dict:
-    # small per-replica slot counts so session bursts genuinely queue on the
-    # elastic variant's floor (that queueing is the scaling signal)
-    ecfg = dataclasses.replace(_engine_cfg(), max_num_seqs=2)
-    fixed = variant == "fixed_6xh100"
-    tiers = ["h100"] * (FIXED_REPLICAS if fixed else FLOOR_REPLICAS)
-    cluster = _build(tiers, "least_outstanding_tokens", ecfg)
-    autoscaler = None
-    if not fixed:
-        asc_cfg = AutoscalerConfig(
-            interval_s=0.1, min_replicas=FLOOR_REPLICAS,
-            max_replicas=FIXED_REPLICAS,
-            provision_delay_s=0.5,
-            tiers=("h100", "l4"),
-            # cheaper chips are easier to get — and the delay is paid in
-            # virtual time on both emulator and DES identically
-            provision_delay_by_tier={"l4": 0.3, "h100": 0.5})
-        autoscaler = Autoscaler(
-            cluster,
-            make_autoscaler_policy("ttft_slo",
-                                   slo_ttft_s=SCALE_TRIGGER_TTFT_S,
-                                   target_attainment=0.98, window_s=1.0),
-            asc_cfg)
-    try:
-        res = BenchmarkRunner(cluster, _sessions(n),
-                              transport=cluster.transport,
-                              autoscaler=autoscaler).run(timeout=3600)
-        tiers_added = [t for _, t in autoscaler.scaleups] if autoscaler else []
-    finally:
-        cluster.shutdown()
+    res = run(autoscale_scenario(variant, n), backend="thread", timeout=3600)
     return {
         "variant": variant,
         "sessions": res.num_sessions,
         "requests": res.num_requests,
         "ttft_p99_ms": round(res.ttft.p99 * 1e3, 1),
-        "slo_attainment": round(res.slo_attainment(slo_ttft_s=SLO_TTFT_S), 4),
+        "slo_attainment": round(res.slo_attainment(), 4),
         "replica_seconds": round(res.replica_seconds, 2),
         "cost_dollars": round(res.cost_dollars, 6),
-        "tiers_added": ",".join(t or "?" for t in tiers_added) or "-",
+        "tiers_added": ",".join(t or "?" for t in res.tiers_added) or "-",
         "wall_s": round(res.wall_seconds, 2),
     }
 
@@ -186,71 +158,49 @@ def measure_autoscale(variant: str, n: int) -> dict:
 # 3. mixed-pool emulator-vs-DES parity under tier-selecting scale-up
 # =========================================================================
 
-PARITY_EVENTS = [(0.3, +1)]
-PARITY_TIERS = ["h100", "l4"]
+PARITY_EVENTS = ((0.3, 1),)
+PARITY_TIERS = ("h100", "l4")
 
 
 def des_parity(n: int) -> dict:
     """H100+L4 pool, scripted tier-selecting scale-up mid-run (the default
     selection rule provisions the cheapest candidate: L4), emulator vs DES
-    with the same router/spec/predictor objects (fresh instances per run —
-    routers and policies are stateful)."""
-    ecfg = _engine_cfg(prefix_caching=False)
-    specs = _specs(ecfg)
-    asc_cfg = AutoscalerConfig(interval_s=0.1, provision_delay_s=0.5,
-                               min_replicas=2, max_replicas=3,
-                               tiers=("h100", "l4"),
-                               provision_delay_by_tier={"l4": 0.3})
-    # arrival-bound regime: the parity question is whether heterogeneity
-    # (per-tier step times + tier-selecting provisioning) introduces
-    # divergence, not whether deep-overload batching cascades do
-    reqs = synthesize(WorkloadConfig(
-        num_requests=n, qps=4.0, prompt_len_mean=180, output_len_mean=40,
-        seed=13))
-    reqs_des = copy.deepcopy(reqs)
+    through one ``compare`` call — same scenario, fresh router/spec/policy
+    objects per backend by construction.
 
-    cluster = _build(PARITY_TIERS, "round_robin", ecfg)
-    asc = Autoscaler(cluster, SchedulePolicy(PARITY_EVENTS), asc_cfg)
-    try:
-        BenchmarkRunner(cluster, reqs, transport=cluster.transport,
-                        autoscaler=asc).run(timeout=3600)
-        emu_latency = {r.request_id: r.e2e_latency()
-                       for r in cluster.finished}
-        emu_tiers = list(cluster.replica_tiers)
-    finally:
-        cluster.shutdown()
-
-    des = DiscreteEventSimulator(
-        StaticPredictor(BATCH_S["h100"]),
-        DESConfig(max_num_seqs=MAX_NUM_SEQS,
-                  max_batched_tokens=MAX_BATCHED_TOKENS, step_overhead_s=0.0),
-        num_replicas=2, router=make_router("round_robin", 2),
-        autoscaler_policy=SchedulePolicy(PARITY_EVENTS),
-        autoscaler_cfg=asc_cfg,
-        replica_tiers=PARITY_TIERS, tier_predictors=_tier_predictors(),
-        tier_specs=specs)
-    sims = des.run(reqs_des)
-
-    slow_step = max(BATCH_S.values())
-    errs = [abs(emu_latency[orig.request_id]
-                - (sim.finish_time - sim.arrival_time))
-            for orig, sim in zip(reqs_des, sims)]
+    Arrival-bound regime: the parity question is whether heterogeneity
+    (per-tier step times + tier-selecting provisioning) introduces
+    divergence, not whether deep-overload batching cascades do."""
+    scenario = scenario_with(
+        _base(n), name="hetero_parity",
+        **{"workload.qps": 4.0,
+           "pool.replicas": 2,
+           "pool.tiers": list(PARITY_TIERS),
+           "pool.enable_prefix_caching": False,
+           "routing.policy": "round_robin",
+           "autoscale": {
+               "policy": "schedule",
+               "schedule": [list(e) for e in PARITY_EVENTS],
+               "interval_s": 0.1, "provision_delay_s": 0.5,
+               "min_replicas": 2, "max_replicas": 3,
+               "tiers": ["h100", "l4"],
+               "provision_delay_by_tier": {"l4": 0.3}}})
+    cres = compare(scenario, backends=("thread", "des"), timeout=3600)
+    emu, des = cres.results["thread"], cres.results["des"]
     return {
         "policy": "schedule(+1@0.3, tier-select)",
-        "emu_completed": len(emu_latency),
-        "des_completed": sum(1 for s in sims if s.finish_time is not None),
-        "emu_tiers": ",".join(t or "?" for t in emu_tiers),
-        "des_tiers": ",".join(r.tier or "?" for r in des.replicas),
-        "max_err_steps": round(max(errs) / slow_step, 3),
-        "mean_err_steps": round(sum(errs) / len(errs) / slow_step, 3),
+        "emu_completed": emu.num_requests,
+        "des_completed": des.num_requests,
+        "emu_tiers": ",".join(t or "?" for t in emu.replica_tiers),
+        "des_tiers": ",".join(t or "?" for t in des.replica_tiers),
+        "max_err_steps": round(cres.max_err_steps, 3),
     }
 
 
 # =========================================================================
 
 def rows(n: int = 16) -> list:
-    return [measure_mix(m, p, q, n)
-            for m in MIXES for p in POLICIES for q in QPS]
+    return [measure_mix(s) for s in grid(n)]
 
 
 def main(n: int = 16) -> list:

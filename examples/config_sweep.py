@@ -5,41 +5,45 @@ degree) for Qwen3-30B-A3B entirely under emulation, then picks the
 max-throughput configuration meeting a p99 TTFT SLO.  On a GPU cluster this
 sweep costs hours and thousands of dollars; here it is seconds, GPU-free.
 
+With the scenario API the grid is *data*: one base
+:class:`~repro.scenario.Scenario` plus a :class:`~repro.scenario.Sweep`
+over three axes, and one :func:`repro.scenario.run` call per cell — no
+hand-wired stack construction at all.
+
     PYTHONPATH=src python examples/config_sweep.py
 """
 
 import time
 
-from repro.configs import get_config
-from repro.serving.benchmark import BenchmarkRunner
-from repro.serving.scheduler import EngineConfig
-from repro.serving.stack import build_stack
-from repro.workload import WorkloadConfig, synthesize
+from repro.scenario import PoolSpec, Scenario, Sweep, WorkloadSpec, run
 
 SLO_TTFT_P99_S = 2.0
-GRID = [
-    dict(policy=p, max_batched_tokens=c, tp=t)
-    for p in ("vllm", "sglang")
-    for c in (256, 512, 2048)
-    for t in (1, 2, 4)
-]
+
+SWEEP = Sweep(
+    Scenario(
+        name="config_sweep",
+        workload=WorkloadSpec(
+            kind="open", num_requests=80, qps=3.0,
+            prompt_len_mean=220, output_len_mean=180, max_output_len=1024),
+        pool=PoolSpec(
+            model="qwen3_30b_a3b", replicas=1, max_num_seqs=64,
+            block_size=16, num_blocks=32768, chip="h200-sxm", ep=2),
+        seed=1,
+    ),
+    axes={
+        "pool.scheduler": ["vllm", "sglang"],
+        "pool.max_batched_tokens": [256, 512, 2048],
+        "pool.tp": [1, 2, 4],
+    },
+)
 
 
-def evaluate(cfg_kw: dict) -> dict:
-    model_cfg = get_config("qwen3_30b_a3b")
-    ecfg = EngineConfig(max_num_seqs=64, block_size=16, num_blocks=32768,
-                        chip="h200-sxm", ep=2, **cfg_kw)
-    stack = build_stack(model_cfg, ecfg, "emulate", use_worker_group=False)
-    try:
-        reqs = synthesize(WorkloadConfig(
-            num_requests=80, qps=3.0, prompt_len_mean=220,
-            output_len_mean=180, seed=1))
-        res = BenchmarkRunner(stack.engine, reqs,
-                              transport=stack.transport).run(timeout=600)
-    finally:
-        stack.shutdown()
+def evaluate(scenario) -> dict:
+    res = run(scenario, backend="thread", timeout=600)
     return {
-        **cfg_kw,
+        "policy": scenario.pool.scheduler,
+        "max_batched_tokens": scenario.pool.max_batched_tokens,
+        "tp": scenario.pool.tp,
         "ttft_p99_s": round(res.ttft.p99, 3),
         "tpot_p50_ms": round(res.tpot.p50 * 1e3, 2),
         "tokens_per_s": round(res.throughput_tokens_per_s, 1),
@@ -50,11 +54,12 @@ def evaluate(cfg_kw: dict) -> dict:
 
 def main() -> None:
     t0 = time.time()
+    cells = SWEEP.expand()
     results = []
-    for i, cfg_kw in enumerate(GRID):
-        r = evaluate(cfg_kw)
+    for i, scenario in enumerate(cells):
+        r = evaluate(scenario)
         ok = "ok " if r["ttft_p99_s"] <= SLO_TTFT_P99_S else "SLO✗"
-        print(f"[{i + 1:2d}/{len(GRID)}] {ok} {r}")
+        print(f"[{i + 1:2d}/{len(cells)}] {ok} {r}")
         results.append(r)
 
     feasible = [r for r in results if r["ttft_p99_s"] <= SLO_TTFT_P99_S]
@@ -64,7 +69,7 @@ def main() -> None:
     print(f"\nbest config under TTFT p99 <= {SLO_TTFT_P99_S}s: "
           f"policy={best['policy']} chunk={best['max_batched_tokens']} "
           f"tp={best['tp']} -> {best['tokens_per_s']} tok/s")
-    print(f"explored {len(GRID)} configs = {virtual / 3600:.2f} emulated "
+    print(f"explored {len(cells)} configs = {virtual / 3600:.2f} emulated "
           f"cluster-hours in {wall:.0f}s wall ({virtual / wall:.0f}x)")
 
 

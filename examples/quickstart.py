@@ -5,48 +5,53 @@ radix prefix cache) against Revati's time-warp emulation: GPU steps become
 virtual-time jumps sized by the analytical runtime predictor, coordinated
 causally by the Timekeeper.
 
+The whole experiment is one declarative :class:`~repro.scenario.Scenario` —
+a serializable spec (``scenario.to_json()`` round-trips) that the single
+:func:`repro.scenario.run` entry point executes on any backend: the
+in-process emulator (``"thread"``, below), replicas as OS processes
+(``"process"``), or the discrete-event baseline (``"des"``).
+
     PYTHONPATH=src python examples/quickstart.py
 """
 
-from repro.configs import get_config
-from repro.serving.benchmark import BenchmarkRunner
-from repro.serving.scheduler import EngineConfig
-from repro.serving.stack import build_stack
-from repro.workload import WorkloadConfig, synthesize
+from repro.scenario import PoolSpec, Scenario, WorkloadSpec, run
 
 
 def main() -> None:
-    model_cfg = get_config("llama3_8b")          # any of the 13 registry ids
-    engine_cfg = EngineConfig(
-        policy="vllm",                           # or "sglang"
-        max_num_seqs=64,
-        max_batched_tokens=512,                  # chunked-prefill budget
-        block_size=16,
-        num_blocks=32768,
-        chip="h200-sxm",                         # emulated hardware target
-        tp=1,
+    scenario = Scenario(
+        name="quickstart",
+        workload=WorkloadSpec(
+            kind="open",
+            num_requests=100, qps=2.0,               # Poisson arrivals
+            prompt_len_mean=220, output_len_mean=180,  # ShareGPT-like
+            max_output_len=1024,
+        ),
+        pool=PoolSpec(
+            model="llama3_8b",                       # any of the 13 registry ids
+            replicas=1,
+            max_num_seqs=64,
+            max_batched_tokens=512,                  # chunked-prefill budget
+            block_size=16,
+            num_blocks=32768,
+            chip="h200-sxm",                         # emulated hardware target
+        ),
+        seed=0,
     )
 
-    # The whole Revati integration is one argument: mode="emulate".
-    stack = build_stack(model_cfg, engine_cfg, mode="emulate")
-
-    requests = synthesize(WorkloadConfig(
-        num_requests=100, qps=2.0,               # Poisson arrivals
-        prompt_len_mean=220, output_len_mean=180,  # ShareGPT-like
-        seed=0,
-    ))
-
-    result = BenchmarkRunner(stack.engine, requests,
-                             transport=stack.transport).run(timeout=300)
-    stack.shutdown()
+    # The whole Revati integration is one argument: backend="thread" (the
+    # emulator) vs "des" (the event-driven baseline) vs "process".
+    result = run(scenario, backend="thread", timeout=300)
 
     print("== emulated deployment report ==")
-    for k, v in result.summary().items():
+    for k, v in result.to_row().items():
         print(f"  {k:24s} {v:,.3f}" if isinstance(v, float) else
               f"  {k:24s} {v}")
     print(f"\nSimulated {result.makespan_virtual:.1f}s of cluster time in "
           f"{result.wall_seconds:.1f}s of wall time "
           f"({result.speedup:.0f}x acceleration), zero GPUs used.")
+    print("\nThe same spec as portable JSON (run it with "
+          "`python -m repro.scenario run <file>`):")
+    print(scenario.to_json()[:200] + " ...")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,174 @@
+"""Named paper-style scenarios: the registry behind figures, CI, and the CLI.
+
+Each preset is a factory returning a fresh :class:`Scenario`; the benchmark
+figure scripts derive their grids from these bases (``benchmarks/fig_*.py``)
+and the CLI runs them by name (``python -m repro.scenario run
+cluster_scaling``), so a new workload × topology × policy experiment is a
+JSON tweak away instead of a new Python file.
+
+The ``*_parity`` presets are deliberately tiny and deterministic (uniform
+arrivals, slow static predictor steps, prefix caching off) so a three-way
+``compare`` across thread/process/DES finishes in CI seconds — they are the
+scenario-smoke gate in ``.github/workflows/ci.yml``.
+
+>>> sorted(PRESETS) == sorted(list_presets())
+True
+>>> get_preset("cluster_scaling").pool.replicas
+2
+>>> get_preset("nope")
+Traceback (most recent call last):
+  ...
+KeyError: "unknown preset 'nope'; choose from ['autoscale_burst', \
+'cluster_scaling', 'distributed_parity', 'elastic_tier_parity', \
+'hetero_mix']"
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Dict, List
+
+from .spec import (AutoscaleSpec, PoolSpec, RoutingSpec, Scenario, SLOSpec,
+                   WorkloadSpec)
+
+__all__ = ["PRESETS", "get_preset", "list_presets", "describe"]
+
+
+def cluster_scaling() -> Scenario:
+    """Open-loop ShareGPT-like stream on a data-parallel llama3-8b pool —
+    the fig_cluster_scaling base cell (replicas/policy/QPS are the axes)."""
+    return Scenario(
+        name="cluster_scaling",
+        workload=WorkloadSpec(
+            kind="open", qps=4.0, num_requests=40,
+            prompt_len_mean=180.0, output_len_mean=40.0,
+            max_output_len=1024),
+        pool=PoolSpec(
+            model="llama3_8b", replicas=2, max_num_seqs=8,
+            max_batched_tokens=512, block_size=16, num_blocks=16384,
+            chip="h200-sxm", step_time_s=20e-3),
+        routing=RoutingSpec(policy="round_robin"),
+        slo=SLOSpec(ttft_s=1.0),
+        seed=13)
+
+
+def autoscale_burst() -> Scenario:
+    """Bursty multi-turn chat sessions (gamma cv²=8) on an elastic pool with
+    a TTFT-SLO autoscaler — the fig_autoscale base cell."""
+    return Scenario(
+        name="autoscale_burst",
+        workload=WorkloadSpec(
+            kind="sessions", qps=6.0, arrival="gamma",
+            arrival_kwargs={"cv2": 8.0}, num_sessions=16,
+            turns_mean=3.0, max_turns=5, think_time_mean=1.5,
+            prompt_len_mean=180.0, followup_len_mean=60.0,
+            output_len_mean=40.0, max_output_len=128),
+        pool=PoolSpec(
+            model="llama3_8b", replicas=2, max_num_seqs=8,
+            max_batched_tokens=512, block_size=16, num_blocks=16384,
+            chip="h200-sxm", step_time_s=20e-3),
+        routing=RoutingSpec(policy="least_outstanding_tokens"),
+        autoscale=AutoscaleSpec(
+            policy="ttft_slo",
+            kwargs={"slo_ttft_s": 0.5, "target_attainment": 0.98,
+                    "window_s": 2.0},
+            interval_s=0.1, provision_delay_s=0.5,
+            min_replicas=2, max_replicas=4),
+        slo=SLOSpec(ttft_s=0.5),
+        seed=13)
+
+
+def hetero_mix() -> Scenario:
+    """Mixed H100+L4 pool under cost-normalized routing — the fig_hetero
+    base cell (tier mix / policy / QPS are the axes).  Per-tier static
+    steps encode the ~2.5× H100-vs-L4 roofline ratio."""
+    return Scenario(
+        name="hetero_mix",
+        workload=WorkloadSpec(
+            kind="open", qps=10.0, num_requests=16,
+            prompt_len_mean=180.0, output_len_mean=40.0,
+            max_output_len=1024),
+        pool=PoolSpec(
+            model="llama3_8b", replicas=4,
+            tiers=("h100", "h100", "l4", "l4"),
+            max_num_seqs=8, max_batched_tokens=512, block_size=16,
+            num_blocks=16384,
+            tier_step_time_s={"h100": 8e-3, "l4": 20e-3}),
+        routing=RoutingSpec(policy="cost_normalized_load"),
+        slo=SLOSpec(ttft_s=0.5),
+        seed=13)
+
+
+def distributed_parity() -> Scenario:
+    """Tiny deterministic backend-parity cell: uniformly spaced arrivals
+    with idle-replica headroom and one deliberately slow predictor step, so
+    thread / process / DES must agree within one step (the
+    fig_distributed methodology as a named scenario)."""
+    return Scenario(
+        name="distributed_parity",
+        workload=WorkloadSpec(
+            kind="open", qps=2.0, arrival="uniform", num_requests=10,
+            prompt_len_mean=24.0, max_prompt_len=48,
+            output_len_mean=4.0, max_output_len=5),
+        pool=PoolSpec(
+            model="qwen2_5_3b", reduced=True, replicas=2,
+            max_num_seqs=8, max_batched_tokens=64, block_size=4,
+            num_blocks=4096, enable_prefix_caching=False,
+            # deliberately slow: socket round trips absorb wall time into
+            # the virtual timeline (Eq. 1) on the process backend, and the
+            # parity bar is "within one of these" — sized so a noisy CI
+            # machine's absorption stays well inside a step
+            step_time_s=100e-3),
+        routing=RoutingSpec(policy="round_robin"),
+        seed=17)
+
+
+def elastic_tier_parity() -> Scenario:
+    """Mixed-tier pool scaling up mid-run through a scripted tier-selecting
+    autoscaler (cheapest candidate: L4) — the elastic/heterogeneous parity
+    scenario all three backends must agree on."""
+    return Scenario(
+        name="elastic_tier_parity",
+        workload=WorkloadSpec(
+            kind="open", qps=2.5, arrival="uniform", num_requests=10,
+            prompt_len_mean=24.0, max_prompt_len=48,
+            output_len_mean=4.0, max_output_len=5),
+        pool=PoolSpec(
+            model="qwen2_5_3b", reduced=True, replicas=2,
+            tiers=("h100", "l4"),
+            max_num_seqs=8, max_batched_tokens=64, block_size=4,
+            num_blocks=4096, enable_prefix_caching=False,
+            tier_step_time_s={"h100": 50e-3, "l4": 125e-3}),
+        routing=RoutingSpec(policy="round_robin"),
+        autoscale=AutoscaleSpec(
+            policy="schedule", schedule=((0.3, 1),),
+            interval_s=0.1, provision_delay_s=0.1,
+            min_replicas=2, max_replicas=3,
+            tiers=("h100", "l4"),
+            provision_delay_by_tier={"l4": 0.06}),
+        seed=17)
+
+
+PRESETS: Dict[str, Callable[[], Scenario]] = {
+    fn.__name__: fn
+    for fn in (cluster_scaling, autoscale_burst, hetero_mix,
+               distributed_parity, elastic_tier_parity)
+}
+
+
+def get_preset(name: str) -> Scenario:
+    """A fresh scenario for ``name`` (each call builds a new tree)."""
+    try:
+        return PRESETS[name]()
+    except KeyError:
+        raise KeyError(f"unknown preset {name!r}; choose from "
+                       f"{sorted(PRESETS)}") from None
+
+
+def list_presets() -> List[str]:
+    return sorted(PRESETS)
+
+
+def describe(name: str) -> str:
+    """First docstring line of the preset factory (CLI listing)."""
+    doc = PRESETS[name].__doc__ or ""
+    return " ".join(doc.split("\n\n")[0].split())

@@ -1,0 +1,550 @@
+"""One ``run()`` for every backend: thread emulator, process emulator, DES.
+
+This module is the execution half of the scenario API: it turns a
+:class:`~repro.scenario.spec.Scenario` into a live experiment on any
+registered backend and returns one uniform :class:`ScenarioResult` schema,
+so sweep/figure/CI code never touches ``build_cluster``/``DESConfig``
+plumbing again (those remain the internal layer underneath).
+
+* ``backend="thread"`` — N in-process engine replicas on one shared
+  VirtualClock under a ManualWallSource: a deterministic pure-jump timeline,
+  exactly reproducible from the scenario seed.
+* ``backend="process"`` — each replica engine in its own OS process over the
+  time-warp socket transport (host wall, by construction).
+* ``backend="des"`` — the Vidur-style discrete-event baseline sharing the
+  same Router/AutoscalerPolicy/TierSpec objects.
+
+:func:`compare` runs one spec on several backends and checks the repo's
+established parity bar: identical routing decisions and per-request
+TTFT/TPOT within **one slow-step** (the coarsest predictor step in the
+scenario), raising :class:`ParityError` otherwise — the §2.3 semantic-gap
+argument as a one-call API.
+"""
+
+from __future__ import annotations
+
+import time
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .spec import BACKENDS, Scenario, SpecError
+
+__all__ = ["ScenarioResult", "CompareResult", "ParityError", "run", "compare"]
+
+
+class ParityError(AssertionError):
+    """Cross-backend parity violated (routing divergence or a latency gap
+    beyond one slow-step)."""
+
+
+# =========================================================================
+# uniform result schema
+# =========================================================================
+
+@dataclass
+class ScenarioResult:
+    """What every backend returns: one schema for metrics, cost, and the
+    audit trails parity checks replay.
+
+    ``latencies`` maps a backend-independent request key — submit index for
+    open loop, ``(session_id, turn_index)`` for sessions — to
+    ``(ttft, tpot, e2e)`` seconds (``tpot`` is None for 1-token outputs).
+    """
+
+    scenario: str
+    backend: str
+    seed: int
+    # completion counts
+    num_requests: int
+    num_sessions: int
+    # latency stats (repro.serving.benchmark.LatencyStats)
+    ttft: object
+    tpot: object
+    e2e: object
+    session_ttft: Optional[object]
+    # timeline
+    makespan_virtual: float
+    wall_seconds: float
+    throughput_tokens_per_s: float = 0.0
+    # SLO / throughput
+    slo_samples: List[tuple] = field(repr=False, default_factory=list)
+    slo_ttft_s: Optional[float] = None
+    slo_tpot_s: Optional[float] = None
+    # cost accounting
+    replica_seconds: float = 0.0
+    cost_dollars: float = 0.0
+    tier_seconds: Optional[Dict[Optional[str], float]] = None
+    # audit trails (parity)
+    routing_decisions: List[int] = field(repr=False, default_factory=list)
+    placements: Optional[Dict[tuple, int]] = field(repr=False, default=None)
+    latencies: Dict[object, tuple] = field(repr=False, default_factory=dict)
+    replica_tiers: List[Optional[str]] = field(default_factory=list)
+    scaleups: List[Tuple[float, Optional[str]]] = field(default_factory=list)
+    drained: List[int] = field(default_factory=list)
+
+    @property
+    def speedup(self) -> float:
+        return (self.makespan_virtual / self.wall_seconds
+                if self.wall_seconds else 0.0)
+
+    @property
+    def request_rate_completed(self) -> float:
+        return (self.num_requests / self.makespan_virtual
+                if self.makespan_virtual else 0.0)
+
+    @property
+    def tiers_added(self) -> List[Optional[str]]:
+        """Tier of every autoscaler-provisioned replica, join order."""
+        return [t for _, t in self.scaleups]
+
+    def slo_attainment(self, slo_ttft_s: Optional[float] = None,
+                       slo_tpot_s: Optional[float] = None) -> float:
+        """Fraction of completions meeting the SLOs (defaults: the
+        scenario's own SLOSpec; a missing bound is unconstrained)."""
+        slo_ttft = slo_ttft_s if slo_ttft_s is not None else self.slo_ttft_s
+        slo_tpot = slo_tpot_s if slo_tpot_s is not None else self.slo_tpot_s
+        if not self.slo_samples:
+            return 0.0
+        good = 0
+        for ttft, tpot in self.slo_samples:
+            ttft_ok = slo_ttft is None or ttft is None or ttft <= slo_ttft
+            tpot_ok = slo_tpot is None or tpot is None or tpot <= slo_tpot
+            good += int(ttft_ok and tpot_ok)
+        return good / len(self.slo_samples)
+
+    def goodput_rps(self, **kw) -> float:
+        """SLO-attaining completions per virtual second."""
+        if not self.makespan_virtual:
+            return 0.0
+        return (self.slo_attainment(**kw) * len(self.slo_samples)
+                / self.makespan_virtual)
+
+    def to_row(self) -> dict:
+        """Flat dict for tables / JSONL artifacts (benchmark figures)."""
+        row = {
+            "scenario": self.scenario,
+            "backend": self.backend,
+            "requests": self.num_requests,
+            "ttft_p50_ms": round(self.ttft.p50 * 1e3, 1),
+            "ttft_p99_ms": round(self.ttft.p99 * 1e3, 1),
+            "tpot_p50_ms": round(self.tpot.p50 * 1e3, 2),
+            "completed_rps": round(self.request_rate_completed, 3),
+            "replica_seconds": round(self.replica_seconds, 2),
+            "virtual_s": round(self.makespan_virtual, 2),
+            "wall_s": round(self.wall_seconds, 2),
+            "speedup_x": round(self.speedup, 1),
+        }
+        if self.slo_ttft_s is not None or self.slo_tpot_s is not None:
+            row["slo_attainment"] = round(self.slo_attainment(), 4)
+            row["goodput_rps"] = round(self.goodput_rps(), 3)
+        if self.cost_dollars:
+            row["cost_dollars"] = round(self.cost_dollars, 6)
+        if self.num_sessions:
+            row["sessions"] = self.num_sessions
+            if self.session_ttft is not None:
+                row["session_ttft_p50_ms"] = round(
+                    self.session_ttft.p50 * 1e3, 1)
+        if self.scaleups:
+            row["tiers_added"] = ",".join(t or "?" for t in self.tiers_added)
+        return row
+
+
+# =========================================================================
+# shared wiring
+# =========================================================================
+
+def _ordered_tiers(scenario: Scenario) -> List[str]:
+    """Every tier name the scenario can touch (pool + autoscale candidates),
+    first-mention order — the set make_tier_specs must cover."""
+    names: List[str] = []
+    for t in (scenario.pool.replica_tiers() or []):
+        if t is not None and t not in names:
+            names.append(t)
+    if scenario.autoscale is not None:
+        for t in scenario.autoscale.tiers:
+            if t not in names:
+                names.append(t)
+    return names
+
+
+class _Wiring:
+    """Everything run() derives from a scenario, built once per run so all
+    backends share the exact same spec/predictor arithmetic."""
+
+    def __init__(self, scenario: Scenario):
+        from repro.core.predictor import StaticPredictor
+        from repro.cluster.tiers import make_tier_specs
+
+        scenario.validate()
+        self.scenario = scenario
+        self.model_cfg = scenario.pool.model_config()
+        self.engine_cfg = scenario.pool.engine_config()
+        self.predictor = (StaticPredictor(scenario.pool.step_time_s)
+                          if scenario.pool.step_time_s is not None else None)
+        self.tier_predictors = ({
+            t: StaticPredictor(s)
+            for t, s in scenario.pool.tier_step_time_s.items()
+        } if scenario.pool.tier_step_time_s else None)
+        tier_names = _ordered_tiers(scenario)
+        self.tier_specs = (make_tier_specs(
+            self.model_cfg, self.engine_cfg, tier_names,
+            tier_predictors=self.tier_predictors) if tier_names else None)
+
+    def base_predictor(self):
+        """The predictor for untiered replicas (and the DES fallback)."""
+        from repro.serving.stack import default_predictor
+        if self.predictor is not None:
+            return self.predictor
+        tiers = self.scenario.pool.replica_tiers()
+        if tiers and tiers[0] is not None and self.tier_predictors \
+                and tiers[0] in self.tier_predictors:
+            return self.tier_predictors[tiers[0]]
+        return default_predictor(self.model_cfg, self.engine_cfg)
+
+    def slow_step_s(self) -> float:
+        """The coarsest predictor step in the scenario — the parity unit."""
+        from repro.core.predictor import BatchSpec, SeqSpec
+        pool = self.scenario.pool
+        steps = list((pool.tier_step_time_s or {}).values())
+        if pool.step_time_s is not None:
+            steps.append(pool.step_time_s)
+        if steps:
+            return max(steps)
+        probe = BatchSpec.make([SeqSpec(1, 256)])
+        return self.base_predictor().predict_step(probe).total
+
+
+def _latency_sample(ttft, tpot, e2e):
+    return (ttft, tpot, e2e)
+
+
+def _session_stats(groups: Dict[int, List[tuple]]):
+    """Per-session mean TTFT/TPOT percentile stats from (ttft, tpot) lists."""
+    from repro.serving.benchmark import LatencyStats
+    mean_ttfts, mean_tpots = [], []
+    for samples in groups.values():
+        ts = [t for t, _ in samples if t is not None]
+        ps = [p for _, p in samples if p is not None]
+        if ts:
+            mean_ttfts.append(float(np.mean(ts)))
+        if ps:
+            mean_tpots.append(float(np.mean(ps)))
+    return LatencyStats.of(mean_ttfts), LatencyStats.of(mean_tpots)
+
+
+# =========================================================================
+# backends
+# =========================================================================
+
+def _run_emulated(scenario: Scenario, wiring: _Wiring, backend: str,
+                  timeout: float) -> ScenarioResult:
+    from repro.cluster import Autoscaler, build_cluster
+    from repro.core.clock import ManualWallSource
+    from repro.serving.benchmark import BenchmarkRunner
+
+    pool, autoscale = scenario.pool, scenario.autoscale
+    warm = None
+    if backend == "process" and autoscale is not None:
+        # pre-spawn the autoscaler's whole headroom so scale-ups activate a
+        # warm child (paying only the modeled provisioning delay, never
+        # process-spawn wall time mid-run)
+        warm = autoscale.max_replicas
+    cluster = build_cluster(
+        wiring.model_cfg, wiring.engine_cfg, pool.replicas,
+        policy=scenario.routing.policy, mode="emulate", backend=backend,
+        predictor=wiring.predictor, tiers=pool.replica_tiers(),
+        tier_predictors=wiring.tier_predictors, tier_specs=wiring.tier_specs,
+        router_kwargs=scenario.routing.kwargs,
+        wall=ManualWallSource() if backend == "thread" else None,
+        warm_replicas=warm)
+    autoscaler = None
+    if autoscale is not None:
+        autoscaler = Autoscaler(cluster, autoscale.make_policy(),
+                                autoscale.make_config())
+    workload = scenario.workload.materialize(scenario.seed)
+    closed = scenario.workload.kind == "sessions"
+    try:
+        res = BenchmarkRunner(cluster, workload,
+                              transport=cluster.transport,
+                              autoscaler=autoscaler).run(timeout=timeout)
+        reqs = list(cluster.finished)
+        if closed:
+            keyed = {(r.session_id, r.turn_index): r for r in reqs}
+            placements = {(s, t): idx
+                          for s, t, _, idx in cluster.placements}
+        else:
+            ordered = sorted(reqs, key=lambda r: r.arrival_time)
+            keyed = dict(enumerate(ordered))
+            placements = None
+        latencies = {
+            k: _latency_sample(r.ttft(),
+                               r.tpot() if r.num_generated > 1 else None,
+                               r.e2e_latency())
+            for k, r in keyed.items()
+        }
+        drained = [m["replica"] for m in cluster.membership_events()
+                   if m["drained"] is not None]
+        return ScenarioResult(
+            scenario=scenario.name, backend=backend, seed=scenario.seed,
+            num_requests=res.num_requests, num_sessions=res.num_sessions,
+            ttft=res.ttft, tpot=res.tpot, e2e=res.e2e,
+            session_ttft=res.session_ttft,
+            makespan_virtual=res.makespan_virtual,
+            wall_seconds=res.wall_seconds,
+            throughput_tokens_per_s=res.throughput_tokens_per_s,
+            slo_samples=list(res.slo_samples),
+            slo_ttft_s=scenario.slo.ttft_s, slo_tpot_s=scenario.slo.tpot_s,
+            replica_seconds=res.replica_seconds,
+            cost_dollars=res.cost_dollars,
+            tier_seconds=res.tier_seconds,
+            routing_decisions=list(cluster.router.decisions),
+            placements=placements,
+            latencies=latencies,
+            replica_tiers=list(cluster.replica_tiers),
+            scaleups=list(autoscaler.scaleups) if autoscaler else [],
+            drained=drained,
+        )
+    finally:
+        cluster.shutdown()
+
+
+def _run_des(scenario: Scenario, wiring: _Wiring,
+             timeout: float) -> ScenarioResult:
+    from repro.cluster.router import make_router
+    from repro.des.simulator import DESConfig, DiscreteEventSimulator
+    from repro.serving.benchmark import LatencyStats
+
+    pool, autoscale = scenario.pool, scenario.autoscale
+    router = make_router(scenario.routing.policy, pool.replicas,
+                         **(scenario.routing.kwargs or {}))
+    sim = DiscreteEventSimulator(
+        wiring.base_predictor(),
+        DESConfig(max_num_seqs=pool.max_num_seqs,
+                  max_batched_tokens=pool.max_batched_tokens,
+                  step_overhead_s=0.0),
+        num_replicas=pool.replicas, router=router,
+        autoscaler_policy=(autoscale.make_policy() if autoscale else None),
+        autoscaler_cfg=(autoscale.make_config() if autoscale else None),
+        replica_tiers=pool.replica_tiers(),
+        tier_predictors=wiring.tier_predictors,
+        tier_specs=wiring.tier_specs)
+    workload = scenario.workload.materialize(scenario.seed)
+    closed = scenario.workload.kind == "sessions"
+    initial_replicas = pool.replicas
+
+    wall0 = time.monotonic()
+    sims = sim.run(workload)
+    wall = time.monotonic() - wall0
+
+    done = [s for s in sims if s.finish_time is not None]
+    finishes = [s.finish_time for s in done]
+    makespan = max(finishes) if finishes else 0.0
+    ttft = LatencyStats.of([s.ttft() for s in done if s.ttft() is not None])
+    tpot = LatencyStats.of([s.tpot() for s in done
+                            if s.tpot() is not None and s.num_generated > 1])
+    e2e = LatencyStats.of([s.finish_time - s.arrival_time for s in done])
+    if closed:
+        keyed = {(s.session_id, s.turn_index): s for s in done}
+        placements = {k: s.replica for k, s in keyed.items()}
+    else:
+        ordered = sorted(done, key=lambda s: s.arrival_time)
+        keyed = dict(enumerate(ordered))
+        placements = None
+    latencies = {
+        k: _latency_sample(s.ttft(),
+                           s.tpot() if s.num_generated > 1 else None,
+                           s.finish_time - s.arrival_time)
+        for k, s in keyed.items()
+    }
+    by_session: Dict[int, List[tuple]] = defaultdict(list)
+    for s in done:
+        if s.session_id is not None:
+            by_session[s.session_id].append(
+                (s.ttft(), s.tpot() if s.num_generated > 1 else None))
+    session_ttft = None
+    if by_session:
+        session_ttft, _ = _session_stats(by_session)
+
+    tier_s: Dict[Optional[str], float] = {}
+    for rep in sim.replicas:
+        end = rep.drained_at if rep.drained_at is not None else makespan
+        on = max(0.0, min(end, makespan) - rep.added_at)
+        tier_s[rep.tier] = tier_s.get(rep.tier, 0.0) + on
+    return ScenarioResult(
+        scenario=scenario.name, backend="des", seed=scenario.seed,
+        num_requests=len(done),
+        num_sessions=len(by_session),
+        ttft=ttft, tpot=tpot, e2e=e2e, session_ttft=session_ttft,
+        makespan_virtual=makespan, wall_seconds=wall,
+        throughput_tokens_per_s=(sum(s.num_generated for s in done)
+                                 / makespan if makespan else 0.0),
+        slo_samples=[(s.ttft(), s.tpot() if s.num_generated > 1 else None)
+                     for s in done],
+        slo_ttft_s=scenario.slo.ttft_s, slo_tpot_s=scenario.slo.tpot_s,
+        replica_seconds=sim.replica_seconds(makespan),
+        cost_dollars=sim.replica_cost(makespan),
+        tier_seconds=tier_s,
+        routing_decisions=list(router.decisions),
+        placements=placements,
+        latencies=latencies,
+        replica_tiers=[r.tier for r in sim.replicas],
+        scaleups=[(r.added_at, r.tier)
+                  for r in sim.replicas[initial_replicas:]],
+        drained=[r.index for r in sim.replicas
+                 if r.drained_at is not None],
+    )
+
+
+# =========================================================================
+# public entry points
+# =========================================================================
+
+def run(scenario: Scenario, backend: str = "thread", *,
+        timeout: float = 600.0) -> ScenarioResult:
+    """Execute one scenario on one backend; all wiring included.
+
+    ``backend`` is ``"thread"`` (in-process emulator on a deterministic
+    manual wall), ``"process"`` (replicas as OS processes over the socket
+    transport), or ``"des"`` (the discrete-event baseline).  The same
+    scenario object/JSON runs unmodified on all three.
+    """
+    if backend not in BACKENDS:
+        raise SpecError(f"backend: invalid value {backend!r} "
+                        f"(choose from {sorted(BACKENDS)})")
+    wiring = _Wiring(scenario)
+    if backend == "des":
+        if scenario.routing.policy == "pd_pool":
+            raise SpecError("routing.policy: pd_pool is not supported on "
+                            "the des backend (Table 1 semantic gap)")
+        return _run_des(scenario, wiring, timeout)
+    if backend == "process" and scenario.routing.policy == "pd_pool":
+        raise SpecError("routing.policy: pd_pool is not supported on the "
+                        "process backend")
+    return _run_emulated(scenario, wiring, backend, timeout)
+
+
+@dataclass
+class CompareResult:
+    """Outcome of running one scenario on several backends."""
+
+    scenario: str
+    backends: Tuple[str, ...]
+    results: Dict[str, ScenarioResult]
+    slow_step_s: float
+    completed_equal: bool
+    decisions_equal: bool
+    scaleup_tiers_equal: bool
+    drained_equal: bool
+    max_ttft_err_s: float
+    max_tpot_err_s: float
+
+    @property
+    def max_err_steps(self) -> float:
+        return (max(self.max_ttft_err_s, self.max_tpot_err_s)
+                / self.slow_step_s if self.slow_step_s else 0.0)
+
+    def to_row(self) -> dict:
+        return {
+            "scenario": self.scenario,
+            "backends": "/".join(self.backends),
+            "completed": {b: r.num_requests for b, r in self.results.items()},
+            "completed_equal": self.completed_equal,
+            "decisions_equal": self.decisions_equal,
+            "ttft_err_steps": round(self.max_ttft_err_s / self.slow_step_s, 3)
+            if self.slow_step_s else 0.0,
+            "tpot_err_steps": round(self.max_tpot_err_s / self.slow_step_s, 3)
+            if self.slow_step_s else 0.0,
+            "max_err_steps": round(self.max_err_steps, 3),
+        }
+
+
+def _decisions_of(res: ScenarioResult):
+    """The placement audit in a backend-independent form: the decision list
+    for open loop, the per-turn placement map for closed loop."""
+    return res.placements if res.placements is not None \
+        else res.routing_decisions
+
+
+def compare(scenario: Scenario,
+            backends: Sequence[str] = ("thread", "des"), *,
+            timeout: float = 600.0,
+            slow_step_s: Optional[float] = None,
+            check: bool = True) -> CompareResult:
+    """Run one scenario on several backends and check parity.
+
+    The bar (``check=True``, the default) is the repo's established one:
+
+    * every backend completes the same request set;
+    * routing decisions are identical (per-turn placements for sessions);
+    * autoscaler scale-up tier sequences and drain victims agree;
+    * per-request TTFT and TPOT agree within **one slow-step**
+      (``slow_step_s`` defaults to the scenario's coarsest predictor step).
+
+    Violations raise :class:`ParityError`; the returned
+    :class:`CompareResult` carries the per-backend results and error
+    magnitudes either way (pass ``check=False`` to inspect without
+    raising).
+    """
+    backends = tuple(backends)
+    if len(backends) < 2:
+        raise SpecError("compare needs at least two backends")
+    wiring = _Wiring(scenario)
+    step = slow_step_s if slow_step_s is not None else wiring.slow_step_s()
+
+    results = {b: run(scenario, b, timeout=timeout) for b in backends}
+    base_b = backends[0]
+    base = results[base_b]
+
+    problems: List[str] = []
+    completed_equal = True
+    decisions_equal = True
+    scaleups_equal = True
+    drained_equal = True
+    max_ttft = 0.0
+    max_tpot = 0.0
+    for b in backends[1:]:
+        other = results[b]
+        if set(base.latencies) != set(other.latencies):
+            completed_equal = False
+            problems.append(
+                f"{base_b}/{b}: completed different request sets "
+                f"({base.num_requests} vs {other.num_requests})")
+            continue
+        if _decisions_of(base) != _decisions_of(other):
+            decisions_equal = False
+            problems.append(f"{base_b}/{b}: routing decisions diverge")
+        if base.tiers_added != other.tiers_added:
+            scaleups_equal = False
+            problems.append(
+                f"{base_b}/{b}: scale-up tiers diverge "
+                f"({base.tiers_added} vs {other.tiers_added})")
+        if base.drained != other.drained:
+            drained_equal = False
+            problems.append(
+                f"{base_b}/{b}: drain victims diverge "
+                f"({base.drained} vs {other.drained})")
+        for k, (ttft_a, tpot_a, _) in base.latencies.items():
+            ttft_b, tpot_b, _ = other.latencies[k]
+            if ttft_a is not None and ttft_b is not None:
+                max_ttft = max(max_ttft, abs(ttft_a - ttft_b))
+            if tpot_a is not None and tpot_b is not None:
+                max_tpot = max(max_tpot, abs(tpot_a - tpot_b))
+
+    if max(max_ttft, max_tpot) > step + 1e-9:
+        problems.append(
+            f"latencies diverge by {max(max_ttft, max_tpot) / step:.3f} "
+            f"slow-steps (bar: 1.0 × {step}s)")
+    out = CompareResult(
+        scenario=scenario.name, backends=backends, results=results,
+        slow_step_s=step, completed_equal=completed_equal,
+        decisions_equal=decisions_equal,
+        scaleup_tiers_equal=scaleups_equal, drained_equal=drained_equal,
+        max_ttft_err_s=max_ttft, max_tpot_err_s=max_tpot)
+    if check and problems:
+        raise ParityError(
+            f"scenario {scenario.name!r} parity failed across "
+            f"{'/'.join(backends)}: " + "; ".join(problems))
+    return out

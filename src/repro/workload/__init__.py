@@ -11,13 +11,14 @@
 
 from .arrival import (ARRIVAL_PROCESSES, ArrivalProcess, GammaArrivals,
                       OnOffArrivals, PoissonArrivals, RateTraceArrivals,
-                      make_arrival)
+                      UniformArrivals, make_arrival)
 from .session import Session, SessionConfig, SessionWorkload, TurnSpec
 from .synth import WorkloadConfig, replay_trace, synthesize
 
 __all__ = [
     "ARRIVAL_PROCESSES",
     "ArrivalProcess",
+    "UniformArrivals",
     "PoissonArrivals",
     "GammaArrivals",
     "OnOffArrivals",

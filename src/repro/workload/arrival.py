@@ -39,6 +39,7 @@ import numpy as np
 
 __all__ = [
     "ArrivalProcess",
+    "UniformArrivals",
     "PoissonArrivals",
     "GammaArrivals",
     "OnOffArrivals",
@@ -66,6 +67,33 @@ class ArrivalProcess:
     def mean_rate(self) -> float:
         """Long-run average arrivals/second (used by sizing heuristics)."""
         raise NotImplementedError
+
+
+class UniformArrivals(ArrivalProcess):
+    """Deterministically spaced arrivals: request ``i`` at ``i / qps``.
+
+    No randomness at all — the process draws nothing from ``rng``.  This is
+    the arrival shape backend-parity scenarios use: every request lands on an
+    idle replica with headroom, so service starts continuously and a few ms
+    of cross-backend wall-rate absorption cannot flip a step-boundary
+    admission (see ``benchmarks/fig_distributed.py``).
+
+    >>> import numpy as np
+    >>> UniformArrivals(qps=4.0).sample(3, np.random.default_rng(0)).tolist()
+    [0.0, 0.25, 0.5]
+    """
+
+    name = "uniform"
+
+    def __init__(self, qps: float):
+        assert qps > 0
+        self.qps = qps
+
+    def sample(self, n: int, rng: np.random.Generator) -> np.ndarray:
+        return np.arange(n, dtype=np.float64) / self.qps
+
+    def mean_rate(self) -> float:
+        return self.qps
 
 
 class PoissonArrivals(ArrivalProcess):
@@ -195,8 +223,8 @@ class RateTraceArrivals(ArrivalProcess):
 
 ARRIVAL_PROCESSES = {
     cls.name: cls
-    for cls in (PoissonArrivals, GammaArrivals, OnOffArrivals,
-                RateTraceArrivals)
+    for cls in (UniformArrivals, PoissonArrivals, GammaArrivals,
+                OnOffArrivals, RateTraceArrivals)
 }
 
 

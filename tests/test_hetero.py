@@ -349,45 +349,31 @@ def test_hetero_emulator_matches_des_static_pool():
 def test_hetero_elastic_emulator_matches_des():
     """Mixed pool + scripted tier-selecting scale-up mid-run: both sides add
     the same (cheapest) tier at the same virtual time and latencies agree
-    within one slow-tier step."""
-    events = [(0.08, +1)]
-    asc_cfg = AutoscalerConfig(interval_s=0.05, provision_delay_s=0.1,
-                               min_replicas=2, max_replicas=3,
-                               tiers=("h100", "l4"),
-                               provision_delay_by_tier={"l4": 0.06})
-    reqs = workload(n=16, qps=30.0)
-    reqs[-1].arrival_time = 1.2      # keep the run alive past the scale-up
-    reqs_des = copy.deepcopy(reqs)
-    ecfg = engine_cfg(enable_prefix_caching=False)
+    within one slow-tier step.  One ``repro.scenario.compare`` call
+    replaces the hand-rolled emulator+DES plumbing: the scenario spec
+    carries the pool, the schedule, and the per-tier predictors, and both
+    backends are wired from it identically by construction."""
+    from repro.scenario import compare, scenario_with, get_preset
 
-    cluster = build(["h100", "l4"], ecfg=ecfg)
-    asc = Autoscaler(cluster, SchedulePolicy(events), asc_cfg)
-    try:
-        BenchmarkRunner(cluster, reqs, transport=cluster.transport,
-                        autoscaler=asc).run(timeout=120)
-        emu = {r.request_id: r.e2e_latency() for r in cluster.finished}
-        emu_tiers = list(cluster.replica_tiers)
-        assert [t for _, t in asc.scaleups] == ["l4"]
-    finally:
-        cluster.shutdown()
-
-    des = DiscreteEventSimulator(
-        StaticPredictor(DT["h100"]),
-        DESConfig(max_num_seqs=8, max_batched_tokens=64, step_overhead_s=0.0),
-        num_replicas=2, router=make_router("round_robin", 2),
-        autoscaler_policy=SchedulePolicy(events), autoscaler_cfg=asc_cfg,
-        replica_tiers=["h100", "l4"], tier_predictors=tier_predictors(),
-        tier_specs=tier_specs(ecfg))
-    sims = des.run(reqs_des)
-
-    assert emu_tiers == [r.tier for r in des.replicas] == \
-        ["h100", "l4", "l4"]
-    slow = max(DT.values())
-    for orig, sim in zip(reqs_des, sims):
-        assert sim.finish_time is not None
-        err = abs(emu[orig.request_id] - (sim.finish_time - sim.arrival_time))
-        assert err <= slow + 1e-9, \
-            f"request {orig.request_id} diverges by {err / slow:.2f} steps"
+    scenario = scenario_with(
+        get_preset("elastic_tier_parity"),
+        name="hetero_elastic_parity",
+        **{"workload.arrival": "poisson",   # queued regime, same bar
+           "workload.qps": 30.0,
+           "workload.num_requests": 16,
+           "workload.output_len_mean": 8.0,
+           "workload.max_output_len": 12,
+           "pool.tier_step_time_s": DT,
+           "autoscale.schedule": [[0.08, 1]],
+           "autoscale.interval_s": 0.05,
+           "seed": 3})
+    cres = compare(scenario, backends=("thread", "des"), timeout=120)
+    emu, des = cres.results["thread"], cres.results["des"]
+    assert emu.tiers_added == des.tiers_added == ["l4"]
+    assert emu.replica_tiers == des.replica_tiers == ["h100", "l4", "l4"]
+    assert cres.decisions_equal
+    assert cres.max_err_steps <= 1.0
+    assert emu.num_requests == des.num_requests == 16
 
 
 def test_des_rejects_unknown_tier():

@@ -127,25 +127,28 @@ def test_process_cluster_rejects_incompatible_modes():
 # =========================================================================
 
 def test_process_backend_matches_thread_backend_same_seed():
-    """Identical routing decisions; per-request TTFT/e2e within one
+    """Identical routing decisions; per-request TTFT/TPOT within one
     slow-step — the repo's analogue of the paper's distributed-causality
-    claim, also asserted at benchmark scale by fig_distributed."""
-    def run(backend):
-        cluster = build(2, backend=backend)
-        try:
-            drive(cluster, workload(n=12, qps=6.0, seed=11))
-            ordered = sorted(cluster.finished, key=lambda r: r.arrival_time)
-            return (list(cluster.router.decisions),
-                    [(r.ttft(), r.e2e_latency()) for r in ordered])
-        finally:
-            cluster.shutdown()
+    claim, also asserted at benchmark scale by fig_distributed.  One
+    ``repro.scenario.compare`` call replaces the hand-rolled two-backend
+    plumbing: the scenario spec carries the whole cell."""
+    from repro.scenario import compare, scenario_with, get_preset
 
-    dec_t, lat_t = run("thread")
-    dec_p, lat_p = run("process")
-    assert dec_t == dec_p, "routing decisions diverge between backends"
-    for (ttft_t, e2e_t), (ttft_p, e2e_p) in zip(lat_t, lat_p):
-        assert abs(ttft_t - ttft_p) <= STEP + 1e-9
-        assert abs(e2e_t - e2e_p) <= STEP + 1e-9
+    scenario = scenario_with(
+        get_preset("distributed_parity"),
+        name="process_thread_parity",
+        **{"workload.arrival": "poisson",     # queued regime, same bar
+           "workload.qps": 6.0,
+           "workload.num_requests": 12,
+           "workload.output_len_mean": 6.0,
+           "workload.max_output_len": 10,
+           "pool.step_time_s": STEP,
+           "seed": 11})
+    cres = compare(scenario, backends=("thread", "process"), timeout=120)
+    assert cres.decisions_equal
+    assert cres.max_err_steps <= 1.0
+    assert cres.results["thread"].num_requests == 12
+    assert cres.results["process"].num_requests == 12
 
 
 # =========================================================================

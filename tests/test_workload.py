@@ -20,13 +20,15 @@ from repro.workload.session import _DUMMY
 # =========================================================================
 
 def test_registry_and_make():
-    assert set(ARRIVAL_PROCESSES) == {"poisson", "gamma", "onoff", "trace"}
+    assert set(ARRIVAL_PROCESSES) == {"uniform", "poisson", "gamma", "onoff",
+                                      "trace"}
     assert isinstance(make_arrival("gamma", 2.0, cv2=8.0), GammaArrivals)
     with pytest.raises(ValueError):
         make_arrival("nope", 2.0)
 
 
 @pytest.mark.parametrize("proc", [
+    make_arrival("uniform", 5.0),
     PoissonArrivals(5.0),
     GammaArrivals(5.0, cv2=8.0),
     OnOffArrivals(5.0, period_s=4.0, duty=0.25),
