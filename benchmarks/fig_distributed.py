@@ -68,6 +68,7 @@ def measure_scenario(replicas: int, n: int):
 
 def measure(backend: str, replicas: int, n: int) -> dict:
     res = run(measure_scenario(replicas, n), backend=backend, timeout=3600)
+    tks = res.timekeeper or {}
     return {
         "backend": backend,
         "replicas": replicas,
@@ -79,6 +80,10 @@ def measure(backend: str, replicas: int, n: int) -> dict:
         "virtual_s": round(res.makespan_virtual, 2),
         "wall_s": round(res.wall_seconds, 2),
         "speedup_x": round(res.speedup, 1),
+        # barrier pressure: how much clock coordination the cell cost
+        "rounds": tks.get("rounds", 0),
+        "batched_requests": tks.get("batched_requests", 0),
+        "coalesced_parks": tks.get("coalesced_parks", 0),
     }
 
 

@@ -1,0 +1,237 @@
+"""Raw emulation speed — the perf trajectory figure (``BENCH_<pr>.json``).
+
+The paper's headline is that time-warp emulation runs the serving timeline
+5–17× faster than real execution; this figure is the repo's standing
+measurement of *how fast the emulator itself goes*, tracked per-PR so the
+coordination hot path cannot silently regress.  Two layers:
+
+**Coordination microbenchmark** — N synthetic actors drive one Timekeeper
+through a fixed schedule of 1 ms jump targets under a manual wall (pure
+protocol cost, zero engine work), once through the legacy per-target
+re-send loop (``unbatched``) and once through :meth:`TimeJumpClient.jump_run`
+runs that the barrier resolves as merged bursts (``batched``).  The batched
+path must hold ≥ 2× events/sec at 8 actors — that assertion is the fast
+path's regression gate.
+
+**End-to-end cells** — the same ``cluster_scaling``-derived scenario at 2/4/8
+replicas on the thread and process backends, reporting emulated engine
+steps per wall second, virtual-seconds-per-wall-second (the emulation
+speedup), barrier rounds/sec, and the Timekeeper's batching counters
+(``batched_requests``, ``merged_rounds``, ``coalesced_parks``) so barrier
+pressure is visible in the artifact.
+
+Writes ``BENCH_6.json`` at the repo root (schema:
+``tools/bench_trajectory.py``; CI validates it and uploads it as an
+artifact).
+"""
+
+from __future__ import annotations
+
+import argparse
+import platform
+import threading
+import time
+from pathlib import Path
+
+from benchmarks.common import emit, print_table
+from repro.scenario import get_preset, run, scenario_with
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+PR_NUMBER = 6
+
+ACTOR_COUNTS = [2, 4, 8]
+REPLICAS = [2, 4, 8]
+BACKENDS = ["thread", "process"]
+STEP_S = 1e-3          # microbench jump size
+CHUNK = 40             # targets per jump_run request
+
+
+# =========================================================================
+# coordination microbenchmark (protocol cost only)
+# =========================================================================
+
+def coordination_cell(actors: int, steps: int, batched: bool) -> dict:
+    """N actor threads × ``steps`` 1 ms targets against one Timekeeper.
+
+    Manual wall source: virtual time moves *only* through barrier
+    resolutions, so events/sec is pure coordination throughput — lock
+    round-trips, condition-variable wakeups, burst merging — with no
+    sleep-based noise floor.
+    """
+    from repro.core.client import LocalTransport, TimeJumpClient
+    from repro.core.clock import ManualWallSource, VirtualClock
+    from repro.core.timekeeper import Timekeeper
+
+    tk = Timekeeper(clock=VirtualClock(ManualWallSource()),
+                    jitter_cooldown=0.0)
+    tr = LocalTransport(tk)
+    clients = [TimeJumpClient(tr, f"w{i}", batched=batched)
+               for i in range(actors)]
+    start = threading.Barrier(actors + 1)
+
+    def drive(c: "TimeJumpClient") -> None:
+        start.wait()
+        if batched:
+            done = 0
+            while done < steps:
+                k = min(CHUNK, steps - done)
+                t0 = c.now()
+                c.jump_run([t0 + STEP_S * (j + 1) for j in range(k)])
+                done += k
+        else:
+            for _ in range(steps):
+                c.time_jump(STEP_S)
+        c.deregister()
+
+    threads = [threading.Thread(target=drive, args=(c,), daemon=True)
+               for c in clients]
+    for t in threads:
+        t.start()
+    start.wait()
+    wall0 = time.perf_counter()
+    for t in threads:
+        t.join(timeout=600)
+        assert not t.is_alive(), "coordination microbench wedged"
+    wall = time.perf_counter() - wall0
+    virtual = tk.clock.now()
+    stats = tk.stats
+    row = {
+        "actors": actors,
+        "coordination_mode": "batched" if batched else "unbatched",
+        "events": actors * steps,
+        "wall_s": round(wall, 4),
+        "events_per_s": round(actors * steps / wall, 1),
+        "rounds_per_s": round(stats.rounds / wall, 1),
+        "virtual_per_wall": round(virtual / wall, 1),
+        "rounds": stats.rounds,
+        "requests": stats.requests,
+        "batched_requests": stats.batched_requests,
+        "merged_rounds": stats.merged_rounds,
+        "coalesced_parks": stats.coalesced_parks,
+    }
+    tk.close()
+    return row
+
+
+# =========================================================================
+# end-to-end cells (full serving stack)
+# =========================================================================
+
+def e2e_scenario(replicas: int, n: int):
+    """Load-scaled cluster_scaling derivative: requests and arrival rate
+    grow with the pool so every replica count runs at comparable per-replica
+    pressure (otherwise big pools idle and measure park churn, not steps)."""
+    return scenario_with(
+        get_preset("cluster_scaling"),
+        name=f"emu_speed[{replicas}r]",
+        **{"workload.num_requests": n * replicas,
+           "workload.qps": 8.0 * replicas,
+           "workload.prompt_len_mean": 120.0,
+           "workload.output_len_mean": 16.0,
+           "workload.max_output_len": 24,
+           "pool.replicas": replicas,
+           "pool.step_time_s": 20e-3,
+           "pool.enable_prefix_caching": False,
+           "slo.ttft_s": None,
+           "seed": 29})
+
+
+def e2e_cell(backend: str, replicas: int, n: int) -> dict:
+    res = run(e2e_scenario(replicas, n), backend=backend, timeout=3600)
+    tks = res.timekeeper or {}
+    wall = max(res.wall_seconds, 1e-9)
+    return {
+        "backend": backend,
+        "replicas": replicas,
+        "events": res.num_steps,
+        "requests": res.num_requests,
+        "wall_s": round(res.wall_seconds, 3),
+        "virtual_s": round(res.makespan_virtual, 3),
+        "events_per_s": round(res.num_steps / wall, 1),
+        "rounds_per_s": round(tks.get("rounds", 0) / wall, 1),
+        "virtual_per_wall": round(res.makespan_virtual / wall, 1),
+        "timekeeper": tks,
+    }
+
+
+# =========================================================================
+# figure entry points
+# =========================================================================
+
+def rows(n: int = 24, coord_steps: int = 400) -> list:
+    coord = [coordination_cell(a, coord_steps, batched)
+             for a in ACTOR_COUNTS for batched in (False, True)]
+    e2e = [e2e_cell(b, r, n) for b in BACKENDS for r in REPLICAS]
+    return coord + e2e
+
+
+def _bench_doc(coord: list, e2e: list, mode: str) -> dict:
+    by_mode = {(r["actors"], r["coordination_mode"]): r for r in coord}
+    speedup_at_8 = (by_mode[(8, "batched")]["events_per_s"]
+                    / by_mode[(8, "unbatched")]["events_per_s"])
+    return {
+        "bench": "emu_speed",
+        "pr": PR_NUMBER,
+        "schema_version": 1,
+        "mode": mode,
+        "host": {
+            "python": platform.python_version(),
+            "platform": platform.platform(),
+            "cpus": __import__("os").cpu_count() or 1,
+        },
+        "coordination": coord,
+        "end_to_end": [{k: v for k, v in r.items()} for r in e2e],
+        "summary": {
+            "batched_speedup_at_8": round(speedup_at_8, 2),
+            "max_events_per_s": max(
+                float(r["events_per_s"]) for r in coord + e2e),
+            "max_virtual_per_wall": max(
+                float(r["virtual_per_wall"]) for r in e2e),
+        },
+    }
+
+
+def main(n: int = 24, coord_steps: int = 400, mode: str = "full") -> list:
+    from tools.bench_trajectory import write_bench
+
+    coord = [coordination_cell(a, coord_steps, batched)
+             for a in ACTOR_COUNTS for batched in (False, True)]
+    print_table(coord, cols=["actors", "coordination_mode", "events",
+                             "wall_s", "events_per_s", "rounds_per_s",
+                             "virtual_per_wall", "batched_requests",
+                             "merged_rounds", "coalesced_parks"])
+    e2e = [e2e_cell(b, r, n) for b in BACKENDS for r in REPLICAS]
+    printable = [{**{k: v for k, v in r.items() if k != "timekeeper"},
+                  "rounds": r["timekeeper"].get("rounds", 0),
+                  "batched_requests":
+                      r["timekeeper"].get("batched_requests", 0),
+                  "coalesced_parks":
+                      r["timekeeper"].get("coalesced_parks", 0)}
+                 for r in e2e]
+    print_table(printable)
+    emit("fig_emu_speed", coord + printable)
+
+    doc = _bench_doc(coord, e2e, mode)
+    out = write_bench(doc, REPO_ROOT / f"BENCH_{PR_NUMBER}.json")
+    print(f"[fig_emu_speed] trajectory point -> {out}")
+
+    speedup = doc["summary"]["batched_speedup_at_8"]
+    assert speedup >= 2.0, (
+        f"batched coordination regressed: {speedup:.2f}x events/sec over "
+        f"unbatched at 8 actors (gate: >= 2.0x)")
+    print(f"batched coordination: {speedup:.2f}x events/sec over the "
+          f"unbatched path at 8 actors; best end-to-end "
+          f"{doc['summary']['max_virtual_per_wall']:.0f}x virtual/wall")
+    return coord + printable
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes: CI rot-check, not results")
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    run_mode = "smoke" if args.smoke else ("quick" if args.quick else "full")
+    sizes = {"full": (24, 400), "quick": (12, 200), "smoke": (6, 120)}
+    n_, steps_ = sizes[run_mode]
+    main(n=n_, coord_steps=steps_, mode=run_mode)

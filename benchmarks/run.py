@@ -107,6 +107,18 @@ def _distributed(mode):
             f"decisions_equal={all(p['decisions_equal'] for p in parities)}")
 
 
+def _emu_speed(mode):
+    from benchmarks import fig_emu_speed as m
+    m.main(n=_n(mode, 24, 12, 6),
+           coord_steps=_n(mode, 400, 200, 120), mode=mode)
+    import json
+    doc = json.loads((m.REPO_ROOT / f"BENCH_{m.PR_NUMBER}.json").read_text())
+    s = doc["summary"]
+    return (f"batched_speedup_at_8={s['batched_speedup_at_8']}x,"
+            f"max_events_per_s={s['max_events_per_s']:.0f},"
+            f"max_virtual_per_wall={s['max_virtual_per_wall']}")
+
+
 def _table1(mode):
     from benchmarks import table1_features as m
     rows = m.main()
@@ -138,6 +150,7 @@ SUITES = [
     ("fig_autoscale", _autoscale),
     ("fig_hetero", _hetero),
     ("fig_distributed", _distributed),
+    ("fig_emu_speed", _emu_speed),
     ("table1_features", _table1),
     ("roofline", _roofline),
 ]

@@ -77,7 +77,8 @@ from dataclasses import dataclass
 from typing import Callable, Dict, List, Optional
 
 from repro.core.client import LocalTransport
-from repro.core.transport import TimekeeperServer, TransportClosed
+from repro.core.transport import (FrameWriter, TimekeeperServer,
+                                  TransportClosed, pack_frame)
 from repro.models.config import ModelConfig
 from repro.serving.request import Request
 from repro.serving.scheduler import EngineConfig
@@ -94,10 +95,15 @@ _RPC_TIMEOUT = 60.0
 _ACK_TIMEOUT = 60.0
 
 
-def _send_obj(sock: socket.socket, lock: threading.Lock, obj: dict) -> None:
-    body = pickle.dumps(obj)
-    with lock:
-        sock.sendall(_LEN.pack(len(body)) + body)
+def _send_obj(writer: FrameWriter, obj: dict) -> None:
+    """Queue one pickled control frame on the socket's write combiner.
+
+    All control-plane writes on a socket share one :class:`FrameWriter`, so
+    bursts — completion frames from several finishing requests, acks racing
+    replies — coalesce into a single ``sendmsg`` flush instead of paying one
+    ``sendall`` syscall (plus lock convoy) each.
+    """
+    writer.send(pack_frame(pickle.dumps(obj)))
 
 
 def _recv_obj(sock: socket.socket) -> Optional[dict]:
@@ -144,7 +150,7 @@ class _ReplicaServer:
         self.ctrl = ctrl
         self.tk_addr = tuple(tk_addr)
         self.index = index
-        self.send_lock = threading.Lock()
+        self.writer = FrameWriter(ctrl)
         self.engine = None
         self.transport = None
         self.worker_client = None
@@ -189,7 +195,7 @@ class _ReplicaServer:
         with self._ack_lock:
             self._ack_events[cid] = ev
         try:
-            _send_obj(self.ctrl, self.send_lock,
+            _send_obj(self.writer,
                       {"op": "complete", "cid": cid, "reqs": finished})
         except OSError:
             return                        # parent died: nothing to wait for
@@ -266,7 +272,7 @@ class _ReplicaServer:
                 continue                     # fire-and-forget op
             reply["rid"] = rid
             try:
-                _send_obj(self.ctrl, self.send_lock, reply)
+                _send_obj(self.writer, reply)
             except OSError:
                 return
 
@@ -307,7 +313,7 @@ def _replica_main(ctrl_addr, tk_addr, index: int) -> None:
     ctrl = socket.create_connection(tuple(ctrl_addr))
     ctrl.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
     server = _ReplicaServer(ctrl, tk_addr, index)
-    _send_obj(ctrl, server.send_lock, {"op": "hello", "replica": index})
+    _send_obj(server.writer, {"op": "hello", "replica": index})
     server.run()
 
 
@@ -332,7 +338,7 @@ class ProcessReplicaHandle:
         self.proc = proc
         self.name = f"replica-{index}"
         self.on_complete: Optional[Callable[[List[Request]], None]] = None
-        self._send_lock = threading.Lock()
+        self._writer = FrameWriter(conn)
         self._replies: Dict[int, "queue.Queue[dict]"] = {}
         self._replies_lock = threading.Lock()
         self._rid = itertools.count()
@@ -372,7 +378,7 @@ class ProcessReplicaHandle:
                         # listeners have run, follow-up actors are
                         # registered, the replica may re-enter the barrier.
                         try:
-                            _send_obj(self.conn, self._send_lock,
+                            _send_obj(self._writer,
                                       {"op": "complete_ack",
                                        "cid": msg["cid"]})
                         except OSError:
@@ -402,7 +408,7 @@ class ProcessReplicaHandle:
             self._replies[rid] = q
         try:
             try:
-                _send_obj(self.conn, self._send_lock, msg)
+                _send_obj(self._writer, msg)
             except OSError as e:
                 raise TransportClosed(f"{self.name}: {e}") from None
             try:
@@ -420,7 +426,7 @@ class ProcessReplicaHandle:
 
     def _send_oneway(self, msg: dict) -> None:
         try:
-            _send_obj(self.conn, self._send_lock, msg)
+            _send_obj(self._writer, msg)
         except OSError:
             pass
 

@@ -51,23 +51,31 @@ __all__ = ["Timekeeper", "TimekeeperStats"]
 class TimekeeperStats:
     """Counters exposed for benchmarks (barrier pressure, acceleration)."""
 
-    rounds: int = 0                 # barrier resolutions
+    rounds: int = 0                 # barrier resolutions (logical rounds)
     requests: int = 0               # jump requests received
+    batched_requests: int = 0       # requests that carried a multi-target run
+    merged_rounds: int = 0          # rounds resolved inside a burst beyond
+                                    # the first (no extra fanout was paid)
     virtual_advanced: float = 0.0   # seconds of offset added (time skipped)
     cooldown_waits: int = 0         # jitter cooldowns applied
     registered_peak: int = 0
     parks: int = 0                  # park transitions (idle replicas)
     unparks: int = 0
+    coalesced_parks: int = 0        # park/unpark transitions folded into a
+                                    # barrier message instead of their own RPC
 
     def as_dict(self) -> dict:
         return {
             "rounds": self.rounds,
             "requests": self.requests,
+            "batched_requests": self.batched_requests,
+            "merged_rounds": self.merged_rounds,
             "virtual_advanced_s": self.virtual_advanced,
             "cooldown_waits": self.cooldown_waits,
             "registered_peak": self.registered_peak,
             "parks": self.parks,
             "unparks": self.unparks,
+            "coalesced_parks": self.coalesced_parks,
         }
 
 
@@ -104,7 +112,16 @@ class Timekeeper:
         self._lock = threading.Lock()
         self._actors: Set[str] = set()
         self._parked: Set[str] = set()
-        self._pending: Dict[str, float] = {}
+        # Per-actor queues of ascending jump targets.  A queue *persists
+        # across rounds* until consumed: targets are popped once the clock
+        # reaches them, so an actor whose target lies beyond the current
+        # round's minimum stays pending without re-sending (the batched fast
+        # path).  A new request replaces the actor's queue wholesale, which
+        # keeps the legacy single-target re-send protocol exactly equivalent.
+        self._pending: Dict[str, list] = {}
+        # Actors to auto-park the moment their queued run is fully consumed
+        # (the park transition rides the jump request instead of its own RPC).
+        self._park_after: Set[str] = set()
         self._last_advance_wall = -float("inf")
         self._broadcast_hooks: list[Callable[[float, int], None]] = []
         self.stats = TimekeeperStats()
@@ -128,6 +145,7 @@ class Timekeeper:
             self._actors.discard(actor_id)
             self._parked.discard(actor_id)
             self._pending.pop(actor_id, None)
+            self._park_after.discard(actor_id)
             rounds_before = self.stats.rounds
             self._maybe_resolve_locked()
             if self.stats.rounds == rounds_before:
@@ -158,6 +176,7 @@ class Timekeeper:
                 self._actors.discard(actor_id)
                 self._parked.add(actor_id)
                 self._pending.pop(actor_id, None)
+                self._park_after.discard(actor_id)
                 self.stats.parks += 1
                 self._maybe_resolve_locked()
 
@@ -178,6 +197,7 @@ class Timekeeper:
             self._actors.clear()
             self._parked.clear()
             self._pending.clear()
+            self._park_after.clear()
             # Final epoch bump releases any straggling waiters immediately —
             # broadcast it so *remote* waiters (replica clocks on the socket
             # transport, possibly parked) release too instead of riding out
@@ -225,29 +245,106 @@ class Timekeeper:
         barrier resolves during this call, the epoch has already moved and the
         client's wait returns immediately).
         """
+        return self.request_jump_run(actor_id, (t_target,))
+
+    def request_jump_run(
+        self,
+        actor_id: str,
+        targets,
+        *,
+        unpark: bool = False,
+        park_after: bool = False,
+    ) -> int:
+        """Batched fan-in: submit a *run* of ascending absolute jump targets
+        in one request.
+
+        The run replaces any queue the actor already had and persists across
+        rounds until consumed — targets are popped as the clock reaches them,
+        so the actor never re-sends while the barrier walks through its run.
+        When every active actor holds a queued run, the barrier resolves the
+        whole overlap as one burst of merged rounds (minimum-target rule per
+        merged step, so causality is exactly the single-target protocol's)
+        with a single collapsed clock advance and fan-out.
+
+        ``unpark=True`` folds a park-exit into this request (a parked actor
+        re-enters the barrier and submits in one message); ``park_after=True``
+        folds the opposite transition in: the Timekeeper auto-parks the actor
+        the moment its run is fully consumed, saving the separate park RPC an
+        idle-bound replica would otherwise issue per step.
+        """
         with self._lock:
+            if unpark and actor_id in self._parked:
+                self._parked.discard(actor_id)
+                self._actors.add(actor_id)
+                self.stats.unparks += 1
+                self.stats.coalesced_parks += 1
+                self.stats.registered_peak = max(
+                    self.stats.registered_peak, len(self._actors)
+                )
             if actor_id not in self._actors:
                 raise KeyError(
                     f"actor {actor_id!r} is not registered with the Timekeeper"
                 )
+            run = sorted(float(t) for t in targets)
+            if not run:
+                raise ValueError("jump run must contain at least one target")
             epoch_before = self.clock.epoch
-            self._pending[actor_id] = t_target
+            self._pending[actor_id] = run
             self.stats.requests += 1
+            if len(run) > 1:
+                self.stats.batched_requests += 1
+            if park_after:
+                self._park_after.add(actor_id)
+            else:
+                self._park_after.discard(actor_id)
             self._maybe_resolve_locked()
             return epoch_before
 
     # ---------------------------------------------------------- internal --
+    def _pop_reached_locked(self, t_min: float) -> None:
+        """Consume every queued target the clock has reached; auto-park
+        actors whose ``park_after`` run is now fully consumed.  Caller holds
+        ``self._lock``."""
+        for a in list(self._actors):
+            q = self._pending.get(a)
+            if not q:
+                continue
+            while q and q[0] <= t_min:
+                q.pop(0)
+            if not q:
+                del self._pending[a]
+                if a in self._park_after:
+                    # The coalesced park transition: fold the idle-replica
+                    # park into barrier resolution instead of its own RPC.
+                    self._park_after.discard(a)
+                    self._actors.discard(a)
+                    self._parked.add(a)
+                    self.stats.parks += 1
+                    self.stats.coalesced_parks += 1
+
     def _maybe_resolve_locked(self) -> None:
-        """Algorithm 2 lines 5–12.  Caller holds ``self._lock``."""
+        """Algorithm 2 lines 5–12, burst-generalised.  Caller holds
+        ``self._lock``.
+
+        While every active actor has a non-empty target queue, merged rounds
+        resolve back-to-back: each takes the minimum head target (causality —
+        never past any actor's minimum) and pops what it reached.  A burst
+        only runs ahead through targets actors *pre-committed* in a run; it
+        stops the moment any actor's queue empties (that actor gets control
+        back before time moves further).  The whole burst collapses into ONE
+        physical clock advance + fan-out, so a k-step overlap costs one epoch
+        bump and one broadcast instead of k.
+        """
         if not self._actors:
             return
-        if not all(a in self._pending for a in self._actors):
+        if not all(self._pending.get(a) for a in self._actors):
             return
 
         # Jitter cooldown (§4.2.1 "Handling Message Jitter"): enforce >= J of
         # wall time between consecutive advances so any message produced under
         # the previous offset has been delivered before observers can read a
-        # post-jump timestamp.
+        # post-jump timestamp.  One cooldown per burst: the burst is a single
+        # physical advance.
         if self.jitter_cooldown > 0:
             now_wall = self.clock.wall.time()
             wait = self._last_advance_wall + self.jitter_cooldown - now_wall
@@ -257,12 +354,19 @@ class Timekeeper:
                 # requests would be barrier-blocked behind this round anyway.
                 self.clock.wall.sleep(wait)
 
-        t_min = min(self._pending[a] for a in self._actors)
+        merged = 0
+        final_t = None
+        while self._actors and all(self._pending.get(a) for a in self._actors):
+            t_min = min(self._pending[a][0] for a in self._actors)
+            self._pop_reached_locked(t_min)
+            final_t = t_min
+            merged += 1
+
         before = self.clock.offset
-        self.clock.advance_to(t_min)  # epoch bump + notify, even if offset flat
-        after, epoch = self.clock.offset, self.clock.epoch
+        self.clock.advance_to(final_t)  # epoch bump + notify, even if flat
+        after = self.clock.offset
         self.stats.virtual_advanced += after - before
-        self.stats.rounds += 1
+        self.stats.rounds += merged
+        self.stats.merged_rounds += merged - 1
         self._last_advance_wall = self.clock.wall.time()
-        self._pending.clear()
         self._fanout_locked()

@@ -57,21 +57,82 @@ from typing import Dict, Optional
 
 import msgpack
 
+from .client import TransportClosed
 from .clock import UnixWallSource, VirtualClock
 from .timekeeper import Timekeeper
 
-__all__ = ["TimekeeperServer", "SocketTransport", "TransportClosed"]
+__all__ = ["TimekeeperServer", "SocketTransport", "TransportClosed",
+           "FrameWriter", "pack_frame"]
 
 _LEN = struct.Struct(">I")
 
 
-class TransportClosed(ConnectionError):
-    """The transport's socket is gone (server close / peer death)."""
+def pack_frame(body: bytes) -> bytes:
+    """Length-prefix a serialized body into one wire frame."""
+    return _LEN.pack(len(body)) + body
+
+
+class FrameWriter:
+    """Per-socket write combiner: one ``sendmsg`` per flush, many frames.
+
+    Senders enqueue ready-to-wire frames under a cheap lock; the first
+    sender in becomes the *flusher* and drains everything queued — including
+    frames that arrive while it is inside the syscall — with a single
+    scatter-gather ``sendmsg`` per drain.  Concurrent senders therefore pay
+    one list append instead of one syscall each, which is exactly the
+    process-mode hot path (clock piggybacks + completion acks per step).
+
+    Falls back to ``sendall`` on partial writes and on sockets without
+    ``sendmsg``.  Raises the underlying ``OSError`` to the flushing sender;
+    frames it had drained are lost with the connection (same contract as the
+    direct ``sendall`` path this replaces).
+    """
+
+    def __init__(self, sock: socket.socket):
+        self._sock = sock
+        self._lock = threading.Lock()
+        self._queue: list = []
+        self._flushing = False
+        self.flushes = 0          # syscall batches issued
+        self.frames = 0           # frames written (frames > flushes == win)
+
+    def send(self, *frames: bytes) -> None:
+        with self._lock:
+            self._queue.extend(frames)
+            if self._flushing:
+                return            # the elected flusher will carry these out
+            self._flushing = True
+        try:
+            while True:
+                with self._lock:
+                    batch, self._queue = self._queue, []
+                    if not batch:
+                        self._flushing = False
+                        return
+                self._write_batch(batch)
+        except BaseException:
+            with self._lock:
+                self._flushing = False
+            raise
+
+    def _write_batch(self, batch: list) -> None:
+        self.flushes += 1
+        self.frames += len(batch)
+        sendmsg = getattr(self._sock, "sendmsg", None)
+        if sendmsg is None:
+            self._sock.sendall(b"".join(batch))
+            return
+        total = sum(len(b) for b in batch)
+        sent = sendmsg(batch)
+        if sent < total:
+            # Partial scatter-gather write (large batch vs. socket buffer):
+            # finish the remainder with the reliable path.
+            self._sock.sendall(b"".join(batch)[sent:])
 
 
 def _send_frame(sock: socket.socket, obj: dict) -> None:
     body = msgpack.packb(obj, use_bin_type=True)
-    sock.sendall(_LEN.pack(len(body)) + body)
+    sock.sendall(pack_frame(body))
 
 
 def _recv_frame(sock: socket.socket) -> Optional[dict]:
@@ -115,6 +176,7 @@ class TimekeeperServer:
         self._listener = socket.create_server((host, port))
         self.address = self._listener.getsockname()
         self._conns: Dict[int, socket.socket] = {}
+        self._writers: Dict[int, FrameWriter] = {}
         self._conn_lock = threading.Lock()
         self._bcast_q: "queue.Queue[Optional[tuple[float, int]]]" = queue.Queue()
         self.timekeeper.add_broadcast_hook(
@@ -140,20 +202,37 @@ class TimekeeperServer:
             item = self._bcast_q.get()
             if item is None:
                 return
+            # Collapse a backlog to the latest queued update: replica clocks
+            # install updates with max(offset)/max(epoch), so intermediate
+            # records carry no information once a newer one exists — under
+            # burst resolution this turns k pending broadcasts into one
+            # frame per connection.  The sentinel still terminates us, but
+            # only after the final (releasing) update has gone out.
+            stop = False
+            while True:
+                try:
+                    nxt = self._bcast_q.get_nowait()
+                except queue.Empty:
+                    break
+                if nxt is None:
+                    stop = True
+                    break
+                item = nxt
             offset, epoch = item
             # Serialize once, write to all (constant cost per round).
-            body = msgpack.packb(
+            frame = pack_frame(msgpack.packb(
                 {"op": "clock", "offset": offset, "epoch": epoch},
                 use_bin_type=True,
-            )
-            frame = _LEN.pack(len(body)) + body
+            ))
             with self._conn_lock:
-                conns = list(self._conns.items())
-            for cid, conn in conns:
+                writers = list(self._writers.items())
+            for cid, writer in writers:
                 try:
-                    conn.sendall(frame)
+                    writer.send(frame)
                 except OSError:
                     self._drop(cid)
+            if stop:
+                return
 
     # ----------------------------------------------------------- fan-in ---
     def _accept_loop(self) -> None:
@@ -167,6 +246,7 @@ class TimekeeperServer:
             cid += 1
             with self._conn_lock:
                 self._conns[cid] = conn
+                self._writers[cid] = FrameWriter(conn)
             threading.Thread(
                 target=self._serve_conn,
                 args=(cid, conn),
@@ -179,6 +259,8 @@ class TimekeeperServer:
         # park keeps the actor known, so its death must still deregister it).
         actors_here: set[str] = set()
         tk = self.timekeeper
+        with self._conn_lock:
+            writer = self._writers.get(cid) or FrameWriter(conn)
         try:
             while True:
                 msg = _recv_frame(conn)
@@ -188,6 +270,15 @@ class TimekeeperServer:
                 try:
                     if op == "jump":
                         epoch = tk.request_jump(msg["actor"], msg["target"])
+                        reply = {"op": "jump_ack", "rid": msg["rid"],
+                                 "epoch": epoch}
+                    elif op == "jump_run":
+                        epoch = tk.request_jump_run(
+                            msg["actor"],
+                            msg["targets"],
+                            unpark=bool(msg.get("unpark")),
+                            park_after=bool(msg.get("park_after")),
+                        )
                         reply = {"op": "jump_ack", "rid": msg["rid"],
                                  "epoch": epoch}
                     elif op == "register":
@@ -225,7 +316,12 @@ class TimekeeperServer:
                     # that ack observed.
                     reply["clock_offset"] = tk.clock.offset
                     reply["clock_epoch"] = tk.clock.epoch
-                _send_frame(conn, reply)
+                # Reply through the shared per-connection writer so acks
+                # coalesce with concurrent clock broadcasts into one
+                # sendmsg flush instead of interleaved sendall syscalls.
+                writer.send(pack_frame(
+                    msgpack.packb(reply, use_bin_type=True)
+                ))
         finally:
             # Connection death == actor death: deregister so the barrier is
             # never wedged by a crashed worker (fault tolerance).
@@ -236,6 +332,7 @@ class TimekeeperServer:
     def _drop(self, cid: int) -> None:
         with self._conn_lock:
             conn = self._conns.pop(cid, None)
+            self._writers.pop(cid, None)
         if conn is not None:
             try:
                 conn.close()
@@ -268,6 +365,7 @@ class TimekeeperServer:
                 except OSError:
                     pass
             self._conns.clear()
+            self._writers.clear()
 
 
 class SocketTransport:
@@ -388,6 +486,29 @@ class SocketTransport:
         return self._rpc({"op": "jump", "actor": actor_id, "target": t_target})[
             "epoch"
         ]
+
+    def send_jump_run(
+        self,
+        actor_id: str,
+        targets,
+        *,
+        unpark: bool = False,
+        park_after: bool = False,
+    ) -> int:
+        """Batched fan-in: one frame carries a whole run of targets, plus any
+        park/unpark transition folded in (saves the separate RPC per step)."""
+        msg = {"op": "jump_run", "actor": actor_id,
+               "targets": [float(t) for t in targets]}
+        if unpark:
+            msg["unpark"] = True
+        if park_after:
+            msg["park_after"] = True
+        return self._rpc(msg)["epoch"]
+
+    @property
+    def closed(self) -> bool:
+        """Liveness probe for the batched (no re-send) client loop."""
+        return self._closed
 
     def observer_time(self) -> float:
         """One-shot observer query (also refreshes the replica)."""

@@ -22,7 +22,8 @@ parity bar.  See ``docs/scenarios.md``.
 """
 
 from .presets import PRESETS, describe, get_preset, list_presets
-from .runner import CompareResult, ParityError, ScenarioResult, compare, run
+from .runner import (CompareResult, ParityError, ScenarioResult, compare,
+                     derive_cell_seed, run, run_sweep)
 from .spec import (BACKENDS, AutoscaleSpec, PoolSpec, RoutingSpec, Scenario,
                    SLOSpec, SpecError, WorkloadSpec, scenario_with)
 from .sweep import Sweep
@@ -39,6 +40,8 @@ __all__ = [
     "Sweep",
     "BACKENDS",
     "run",
+    "run_sweep",
+    "derive_cell_seed",
     "compare",
     "ScenarioResult",
     "CompareResult",

@@ -9,8 +9,10 @@
     python -m repro.scenario sweep cluster_scaling \\
         --axis pool.replicas=1,2,4 --axis workload.qps=4.0,24.0
     python -m repro.scenario sweep my_sweep.json             # {"base","axes"}
+    python -m repro.scenario sweep cluster_scaling --jobs 4 \\
+        --axis workload.qps=2,4,8,16 --derive-seeds   # parallel workers
     python -m repro.scenario compare distributed_parity \\
-        --backends thread,process,des
+        --backends thread,process,des --jobs 2
 
 Positional specs are preset names or paths to scenario JSON files; sweep
 also accepts a sweep JSON file (``{"base": {...}, "axes": {...}}``).
@@ -26,7 +28,7 @@ import sys
 from pathlib import Path
 
 from .presets import PRESETS, describe, get_preset
-from .runner import ParityError, compare, run
+from .runner import ParityError, compare, run, run_sweep
 from .spec import Scenario, SpecError
 from .sweep import Sweep
 
@@ -96,11 +98,12 @@ def _cmd_sweep(args) -> int:
         else:
             sweep = Sweep(Scenario.from_dict(d), _parse_axes(args.axis))
     cells = sweep.expand()
-    print(f"sweep: {len(cells)} scenarios on backend={args.backend}")
-    rows = []
-    for s in cells:
-        rows.append(run(s, backend=args.backend,
-                        timeout=args.timeout).to_row())
+    print(f"sweep: {len(cells)} scenarios on backend={args.backend} "
+          f"jobs={args.jobs}")
+    results = run_sweep(cells, backend=args.backend, jobs=args.jobs,
+                        timeout=args.timeout,
+                        derive_seeds=args.derive_seeds)
+    rows = [r.to_row() for r in results]      # cell order, jobs-independent
     _print_rows(rows)
     _emit(rows, args.out)
     return 0
@@ -126,7 +129,8 @@ def _cmd_compare(args) -> int:
     scenario = _load_scenario(args.spec)
     backends = tuple(args.backends.split(","))
     try:
-        cres = compare(scenario, backends=backends, timeout=args.timeout)
+        cres = compare(scenario, backends=backends, timeout=args.timeout,
+                       jobs=args.jobs)
     except ParityError as e:
         print(f"PARITY FAILED: {e}", file=sys.stderr)
         return 1
@@ -166,6 +170,12 @@ def main(argv=None) -> int:
                    help="dotted.path=v1,v2,... (repeatable)")
     p.add_argument("--backend", default="thread",
                    choices=["thread", "process", "des"])
+    p.add_argument("--jobs", type=int, default=1,
+                   help="fan cells across N worker processes "
+                        "(results identical to --jobs 1, same order)")
+    p.add_argument("--derive-seeds", action="store_true",
+                   help="derive a deterministic per-cell seed from each "
+                        "cell name instead of inheriting the base seed")
     p.add_argument("--timeout", type=float, default=600.0)
     p.add_argument("--out", default="", help="append rows as JSONL")
     p.set_defaults(fn=_cmd_sweep)
@@ -175,6 +185,8 @@ def main(argv=None) -> int:
     p.add_argument("spec")
     p.add_argument("--backends", default="thread,des",
                    help="comma-separated subset of thread,process,des")
+    p.add_argument("--jobs", type=int, default=1,
+                   help="run the backend legs in N parallel workers")
     p.add_argument("--timeout", type=float, default=600.0)
     p.add_argument("--out", default="", help="append rows as JSONL")
     p.set_defaults(fn=_cmd_compare)

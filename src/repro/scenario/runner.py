@@ -23,16 +23,20 @@ argument as a one-call API.
 
 from __future__ import annotations
 
+import multiprocessing
 import time
+import zlib
 from collections import defaultdict
+from concurrent.futures import ProcessPoolExecutor
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from .spec import BACKENDS, Scenario, SpecError
+from .spec import BACKENDS, Scenario, SpecError, scenario_with
 
-__all__ = ["ScenarioResult", "CompareResult", "ParityError", "run", "compare"]
+__all__ = ["ScenarioResult", "CompareResult", "ParityError", "run", "compare",
+           "run_sweep", "derive_cell_seed"]
 
 
 class ParityError(AssertionError):
@@ -77,6 +81,9 @@ class ScenarioResult:
     replica_seconds: float = 0.0
     cost_dollars: float = 0.0
     tier_seconds: Optional[Dict[Optional[str], float]] = None
+    # emulation-speed accounting (events/sec, barrier pressure)
+    num_steps: int = 0
+    timekeeper: Optional[dict] = field(repr=False, default=None)
     # audit trails (parity)
     routing_decisions: List[int] = field(repr=False, default_factory=list)
     placements: Optional[Dict[tuple, int]] = field(repr=False, default=None)
@@ -287,6 +294,7 @@ def _run_emulated(scenario: Scenario, wiring: _Wiring, backend: str,
         }
         drained = [m["replica"] for m in cluster.membership_events()
                    if m["drained"] is not None]
+        cstats = cluster.stats()
         return ScenarioResult(
             scenario=scenario.name, backend=backend, seed=scenario.seed,
             num_requests=res.num_requests, num_sessions=res.num_sessions,
@@ -300,6 +308,8 @@ def _run_emulated(scenario: Scenario, wiring: _Wiring, backend: str,
             replica_seconds=res.replica_seconds,
             cost_dollars=res.cost_dollars,
             tier_seconds=res.tier_seconds,
+            num_steps=cstats.get("steps", 0),
+            timekeeper=cstats.get("timekeeper"),
             routing_decisions=list(cluster.router.decisions),
             placements=placements,
             latencies=latencies,
@@ -426,6 +436,58 @@ def run(scenario: Scenario, backend: str = "thread", *,
     return _run_emulated(scenario, wiring, backend, timeout)
 
 
+# =========================================================================
+# parallel execution (sweep cells / compare legs)
+# =========================================================================
+
+def _run_cell(payload: tuple) -> ScenarioResult:
+    """Executor worker: one (scenario-dict, backend, timeout) triple.
+
+    Module-scope so ``spawn`` workers can import it; scenarios travel in
+    their canonical JSON-dict form (the declarative API's serialization), so
+    the worker rebuilds exactly what the parent validated.
+    """
+    scenario_dict, backend, timeout = payload
+    return run(Scenario.from_dict(scenario_dict), backend, timeout=timeout)
+
+
+def derive_cell_seed(base_seed: int, name: str) -> int:
+    """Deterministic per-cell seed: the base seed folded with a stable hash
+    of the cell name (crc32, never Python's per-interpreter-salted
+    ``hash``), so a cell keeps its seed no matter the grid shape, the cell
+    order, or which worker process runs it."""
+    return (int(base_seed) + zlib.crc32(name.encode("utf-8"))) % (2**31 - 1)
+
+
+def run_sweep(sweep, backend: str = "thread", *, jobs: int = 1,
+              timeout: float = 600.0,
+              derive_seeds: bool = False) -> List[ScenarioResult]:
+    """Run every cell of a sweep (a :class:`~repro.scenario.sweep.Sweep` or
+    any iterable of scenarios); returns results in cell order.
+
+    ``jobs > 1`` fans cells across worker processes — each cell owns its
+    private Timekeeper/cluster, so cells are embarrassingly parallel and the
+    results are independent of ``jobs`` (same cells, same seeds, same
+    order).  ``derive_seeds=True`` replaces each cell's inherited seed with
+    :func:`derive_cell_seed` of its name, decorrelating the sampled
+    workloads across a grid while staying fully reproducible.
+    """
+    cells = list(sweep.expand()) if hasattr(sweep, "expand") else list(sweep)
+    if derive_seeds:
+        cells = [scenario_with(c, seed=derive_cell_seed(c.seed, c.name))
+                 for c in cells]
+    payloads = [(c.to_dict(), backend, timeout) for c in cells]
+    if jobs <= 1 or len(cells) <= 1:
+        return [_run_cell(p) for p in payloads]
+    # spawn, never fork: cells start engine/reader threads and the process
+    # backend spawns grandchildren — a forked worker would inherit parent
+    # locks mid-flight.
+    ctx = multiprocessing.get_context("spawn")
+    with ProcessPoolExecutor(max_workers=min(int(jobs), len(cells)),
+                             mp_context=ctx) as ex:
+        return list(ex.map(_run_cell, payloads))
+
+
 @dataclass
 class CompareResult:
     """Outcome of running one scenario on several backends."""
@@ -472,7 +534,8 @@ def compare(scenario: Scenario,
             backends: Sequence[str] = ("thread", "des"), *,
             timeout: float = 600.0,
             slow_step_s: Optional[float] = None,
-            check: bool = True) -> CompareResult:
+            check: bool = True,
+            jobs: int = 1) -> CompareResult:
     """Run one scenario on several backends and check parity.
 
     The bar (``check=True``, the default) is the repo's established one:
@@ -486,7 +549,8 @@ def compare(scenario: Scenario,
     Violations raise :class:`ParityError`; the returned
     :class:`CompareResult` carries the per-backend results and error
     magnitudes either way (pass ``check=False`` to inspect without
-    raising).
+    raising).  ``jobs > 1`` runs the backend legs in parallel worker
+    processes (each leg owns its world; results are jobs-independent).
     """
     backends = tuple(backends)
     if len(backends) < 2:
@@ -494,7 +558,14 @@ def compare(scenario: Scenario,
     wiring = _Wiring(scenario)
     step = slow_step_s if slow_step_s is not None else wiring.slow_step_s()
 
-    results = {b: run(scenario, b, timeout=timeout) for b in backends}
+    if jobs > 1:
+        ctx = multiprocessing.get_context("spawn")
+        payloads = [(scenario.to_dict(), b, timeout) for b in backends]
+        with ProcessPoolExecutor(max_workers=min(int(jobs), len(backends)),
+                                 mp_context=ctx) as ex:
+            results = dict(zip(backends, ex.map(_run_cell, payloads)))
+    else:
+        results = {b: run(scenario, b, timeout=timeout) for b in backends}
     base_b = backends[0]
     base = results[base_b]
 

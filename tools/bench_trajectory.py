@@ -1,0 +1,220 @@
+"""Standing perf trajectory: the ``BENCH_*.json`` contract.
+
+Every PR that touches the emulation fast path lands one ``BENCH_<pr>.json``
+at the repo root (written by ``benchmarks/fig_emu_speed.py``), so emulation
+speed is a *tracked series* rather than a one-off claim — the paper's 5–17×
+headline is only credible here if every change appends a comparable point.
+
+Schema (``schema_version`` 1) — one JSON object per file::
+
+    {
+      "bench": "emu_speed",
+      "pr": 6,                       # trajectory x-axis
+      "schema_version": 1,
+      "mode": "full" | "quick" | "smoke",
+      "host": {"python": "...", "platform": "...", "cpus": N},
+      "coordination": [              # Timekeeper microbenchmark cells
+        {"actors": 8, "coordination_mode": "batched" | "unbatched",
+         "events": int, "wall_s": float,
+         "events_per_s": float, "rounds_per_s": float,
+         "virtual_per_wall": float,  # virtual seconds per wall second
+         "rounds": int, "requests": int, "batched_requests": int,
+         "merged_rounds": int, "coalesced_parks": int}, ...
+      ],
+      "end_to_end": [                # full serving stack cells
+        {"backend": "thread" | "process", "replicas": int,
+         "events": int, "wall_s": float, "virtual_s": float,
+         "events_per_s": float, "rounds_per_s": float,
+         "virtual_per_wall": float, "timekeeper": {...}}, ...
+      ],
+      "summary": {"batched_speedup_at_8": float,
+                  "max_events_per_s": float,
+                  "max_virtual_per_wall": float}
+    }
+
+Reading the numbers: ``events_per_s`` is emulated engine steps (end-to-end)
+or coordinated jump targets (microbench) retired per wall second — raw
+evaluation throughput.  ``virtual_per_wall`` is the emulation speedup (how
+much faster than real time the timeline ran).  ``batched_speedup_at_8`` is
+batched/unbatched coordination events/sec at 8 actors — the fast-path win.
+
+Stdlib only (CI validates artifacts with no repo imports)::
+
+    python tools/bench_trajectory.py validate BENCH_6.json
+    python tools/bench_trajectory.py show            # trajectory table
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import re
+import sys
+from pathlib import Path
+from typing import List, Optional
+
+SCHEMA_VERSION = 1
+REPO_ROOT = Path(__file__).resolve().parent.parent
+
+_COORD_REQUIRED = ("actors", "coordination_mode", "events", "wall_s",
+                   "events_per_s", "rounds_per_s", "virtual_per_wall")
+_E2E_REQUIRED = ("backend", "replicas", "events", "wall_s", "virtual_s",
+                 "events_per_s", "rounds_per_s", "virtual_per_wall")
+
+
+def _is_num(v) -> bool:
+    return isinstance(v, (int, float)) and not isinstance(v, bool)
+
+
+def validate(doc: dict, *, min_replica_counts: int = 3) -> List[str]:
+    """Return every schema problem (empty list == valid artifact).
+
+    Beyond shape checks, enforces the trajectory's comparability floor: at
+    least ``min_replica_counts`` distinct replica counts on BOTH the thread
+    and process backends, each cell carrying events/sec and
+    virtual-s/wall-s.
+    """
+    problems: List[str] = []
+    if not isinstance(doc, dict):
+        return [f"artifact must be a JSON object, got {type(doc).__name__}"]
+    if doc.get("bench") != "emu_speed":
+        problems.append(f"bench: expected 'emu_speed', got {doc.get('bench')!r}")
+    if not isinstance(doc.get("pr"), int):
+        problems.append("pr: missing or not an integer")
+    if doc.get("schema_version") != SCHEMA_VERSION:
+        problems.append(f"schema_version: expected {SCHEMA_VERSION}, "
+                        f"got {doc.get('schema_version')!r}")
+
+    coord = doc.get("coordination")
+    if not isinstance(coord, list) or not coord:
+        problems.append("coordination: missing or empty")
+        coord = []
+    for i, row in enumerate(coord):
+        for k in _COORD_REQUIRED:
+            if k not in row:
+                problems.append(f"coordination[{i}].{k}: missing")
+            elif k not in ("coordination_mode",) and not _is_num(row[k]):
+                problems.append(f"coordination[{i}].{k}: not a number")
+        if row.get("coordination_mode") not in ("batched", "unbatched"):
+            problems.append(f"coordination[{i}].coordination_mode: "
+                            f"expected batched|unbatched")
+
+    e2e = doc.get("end_to_end")
+    if not isinstance(e2e, list) or not e2e:
+        problems.append("end_to_end: missing or empty")
+        e2e = []
+    per_backend: dict = {"thread": set(), "process": set()}
+    for i, row in enumerate(e2e):
+        for k in _E2E_REQUIRED:
+            if k not in row:
+                problems.append(f"end_to_end[{i}].{k}: missing")
+            elif k != "backend" and not _is_num(row[k]):
+                problems.append(f"end_to_end[{i}].{k}: not a number")
+        b = row.get("backend")
+        if b not in per_backend:
+            problems.append(f"end_to_end[{i}].backend: expected "
+                            f"thread|process, got {b!r}")
+        elif isinstance(row.get("replicas"), int):
+            per_backend[b].add(row["replicas"])
+    for b, counts in per_backend.items():
+        if len(counts) < min_replica_counts:
+            problems.append(
+                f"end_to_end: backend {b!r} covers {len(counts)} replica "
+                f"counts ({sorted(counts)}), need >= {min_replica_counts}")
+
+    summary = doc.get("summary")
+    if not isinstance(summary, dict):
+        problems.append("summary: missing")
+    else:
+        for k in ("batched_speedup_at_8", "max_events_per_s",
+                  "max_virtual_per_wall"):
+            if not _is_num(summary.get(k)):
+                problems.append(f"summary.{k}: missing or not a number")
+    return problems
+
+
+def write_bench(doc: dict, path: Path) -> Path:
+    """Validate then write one trajectory point (refuses malformed docs —
+    a broken artifact in the series is worse than a missing one)."""
+    problems = validate(doc)
+    if problems:
+        raise ValueError("refusing to write malformed bench artifact:\n  "
+                         + "\n  ".join(problems))
+    path = Path(path)
+    path.write_text(json.dumps(doc, indent=2, sort_keys=True) + "\n")
+    return path
+
+
+def load_trajectory(root: Path = REPO_ROOT) -> List[dict]:
+    """All ``BENCH_<n>.json`` points at ``root``, ascending PR order."""
+    out = []
+    for path in Path(root).glob("BENCH_*.json"):
+        m = re.fullmatch(r"BENCH_(\d+)\.json", path.name)
+        if not m:
+            continue
+        try:
+            doc = json.loads(path.read_text())
+        except json.JSONDecodeError:
+            continue
+        doc.setdefault("pr", int(m.group(1)))
+        out.append(doc)
+    return sorted(out, key=lambda d: d.get("pr", 0))
+
+
+def _cmd_validate(args) -> int:
+    path = Path(args.path)
+    if not path.exists():
+        print(f"MISSING: {path}", file=sys.stderr)
+        return 1
+    try:
+        doc = json.loads(path.read_text())
+    except json.JSONDecodeError as e:
+        print(f"MALFORMED JSON: {path}: {e}", file=sys.stderr)
+        return 1
+    problems = validate(doc, min_replica_counts=args.min_replica_counts)
+    if problems:
+        print(f"MALFORMED: {path}", file=sys.stderr)
+        for p in problems:
+            print(f"  - {p}", file=sys.stderr)
+        return 1
+    s = doc["summary"]
+    print(f"ok: {path.name} pr={doc['pr']} mode={doc.get('mode', '?')} "
+          f"batched_speedup_at_8={s['batched_speedup_at_8']}x "
+          f"max_events_per_s={s['max_events_per_s']:.0f} "
+          f"max_virtual_per_wall={s['max_virtual_per_wall']:.1f}")
+    return 0
+
+
+def _cmd_show(args) -> int:
+    points = load_trajectory(Path(args.root))
+    if not points:
+        print(f"(no BENCH_*.json under {args.root})")
+        return 0
+    header = (f"{'pr':>4}  {'mode':<6} {'batched@8':>10}  "
+              f"{'max_events/s':>13}  {'max_virt/wall':>13}")
+    print(header)
+    for doc in points:
+        s = doc.get("summary", {})
+        print(f"{doc.get('pr', '?'):>4}  {doc.get('mode', '?'):<6} "
+              f"{s.get('batched_speedup_at_8', float('nan')):>9.2f}x  "
+              f"{s.get('max_events_per_s', float('nan')):>13.0f}  "
+              f"{s.get('max_virtual_per_wall', float('nan')):>13.1f}")
+    return 0
+
+
+def main(argv: Optional[list] = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n\n")[0])
+    sub = ap.add_subparsers(dest="cmd", required=True)
+    p = sub.add_parser("validate", help="validate one BENCH_*.json artifact")
+    p.add_argument("path")
+    p.add_argument("--min-replica-counts", type=int, default=3)
+    p.set_defaults(fn=_cmd_validate)
+    p = sub.add_parser("show", help="print the whole trajectory")
+    p.add_argument("--root", default=str(REPO_ROOT))
+    p.set_defaults(fn=_cmd_show)
+    args = ap.parse_args(argv)
+    return args.fn(args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())
