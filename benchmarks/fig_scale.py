@@ -1,0 +1,204 @@
+"""Million-session streaming replay — the scale trajectory (``BENCH_7.json``).
+
+The streaming path's claim is *flat memory at unbounded session counts*:
+lazy workloads generate requests with bounded look-ahead, and
+``audit="sampled"`` metrics fold every completion into O(1)-memory sketches
+instead of retained lists, so replaying 100× more sessions costs wall time
+but not RSS.  This figure is the standing measurement of that claim.
+
+Each cell replays the ``scale_stream`` preset (diurnal rate trace, 2-turn
+chat sessions) at a fixed offered QPS — session count scales the *duration*
+of the virtual day, not the concurrency — and reports sessions/sec,
+requests/sec, virtual-s per wall-s, and the cell's own peak RSS.  Every
+cell runs in a **fresh subprocess** so ``ru_maxrss`` is a clean per-cell
+high-water mark rather than the max over the whole sweep.
+
+Cells override ``think_time_mean`` down to 20 ms: follow-up thinkers are
+live actors in the time-warp barrier, so the concurrent thinker population
+(~ qps × think time, Little's law) sets the per-round coordination cost —
+short thinks keep the barrier small and the replay rate high without
+changing the session *shape* (turn counts and token lengths are untouched).
+
+The regression gate is the RSS ratio between the largest and smallest
+sampled-audit cell per backend (must stay within ``RSS_FLAT_WITHIN``); a
+single ``audit="full"`` contrast cell at the smallest size shows what
+retention costs.  Writes ``BENCH_7.json`` at the repo root (schema:
+``tools/bench_trajectory.py``; CI validates it and uploads it as an
+artifact).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import platform
+import subprocess
+import sys
+import time
+from pathlib import Path
+
+from benchmarks.common import emit, print_table
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+PR_NUMBER = 7
+
+THINK_TIME_S = 0.02            # keeps the thinker-actor barrier small
+QPS = {"thread": 1200.0, "process": 600.0}
+RSS_FLAT_WITHIN = 2.0          # largest/smallest sampled-cell RSS per backend
+
+# session counts per mode; the full thread series ends at one million
+SESSIONS = {
+    "full":  {"thread": [10_000, 100_000, 1_000_000],
+              "process": [10_000, 32_000, 100_000]},
+    "quick": {"thread": [2_000, 10_000, 50_000],
+              "process": [2_000, 10_000]},
+    "smoke": {"thread": [1_000, 2_000, 4_000],
+              "process": [500, 1_000]},
+}
+
+
+def run_cell(backend: str, sessions: int, *, audit: str = "sampled",
+             qps: float = 0.0, timeout: float = 3600.0) -> dict:
+    """One replay in *this* process (the ``--cell`` child entry point)."""
+    import resource
+
+    from repro.scenario import get_preset, run, scenario_with
+
+    qps = qps or QPS[backend]
+    scenario = scenario_with(get_preset("scale_stream"),
+                             workload__num_sessions=sessions,
+                             workload__qps=qps,
+                             workload__think_time_mean=THINK_TIME_S)
+    t0 = time.monotonic()
+    res = run(scenario, backend=backend, audit=audit, timeout=timeout)
+    wall = time.monotonic() - t0
+    peak_rss_mb = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1024.0
+    return {
+        "backend": backend,
+        "sessions": sessions,
+        "requests": res.num_requests,
+        "audit": audit,
+        "qps": qps,
+        "wall_s": round(wall, 3),
+        "virtual_s": round(res.makespan_virtual, 3),
+        "sessions_per_s": round(sessions / wall, 1),
+        "requests_per_s": round(res.num_requests / wall, 1),
+        "virtual_per_wall": round(res.makespan_virtual / wall, 3),
+        "peak_rss_mb": round(peak_rss_mb, 1),
+    }
+
+
+def spawn_cell(backend: str, sessions: int, *, audit: str = "sampled",
+               timeout: float = 3600.0) -> dict:
+    """Run one cell in a fresh interpreter and parse its JSON result line.
+
+    A fresh process per cell is the measurement, not a convenience: peak RSS
+    is a monotone high-water mark, so sharing a process would let the
+    biggest cell's footprint mask every later cell."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        p for p in (str(REPO_ROOT / "src"), str(REPO_ROOT),
+                    env.get("PYTHONPATH", "")) if p)
+    spec = json.dumps({"backend": backend, "sessions": sessions,
+                       "audit": audit, "timeout": timeout})
+    proc = subprocess.run(
+        [sys.executable, "-m", "benchmarks.fig_scale", "--cell", spec],
+        cwd=str(REPO_ROOT), env=env, capture_output=True, text=True,
+        timeout=timeout + 120.0)
+    if proc.returncode != 0:
+        raise RuntimeError(
+            f"scale cell {backend}/{sessions} failed "
+            f"(rc={proc.returncode}):\n{proc.stdout[-2000:]}"
+            f"\n{proc.stderr[-2000:]}")
+    for line in reversed(proc.stdout.strip().splitlines()):
+        if line.startswith("{"):
+            return json.loads(line)
+    raise RuntimeError(f"scale cell {backend}/{sessions} printed no "
+                       f"JSON result:\n{proc.stdout[-2000:]}")
+
+
+def _rss_ratio(cells: list, backend: str) -> float:
+    series = sorted((c for c in cells
+                     if c["backend"] == backend and c["audit"] == "sampled"),
+                    key=lambda c: c["sessions"])
+    if len(series) < 2:
+        return 1.0
+    return round(series[-1]["peak_rss_mb"] / series[0]["peak_rss_mb"], 3)
+
+
+def _bench_doc(cells: list, mode: str) -> dict:
+    sampled = [c for c in cells if c["audit"] == "sampled"]
+    return {
+        "bench": "scale",
+        "pr": PR_NUMBER,
+        "schema_version": 1,
+        "mode": mode,
+        "host": {"python": platform.python_version(),
+                 "platform": platform.platform(),
+                 "cpus": os.cpu_count()},
+        "cells": cells,
+        "summary": {
+            "max_sessions": max(c["sessions"] for c in sampled),
+            "max_sessions_per_s": max(c["sessions_per_s"] for c in sampled),
+            "max_requests_per_s": max(c["requests_per_s"] for c in sampled),
+            "max_virtual_per_wall": max(c["virtual_per_wall"]
+                                        for c in sampled),
+            "rss_ratio_thread": _rss_ratio(cells, "thread"),
+            "rss_ratio_process": _rss_ratio(cells, "process"),
+            "rss_flat_within": RSS_FLAT_WITHIN,
+        },
+    }
+
+
+def main(mode: str = "full", timeout: float = 3600.0) -> list:
+    sizes = SESSIONS[mode]
+    cells = []
+    # full-audit contrast cell first: what per-request retention costs
+    contrast_n = sizes["thread"][0]
+    print(f"[fig_scale] contrast cell: thread/{contrast_n} audit=full")
+    cells.append(spawn_cell("thread", contrast_n, audit="full",
+                            timeout=timeout))
+    for backend in ("thread", "process"):
+        for n in sizes[backend]:
+            print(f"[fig_scale] cell: {backend}/{n} audit=sampled")
+            cells.append(spawn_cell(backend, n, timeout=timeout))
+
+    print_table(cells)
+    emit("fig_scale", cells)
+
+    doc = _bench_doc(cells, mode)
+    sys.path.insert(0, str(REPO_ROOT))       # tools/ is not a package
+    from tools.bench_trajectory import write_bench
+    out = write_bench(doc, REPO_ROOT / f"BENCH_{PR_NUMBER}.json")
+    print(f"[fig_scale] wrote {out}")
+
+    s = doc["summary"]
+    for backend in ("thread", "process"):
+        ratio = s[f"rss_ratio_{backend}"]
+        assert ratio <= RSS_FLAT_WITHIN, (
+            f"streaming memory regression: {backend} peak RSS grew {ratio}x "
+            f"across the session sweep (gate: <= {RSS_FLAT_WITHIN}x) — the "
+            f"sampled-audit path is retaining per-request state somewhere")
+    print(f"[fig_scale] rss flat: thread={s['rss_ratio_thread']}x "
+          f"process={s['rss_ratio_process']}x (gate <= {RSS_FLAT_WITHIN}x), "
+          f"max {s['max_sessions']} sessions at "
+          f"{s['max_sessions_per_s']:.0f} sessions/s")
+    return cells
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__.split("\n\n")[0])
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--timeout", type=float, default=3600.0)
+    ap.add_argument("--cell", default="",
+                    help=argparse.SUPPRESS)   # internal: one-cell child mode
+    args = ap.parse_args()
+    if args.cell:
+        spec = json.loads(args.cell)
+        print(json.dumps(run_cell(spec.pop("backend"), spec.pop("sessions"),
+                                  **spec)))
+    else:
+        m = "smoke" if args.smoke else ("quick" if args.quick else "full")
+        main(mode=m, timeout=args.timeout)

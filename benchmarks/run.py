@@ -119,6 +119,17 @@ def _emu_speed(mode):
             f"max_virtual_per_wall={s['max_virtual_per_wall']}")
 
 
+def _scale(mode):
+    from benchmarks import fig_scale as m
+    m.main(mode=mode)
+    import json
+    doc = json.loads((m.REPO_ROOT / f"BENCH_{m.PR_NUMBER}.json").read_text())
+    s = doc["summary"]
+    return (f"max_sessions={s['max_sessions']},"
+            f"max_sessions_per_s={s['max_sessions_per_s']:.0f},"
+            f"rss_ratio_thread={s['rss_ratio_thread']}x")
+
+
 def _table1(mode):
     from benchmarks import table1_features as m
     rows = m.main()
@@ -151,6 +162,7 @@ SUITES = [
     ("fig_hetero", _hetero),
     ("fig_distributed", _distributed),
     ("fig_emu_speed", _emu_speed),
+    ("fig_scale", _scale),
     ("table1_features", _table1),
     ("roofline", _roofline),
 ]

@@ -151,6 +151,13 @@ class ClusterBase:
         self._finish_cond = threading.Condition()
         self._poll_cursor = 0
         self._started = False
+        # Counter-backed completion accounting: wait_until_complete/stats
+        # read this, so audit modes can drop the retained lists without
+        # breaking the wait/progress surface.
+        self._finished_count = 0
+        self._audit = "full"
+        self.retain_finished = True
+        self.retain_placements = True
 
         # ---- elastic membership (autoscaling) ----
         # ``active`` = replicas the router may place fresh requests on.
@@ -218,8 +225,9 @@ class ClusterBase:
         serialised (router state is not thread-safe)."""
         with self._submit_lock:
             idx = self.router.route(req, self.replicas, active=self.active)
-            self.placements.append(
-                (req.session_id, req.turn_index, req.request_id, idx))
+            if self.retain_placements:
+                self.placements.append(
+                    (req.session_id, req.turn_index, req.request_id, idx))
             self.replicas[idx].submit(req)
         return idx
 
@@ -237,12 +245,41 @@ class ClusterBase:
         if fn in self.completion_listeners:
             self.completion_listeners.remove(fn)
 
+    # ------------------------------------------------------------- audit --
+    @property
+    def finished_count(self) -> int:
+        """Completions seen so far — valid in every audit mode (the
+        ``finished`` list itself is empty under ``sampled``/``off``)."""
+        with self._finish_cond:
+            return self._finished_count
+
+    def set_audit(self, audit: str) -> None:
+        """Select what the cluster retains per request.
+
+        ``"full"`` keeps everything (historical behaviour); ``"sampled"``
+        and ``"off"`` drop the per-request ``finished``/``placements``
+        lists, the router's decision log, and each replica's step log so
+        memory stays flat at million-session scale.  Counter-backed
+        accounting (``finished_count``, ``stats()``) keeps working.
+        """
+        retain = audit == "full"
+        self._audit = audit
+        self.retain_finished = retain
+        self.retain_placements = retain
+        if hasattr(self.router, "record_decisions"):
+            self.router.record_decisions = retain
+        for r in self.replicas:
+            if hasattr(r, "set_audit"):
+                r.set_audit(audit)
+
     def _complete(self, finished: List[Request]) -> None:
         """Completion fan-out; the finishing replica is still barred from
         its next barrier round while this runs (step thread on the thread
         backend, pre-ack on the process backend)."""
         with self._finish_cond:
-            self.finished.extend(finished)
+            self._finished_count += len(finished)
+            if self.retain_finished:
+                self.finished.extend(finished)
             self._finish_cond.notify_all()
         # Unconditional (serialised on _membership_lock inside): an unlocked
         # emptiness pre-check here could race drain_replica's in-flight
@@ -301,6 +338,8 @@ class ClusterBase:
             self.active.append(idx)
             self._membership[idx] = {"added": self.clock.now(),
                                      "drain_started": None, "drained": None}
+            if self._audit != "full" and hasattr(engine, "set_audit"):
+                engine.set_audit(self._audit)
             if self._started:
                 engine.start()
             return idx
@@ -431,7 +470,7 @@ class ClusterBase:
         import time as _time
         deadline = _time.monotonic() + timeout
         with self._finish_cond:
-            while len(self.finished) < expected:
+            while self._finished_count < expected:
                 remaining = deadline - _time.monotonic()
                 if remaining <= 0:
                     return False
@@ -463,7 +502,7 @@ class ClusterBase:
             "membership": self.membership_events(),
             "tiers": list(self.replica_tiers),
             "policy": getattr(self.router, "policy", "?"),
-            "finished": len(self.finished),
+            "finished": self._finished_count,
             "steps": sum(r["steps"] for r in per_replica),
             "device_time_s": sum(r["device_time_s"] for r in per_replica),
             "cpu_overhead_s": sum(r["cpu_overhead_s"] for r in per_replica),

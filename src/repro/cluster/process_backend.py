@@ -294,6 +294,9 @@ class _ReplicaServer:
             }
         if op == "stats":
             return {"op": "stats_ack", "stats": self.engine.stats()}
+        if op == "configure":
+            self.engine.set_audit(msg["audit"])
+            return {"op": "ack"}
         if op == "step_log":
             return {"op": "step_log_ack", "log": list(self.engine.step_log)}
         if op == "retire":
@@ -450,6 +453,13 @@ class ProcessReplicaHandle:
             with self._in_flight_lock:
                 self._in_flight.discard(req.request_id)
             raise
+
+    def set_audit(self, audit: str) -> None:
+        """Forward the audit mode to the child's engine (drops its step log
+        and finished-list retention under ``sampled``/``off``)."""
+        if not self.activated or self.stopped:
+            return
+        self._rpc({"op": "configure", "audit": audit})
 
     # --------------------------------------------------------- ReplicaView --
     def num_outstanding(self) -> int:

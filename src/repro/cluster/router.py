@@ -118,6 +118,7 @@ class Router:
         assert num_replicas >= 1
         self.num_replicas = num_replicas
         self.decisions: List[int] = []       # audit log (tests/benchmarks)
+        self.record_decisions = True         # False: skip the log (scale runs)
         self.weights: List[float] = [1.0] * num_replicas
         self.costs: List[float] = [0.0] * num_replicas
 
@@ -134,7 +135,8 @@ class Router:
         assert act, "routing needs at least one active replica"
         idx = self._pick(req, views, act)
         assert idx in act, f"policy picked inactive replica {idx}"
-        self.decisions.append(idx)
+        if self.record_decisions:
+            self.decisions.append(idx)
         return idx
 
     def _pick(self, req, views: Sequence[ReplicaView],

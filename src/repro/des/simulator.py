@@ -209,6 +209,10 @@ class DiscreteEventSimulator:
         self.replicas: List[_ReplicaState] = []
         self.active: List[int] = []
         self._finish_log: List[Tuple[float, float]] = []   # (finish, ttft)
+        # sink mode prunes the TTFT log to this sliding window of virtual
+        # seconds; keep it comfortably wider than any autoscaler policy's
+        # recent_ttfts() window
+        self.finish_log_window_s: float = 300.0
 
     # ----------------------------------------------------------- plumbing --
     @staticmethod
@@ -249,22 +253,55 @@ class DiscreteEventSimulator:
         return total
 
     # ---------------------------------------------------------------- run --
-    def run(self, requests) -> List[SimRequest]:
+    def run(self, requests, *, sink=None) -> List[SimRequest]:
         """``requests``: an iterable of request-like objects (repro Request
         or SimRequest: prompt_tokens/prompt_len, max_new_tokens,
-        arrival_time) **or** a SessionWorkload (closed loop)."""
+        arrival_time) **or** a SessionWorkload (closed loop).
+
+        Lists/tuples and eager SessionWorkloads are materialized up front
+        (historical behaviour, byte-identical event order).  Any other
+        iterable — a generator, :class:`~repro.workload.StreamingWorkload`,
+        or a :class:`~repro.workload.StreamingSessionWorkload` (consumed via
+        ``initial_stream``) — is pulled lazily with one-arrival look-ahead,
+        so the event heap never holds the whole workload.  Lazy sources must
+        yield non-decreasing ``arrival_time``.
+
+        ``sink``: optional callable receiving each completed
+        :class:`SimRequest` as it finishes.  When set, completed requests
+        are **not** retained (``run`` returns an empty list) and the
+        autoscaler's TTFT finish-log is pruned to a sliding window of
+        ``finish_log_window_s`` virtual seconds — the flat-memory scale
+        path.
+        """
         from repro.cluster.router import RoundRobinRouter
 
         router = self.router or RoundRobinRouter(self.num_replicas)
 
         session_workload = None
-        if hasattr(requests, "initial_requests"):      # SessionWorkload
+        stream = None
+        if hasattr(requests, "initial_stream"):   # streaming closed loop
+            session_workload = requests
+            stream = iter(requests.initial_stream())
+            source = ()
+            expected = requests.total_requests
+        elif hasattr(requests, "initial_requests"):    # eager SessionWorkload
             session_workload = requests
             source = session_workload.initial_requests()
             expected = session_workload.total_requests
-        else:
+        elif isinstance(requests, (list, tuple)):
             source = list(requests)
             expected = len(source)
+        else:                                     # lazy open-loop stream
+            stream = iter(requests)
+            source = ()
+            expected = getattr(requests, "total_requests", None)
+            if expected is None:
+                expected = getattr(requests, "expected", None)
+        if self.autoscaler_policy is not None and expected is None:
+            raise ValueError(
+                "elastic DES needs a declared request count to know when to "
+                "stop ticking; pass a workload exposing .expected / "
+                ".total_requests instead of a bare generator")
 
         req_counter = itertools.count()
         sims: List[SimRequest] = [self._to_sim(r, next(req_counter))
@@ -311,6 +348,19 @@ class DiscreteEventSimulator:
         if self.autoscaler_policy is not None:
             heapq.heappush(events, (asc_cfg.interval_s, next(counter),
                                     self.TICK, None))
+
+        def pull_source() -> Optional[SimRequest]:
+            """Next source arrival from a lazy stream (None when drained)."""
+            try:
+                r = next(stream)
+            except StopIteration:
+                return None
+            s = self._to_sim(r, next(req_counter))
+            if sink is None:
+                sims.append(s)
+            return s
+
+        pending = pull_source() if stream is not None else None
 
         now = 0.0
         completed = 0
@@ -393,8 +443,22 @@ class DiscreteEventSimulator:
                     if rep.idle():
                         rep.drained_at = now
 
-        while events:
-            now, _, kind, payload = heapq.heappop(events)
+        while events or pending is not None:
+            # One-ahead merge of the lazy source with the event heap.  Ties
+            # go to the source arrival — the exact order the eager path
+            # produces, where every source arrival's heap counter precedes
+            # any event scheduled during the run.
+            if pending is not None and (
+                    not events or pending.arrival_time <= events[0][0]):
+                now, kind, payload = pending.arrival_time, self.ARRIVAL, pending
+                pending = pull_source()
+                if pending is not None and pending.arrival_time < now:
+                    raise ValueError(
+                        "lazy request streams must yield non-decreasing "
+                        f"arrival times (got {pending.arrival_time} after "
+                        f"{now})")
+            else:
+                now, _, kind, payload = heapq.heappop(events)
             if kind == self.ARRIVAL:
                 idx = router.route(payload, self.replicas, active=self.active)
                 payload.replica = idx
@@ -419,17 +483,35 @@ class DiscreteEventSimulator:
                         s.finish_time = now
                         rep.running.remove(s)
                         completed += 1
-                        if s.ttft() is not None:
+                        # the finish log only feeds autoscaler policies
+                        # (AutoscalerView.recent_ttfts); in sink mode it is
+                        # pruned to a sliding window — and skipped outright
+                        # when nothing will ever read it — to keep memory
+                        # flat over million-request streams
+                        log_ttfts = (sink is None
+                                     or self.autoscaler_policy is not None)
+                        if s.ttft() is not None and log_ttfts:
                             self._finish_log.append((now, s.ttft()))
+                            if sink is not None:
+                                horizon = now - self.finish_log_window_s
+                                log = self._finish_log
+                                cut = 0
+                                while cut < len(log) and log[cut][0] < horizon:
+                                    cut += 1
+                                if cut:
+                                    del log[:cut]
                         if session_workload is not None:
                             fu = session_workload.follow_up(s)
                             if fu is not None:
                                 fu_sim = self._to_sim(fu, next(req_counter))
-                                sims.append(fu_sim)
+                                if sink is None:
+                                    sims.append(fu_sim)
                                 heapq.heappush(
                                     events, (fu_sim.arrival_time,
                                              next(counter), self.ARRIVAL,
                                              fu_sim))
+                        if sink is not None:
+                            sink(s)
                 rep.in_flight_batch = []
                 schedule_step(rep)
                 if (rep.index not in self.active and rep.idle()

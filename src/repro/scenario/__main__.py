@@ -76,8 +76,20 @@ def _cmd_show(args) -> int:
 
 
 def _cmd_run(args) -> int:
+    from .spec import scenario_with
     scenario = _load_scenario(args.spec)
-    res = run(scenario, backend=args.backend, timeout=args.timeout)
+    overrides = {}
+    if args.sessions is not None:
+        key = ("workload.num_sessions"
+               if scenario.workload.kind == "sessions"
+               else "workload.num_requests")
+        overrides[key] = args.sessions
+    if args.streaming:
+        overrides["workload.streaming"] = True
+    if overrides:
+        scenario = scenario_with(scenario, **overrides)
+    res = run(scenario, backend=args.backend, timeout=args.timeout,
+              audit=args.audit)
     row = res.to_row()
     _print_rows([row])
     _emit([row], args.out)
@@ -160,6 +172,16 @@ def main(argv=None) -> int:
     p.add_argument("spec")
     p.add_argument("--backend", default="thread",
                    choices=["thread", "process", "des"])
+    p.add_argument("--sessions", type=int, default=None,
+                   help="override workload size (num_sessions for session "
+                        "workloads, num_requests for open loop)")
+    p.add_argument("--audit", default="full",
+                   choices=["full", "sampled", "off"],
+                   help="per-request retention: full (parity/figures), "
+                        "sampled (O(1)-memory sketches + SLO reservoir), "
+                        "off (sketches only)")
+    p.add_argument("--streaming", action="store_true",
+                   help="force the lazy streaming workload form")
     p.add_argument("--timeout", type=float, default=600.0)
     p.add_argument("--out", default="", help="append rows as JSONL")
     p.set_defaults(fn=_cmd_run)

@@ -20,7 +20,7 @@ Traceback (most recent call last):
   ...
 KeyError: "unknown preset 'nope'; choose from ['autoscale_burst', \
 'cluster_scaling', 'distributed_parity', 'elastic_tier_parity', \
-'hetero_mix']"
+'hetero_mix', 'scale_stream']"
 """
 
 from __future__ import annotations
@@ -148,10 +148,42 @@ def elastic_tier_parity() -> Scenario:
         seed=17)
 
 
+def scale_stream() -> Scenario:
+    """Diurnal-trace streaming sessions — the million-session scale base
+    cell (``fig_scale`` sweeps ``num_sessions`` at fixed qps, so session
+    count scales the virtual *duration*, not the concurrency; run with
+    ``audit="sampled"`` for flat memory)."""
+    return Scenario(
+        name="scale_stream",
+        workload=WorkloadSpec(
+            kind="sessions", streaming=True, qps=50.0,
+            arrival="trace",
+            # one 240-virtual-second "day": quiet night, morning ramp,
+            # midday peak, evening tail (relative rates; qps rescales the
+            # mean, preserving the shape)
+            arrival_kwargs={"trace": [
+                [30.0, 0.3], [30.0, 0.6], [30.0, 1.0], [30.0, 1.5],
+                [30.0, 1.7], [30.0, 1.3], [30.0, 0.8], [30.0, 0.4]]},
+            num_sessions=10_000, turns_mean=2.0, max_turns=3,
+            think_time_mean=0.5,
+            prompt_len_mean=48.0, prompt_len_sigma=0.4,
+            followup_len_mean=24.0,
+            output_len_mean=12.0, output_len_sigma=0.4,
+            max_output_len=24),
+        pool=PoolSpec(
+            model="qwen2_5_3b", reduced=True, replicas=2,
+            max_num_seqs=64, max_batched_tokens=2048, block_size=16,
+            num_blocks=16384, enable_prefix_caching=False,
+            step_time_s=2e-3),
+        routing=RoutingSpec(policy="round_robin"),
+        slo=SLOSpec(ttft_s=1.0),
+        seed=29)
+
+
 PRESETS: Dict[str, Callable[[], Scenario]] = {
     fn.__name__: fn
     for fn in (cluster_scaling, autoscale_burst, hetero_mix,
-               distributed_parity, elastic_tier_parity)
+               distributed_parity, elastic_tier_parity, scale_stream)
 }
 
 

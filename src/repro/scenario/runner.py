@@ -56,6 +56,15 @@ class ScenarioResult:
     ``latencies`` maps a backend-independent request key — submit index for
     open loop, ``(session_id, turn_index)`` for sessions — to
     ``(ttft, tpot, e2e)`` seconds (``tpot`` is None for 1-token outputs).
+
+    ``audit`` records what this result retains per request: ``"full"``
+    keeps every sample and audit trail (the parity/figure default),
+    ``"sampled"`` keeps O(1)-memory sketches plus a seeded reservoir of
+    SLO samples (``num_slo_samples`` is the true observation count the
+    reservoir subsamples), ``"off"`` additionally drops the reservoir.
+    Under ``sampled``/``off`` the audit trails (``latencies``,
+    ``placements``, ``routing_decisions``, ``slo_samples``) are empty or
+    reservoir-sized — parity checks need ``audit="full"``.
     """
 
     scenario: str
@@ -75,8 +84,11 @@ class ScenarioResult:
     throughput_tokens_per_s: float = 0.0
     # SLO / throughput
     slo_samples: List[tuple] = field(repr=False, default_factory=list)
+    num_slo_samples: int = 0
     slo_ttft_s: Optional[float] = None
     slo_tpot_s: Optional[float] = None
+    # retention mode (see class docstring)
+    audit: str = "full"
     # cost accounting
     replica_seconds: float = 0.0
     cost_dollars: float = 0.0
@@ -123,11 +135,13 @@ class ScenarioResult:
         return good / len(self.slo_samples)
 
     def goodput_rps(self, **kw) -> float:
-        """SLO-attaining completions per virtual second."""
+        """SLO-attaining completions per virtual second.  Under
+        ``audit="sampled"`` attainment comes from the reservoir but is
+        scaled by the true observation count, keeping goodput unbiased."""
         if not self.makespan_virtual:
             return 0.0
-        return (self.slo_attainment(**kw) * len(self.slo_samples)
-                / self.makespan_virtual)
+        n = self.num_slo_samples or len(self.slo_samples)
+        return self.slo_attainment(**kw) * n / self.makespan_virtual
 
     def to_row(self) -> dict:
         """Flat dict for tables / JSONL artifacts (benchmark figures)."""
@@ -247,7 +261,7 @@ def _session_stats(groups: Dict[int, List[tuple]]):
 # =========================================================================
 
 def _run_emulated(scenario: Scenario, wiring: _Wiring, backend: str,
-                  timeout: float) -> ScenarioResult:
+                  timeout: float, audit: str = "full") -> ScenarioResult:
     from repro.cluster import Autoscaler, build_cluster
     from repro.core.clock import ManualWallSource
     from repro.serving.benchmark import BenchmarkRunner
@@ -276,22 +290,29 @@ def _run_emulated(scenario: Scenario, wiring: _Wiring, backend: str,
     try:
         res = BenchmarkRunner(cluster, workload,
                               transport=cluster.transport,
-                              autoscaler=autoscaler).run(timeout=timeout)
-        reqs = list(cluster.finished)
-        if closed:
-            keyed = {(r.session_id, r.turn_index): r for r in reqs}
-            placements = {(s, t): idx
-                          for s, t, _, idx in cluster.placements}
-        else:
-            ordered = sorted(reqs, key=lambda r: r.arrival_time)
-            keyed = dict(enumerate(ordered))
+                              autoscaler=autoscaler,
+                              audit=audit,
+                              metrics_seed=scenario.seed
+                              ).run(timeout=timeout)
+        if audit == "full":
+            reqs = list(cluster.finished)
+            if closed:
+                keyed = {(r.session_id, r.turn_index): r for r in reqs}
+                placements = {(s, t): idx
+                              for s, t, _, idx in cluster.placements}
+            else:
+                ordered = sorted(reqs, key=lambda r: r.arrival_time)
+                keyed = dict(enumerate(ordered))
+                placements = None
+            latencies = {
+                k: _latency_sample(r.ttft(),
+                                   r.tpot() if r.num_generated > 1 else None,
+                                   r.e2e_latency())
+                for k, r in keyed.items()
+            }
+        else:                  # sampled/off: no per-request audit trails
             placements = None
-        latencies = {
-            k: _latency_sample(r.ttft(),
-                               r.tpot() if r.num_generated > 1 else None,
-                               r.e2e_latency())
-            for k, r in keyed.items()
-        }
+            latencies = {}
         drained = [m["replica"] for m in cluster.membership_events()
                    if m["drained"] is not None]
         cstats = cluster.stats()
@@ -304,7 +325,9 @@ def _run_emulated(scenario: Scenario, wiring: _Wiring, backend: str,
             wall_seconds=res.wall_seconds,
             throughput_tokens_per_s=res.throughput_tokens_per_s,
             slo_samples=list(res.slo_samples),
+            num_slo_samples=res.num_slo_samples,
             slo_ttft_s=scenario.slo.ttft_s, slo_tpot_s=scenario.slo.tpot_s,
+            audit=audit,
             replica_seconds=res.replica_seconds,
             cost_dollars=res.cost_dollars,
             tier_seconds=res.tier_seconds,
@@ -322,9 +345,10 @@ def _run_emulated(scenario: Scenario, wiring: _Wiring, backend: str,
 
 
 def _run_des(scenario: Scenario, wiring: _Wiring,
-             timeout: float) -> ScenarioResult:
+             timeout: float, audit: str = "full") -> ScenarioResult:
     from repro.cluster.router import make_router
     from repro.des.simulator import DESConfig, DiscreteEventSimulator
+    from repro.metrics import StreamingMetrics
     from repro.serving.benchmark import LatencyStats
 
     pool, autoscale = scenario.pool, scenario.autoscale
@@ -344,6 +368,46 @@ def _run_des(scenario: Scenario, wiring: _Wiring,
     workload = scenario.workload.materialize(scenario.seed)
     closed = scenario.workload.kind == "sessions"
     initial_replicas = pool.replicas
+
+    if audit != "full":
+        # flat-memory path: completions flow straight into O(1)-memory
+        # accumulators via the sink; nothing per-request is retained
+        router.record_decisions = False
+        m = StreamingMetrics(
+            seed=scenario.seed,
+            session_turns=getattr(workload, "session_turns", None))
+        wall0 = time.monotonic()
+        sim.run(workload, sink=m.observe)
+        wall = time.monotonic() - wall0
+        m.finalize()
+        makespan = m.max_finish or 0.0
+        tier_s: Dict[Optional[str], float] = {}
+        for rep in sim.replicas:
+            end = rep.drained_at if rep.drained_at is not None else makespan
+            on = max(0.0, min(end, makespan) - rep.added_at)
+            tier_s[rep.tier] = tier_s.get(rep.tier, 0.0) + on
+        return ScenarioResult(
+            scenario=scenario.name, backend="des", seed=scenario.seed,
+            num_requests=m.count, num_sessions=m.num_sessions,
+            ttft=m.ttft.stats(), tpot=m.tpot.stats(), e2e=m.e2e.stats(),
+            session_ttft=(m.session_ttft.stats()
+                          if m.session_ttft.count else None),
+            makespan_virtual=makespan, wall_seconds=wall,
+            throughput_tokens_per_s=(m.total_new_tokens / makespan
+                                     if makespan else 0.0),
+            slo_samples=[] if audit == "off" else list(m.slo.items),
+            num_slo_samples=m.num_slo_samples,
+            slo_ttft_s=scenario.slo.ttft_s, slo_tpot_s=scenario.slo.tpot_s,
+            audit=audit,
+            replica_seconds=sim.replica_seconds(makespan),
+            cost_dollars=sim.replica_cost(makespan),
+            tier_seconds=tier_s,
+            replica_tiers=[r.tier for r in sim.replicas],
+            scaleups=[(r.added_at, r.tier)
+                      for r in sim.replicas[initial_replicas:]],
+            drained=[r.index for r in sim.replicas
+                     if r.drained_at is not None],
+        )
 
     wall0 = time.monotonic()
     sims = sim.run(workload)
@@ -413,27 +477,36 @@ def _run_des(scenario: Scenario, wiring: _Wiring,
 # =========================================================================
 
 def run(scenario: Scenario, backend: str = "thread", *,
-        timeout: float = 600.0) -> ScenarioResult:
+        timeout: float = 600.0, audit: str = "full") -> ScenarioResult:
     """Execute one scenario on one backend; all wiring included.
 
     ``backend`` is ``"thread"`` (in-process emulator on a deterministic
     manual wall), ``"process"`` (replicas as OS processes over the socket
     transport), or ``"des"`` (the discrete-event baseline).  The same
     scenario object/JSON runs unmodified on all three.
+
+    ``audit`` selects per-request retention (see
+    :class:`ScenarioResult`): ``"full"`` (default, required for parity
+    checks), ``"sampled"`` (sketches + SLO reservoir — the flat-memory
+    scale mode), or ``"off"`` (sketches only).
     """
+    from repro.serving.benchmark import AUDIT_MODES
     if backend not in BACKENDS:
         raise SpecError(f"backend: invalid value {backend!r} "
                         f"(choose from {sorted(BACKENDS)})")
+    if audit not in AUDIT_MODES:
+        raise SpecError(f"audit: invalid value {audit!r} "
+                        f"(choose from {sorted(AUDIT_MODES)})")
     wiring = _Wiring(scenario)
     if backend == "des":
         if scenario.routing.policy == "pd_pool":
             raise SpecError("routing.policy: pd_pool is not supported on "
                             "the des backend (Table 1 semantic gap)")
-        return _run_des(scenario, wiring, timeout)
+        return _run_des(scenario, wiring, timeout, audit)
     if backend == "process" and scenario.routing.policy == "pd_pool":
         raise SpecError("routing.policy: pd_pool is not supported on the "
                         "process backend")
-    return _run_emulated(scenario, wiring, backend, timeout)
+    return _run_emulated(scenario, wiring, backend, timeout, audit)
 
 
 # =========================================================================
@@ -447,8 +520,10 @@ def _run_cell(payload: tuple) -> ScenarioResult:
     their canonical JSON-dict form (the declarative API's serialization), so
     the worker rebuilds exactly what the parent validated.
     """
-    scenario_dict, backend, timeout = payload
-    return run(Scenario.from_dict(scenario_dict), backend, timeout=timeout)
+    scenario_dict, backend, timeout = payload[:3]
+    audit = payload[3] if len(payload) > 3 else "full"
+    return run(Scenario.from_dict(scenario_dict), backend, timeout=timeout,
+               audit=audit)
 
 
 def derive_cell_seed(base_seed: int, name: str) -> int:
@@ -460,7 +535,7 @@ def derive_cell_seed(base_seed: int, name: str) -> int:
 
 
 def run_sweep(sweep, backend: str = "thread", *, jobs: int = 1,
-              timeout: float = 600.0,
+              timeout: float = 600.0, audit: str = "full",
               derive_seeds: bool = False) -> List[ScenarioResult]:
     """Run every cell of a sweep (a :class:`~repro.scenario.sweep.Sweep` or
     any iterable of scenarios); returns results in cell order.
@@ -476,7 +551,7 @@ def run_sweep(sweep, backend: str = "thread", *, jobs: int = 1,
     if derive_seeds:
         cells = [scenario_with(c, seed=derive_cell_seed(c.seed, c.name))
                  for c in cells]
-    payloads = [(c.to_dict(), backend, timeout) for c in cells]
+    payloads = [(c.to_dict(), backend, timeout, audit) for c in cells]
     if jobs <= 1 or len(cells) <= 1:
         return [_run_cell(p) for p in payloads]
     # spawn, never fork: cells start engine/reader threads and the process

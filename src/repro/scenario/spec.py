@@ -221,6 +221,13 @@ class WorkloadSpec(_SpecBase):
     follow-ups released on completion + think time).  ``arrival`` names any
     registered arrival process — ``"uniform"`` gives the deterministically
     spaced arrivals backend-parity scenarios need.
+
+    ``streaming=True`` swaps the materialized forms for their lazy
+    equivalents (:class:`repro.workload.StreamingWorkload` /
+    :class:`repro.workload.StreamingSessionWorkload`): requests are
+    generated with bounded look-ahead instead of being pre-built, so one
+    spec can replay millions of sessions in flat memory (pair with
+    ``audit="sampled"`` on :func:`repro.scenario.run`).
     """
 
     kind: str = "open"                    # open | sessions
@@ -243,6 +250,9 @@ class WorkloadSpec(_SpecBase):
     max_turns: int = 5
     think_time_mean: float = 1.0
     followup_len_mean: float = 40.0
+    # lazy generation (flat-memory scale path); default keeps the
+    # materialized forms every existing scenario/parity test uses
+    streaming: bool = False
 
     def validate(self, *, path: str = "workload") -> None:
         from repro.workload import ARRIVAL_PROCESSES, make_arrival
@@ -272,11 +282,14 @@ class WorkloadSpec(_SpecBase):
     def materialize(self, seed: int):
         """Build the runnable workload object (a fresh one per call): a
         ``List[Request]`` for ``kind="open"``, a :class:`SessionWorkload`
-        for ``kind="sessions"``."""
+        for ``kind="sessions"`` — or their lazy streaming equivalents when
+        ``streaming=True``."""
         from repro.workload import (SessionConfig, SessionWorkload,
-                                    WorkloadConfig, synthesize)
+                                    StreamingSessionWorkload,
+                                    StreamingWorkload, WorkloadConfig,
+                                    synthesize)
         if self.kind == "sessions":
-            return SessionWorkload(SessionConfig(
+            cfg = SessionConfig(
                 num_sessions=self.num_sessions, qps=self.qps,
                 arrival=self.arrival, arrival_kwargs=self.arrival_kwargs,
                 turns_mean=self.turns_mean, max_turns=self.max_turns,
@@ -288,8 +301,11 @@ class WorkloadSpec(_SpecBase):
                 output_len_sigma=self.output_len_sigma,
                 max_output_len=self.max_output_len,
                 shared_prefix_len=self.shared_prefix_len,
-                seed=seed))
-        return synthesize(WorkloadConfig(
+                seed=seed)
+            if self.streaming:
+                return StreamingSessionWorkload(cfg)
+            return SessionWorkload(cfg)
+        cfg = WorkloadConfig(
             num_requests=self.num_requests, qps=self.qps,
             arrival=self.arrival, arrival_kwargs=self.arrival_kwargs,
             prompt_len_mean=self.prompt_len_mean,
@@ -299,7 +315,10 @@ class WorkloadSpec(_SpecBase):
             max_prompt_len=self.max_prompt_len,
             max_output_len=self.max_output_len,
             shared_prefix_len=self.shared_prefix_len,
-            seed=seed))
+            seed=seed)
+        if self.streaming:
+            return StreamingWorkload(cfg)
+        return synthesize(cfg)
 
 
 @dataclass(frozen=True)

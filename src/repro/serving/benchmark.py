@@ -32,41 +32,30 @@ even while the open-loop dispatcher is mid-jump toward a far-future arrival.
 
 from __future__ import annotations
 
+import heapq
 import itertools
 import threading
 import time
 from collections import defaultdict
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence
+from operator import attrgetter
+from typing import Dict, List, Optional
 
 import numpy as np
 
 from repro.core.client import TimeJumpClient
 from repro.core.clock import VirtualClock
+# LatencyStats and compare_distributions moved to repro.metrics (the
+# O(1)-memory scale path); re-exported here for backwards compatibility.
+from repro.metrics import (LatencyStats, StreamingMetrics,
+                           compare_distributions)
 
 from .request import Request
 
+__all__ = ["LatencyStats", "BenchmarkResult", "BenchmarkRunner",
+           "run_pipeline", "compare_distributions"]
 
-@dataclass
-class LatencyStats:
-    mean: float
-    p50: float
-    p90: float
-    p99: float
-    values: List[float] = field(repr=False, default_factory=list)
-
-    @staticmethod
-    def of(values: Sequence[float]) -> "LatencyStats":
-        if not values:
-            return LatencyStats(0.0, 0.0, 0.0, 0.0, [])
-        arr = np.asarray(values, dtype=np.float64)
-        return LatencyStats(
-            float(arr.mean()),
-            float(np.percentile(arr, 50)),
-            float(np.percentile(arr, 90)),
-            float(np.percentile(arr, 99)),
-            list(map(float, arr)),
-        )
+AUDIT_MODES = ("full", "sampled", "off")
 
 
 @dataclass
@@ -83,8 +72,13 @@ class BenchmarkResult:
     num_replicas: int = 1
     per_replica: List[dict] = field(repr=False, default_factory=list)
     routing_policy: Optional[str] = None
-    # (ttft, tpot) per completed request; tpot is None for 1-token outputs
+    # (ttft, tpot) per completed request; tpot is None for 1-token outputs.
+    # audit="full": every request.  audit="sampled": a seeded uniform
+    # reservoir — num_slo_samples keeps the exact observation count so
+    # goodput stays unbiased.  audit="off": empty.
     slo_samples: List[tuple] = field(repr=False, default_factory=list)
+    num_slo_samples: int = 0
+    audit: str = "full"
     # cost proxy: total replica-on virtual seconds across the run window
     # (elastic membership: drained replicas stop accruing, added ones start
     # at their join time; fixed clusters: num_replicas * makespan)
@@ -126,11 +120,16 @@ class BenchmarkResult:
 
     def goodput_rps(self, slo_ttft_s: float = float("inf"),
                     slo_tpot_s: float = float("inf")) -> float:
-        """SLO-attaining completions per virtual second (DistServe-style)."""
+        """SLO-attaining completions per virtual second (DistServe-style).
+
+        Under ``audit="sampled"`` the attainment fraction comes from the
+        reservoir but is scaled by the *exact* completion count, so goodput
+        carries no subsampling bias in its magnitude."""
         if not self.makespan_virtual:
             return 0.0
+        n = self.num_slo_samples or len(self.slo_samples)
         return (self.slo_attainment(slo_ttft_s, slo_tpot_s)
-                * len(self.slo_samples) / self.makespan_virtual)
+                * n / self.makespan_virtual)
 
     def summary(self) -> dict:
         out = {
@@ -165,16 +164,57 @@ def _is_started(target) -> bool:
     return bool(getattr(target, "is_running", False))
 
 
+def _declared_count(workload) -> Optional[int]:
+    """A workload's self-declared request count, if it declares one."""
+    for attr in ("total_requests", "expected"):
+        n = getattr(workload, attr, None)
+        if n is not None:
+            return int(n)
+    return None
+
+
+def _num_finished(target) -> int:
+    """Completion count without touching retained lists (audit != full
+    keeps a counter, not the requests)."""
+    n = getattr(target, "finished_count", None)
+    if n is not None:
+        return int(n)
+    return len(target.finished)
+
+
 class BenchmarkRunner:
     """Drive a request stream (open- or closed-loop) through an engine or a
     cluster.
 
-    ``workload`` is either a list of :class:`Request` (open loop) or a
-    :class:`~repro.workload.session.SessionWorkload` (closed loop: follow-up
-    turns are released on completion + think time).  ``target`` needs only
-    the uniform replica surface: ``submit``, ``start``/``stop``,
-    ``wait_until_complete``, ``finished``, ``step_log``, and a ``clock``
-    attribute — plus ``add_completion_listener`` for closed-loop workloads.
+    ``workload`` is one of:
+
+    - a list of :class:`Request` (open loop, eagerly materialized — sorted
+      here, exactly the historical behavior);
+    - a :class:`~repro.workload.session.SessionWorkload` /
+      :class:`~repro.workload.streaming.StreamingSessionWorkload` (closed
+      loop: follow-up turns are released on completion + think time);
+    - a lazy arrival-sorted request stream — e.g.
+      :class:`~repro.workload.streaming.StreamingWorkload` — or a list of
+      several such streams, which the dispatcher heap-merges on
+      ``arrival_time`` without materializing any of them.
+
+    Streaming workloads must declare how many requests the run waits for:
+    either the workload exposes ``expected`` / ``total_requests`` or the
+    caller passes ``expected=N`` — there is no ``len(requests)`` fallback
+    to fall back on.
+
+    ``audit`` bounds result memory: ``"full"`` (default) retains every
+    finished request on the target and builds metrics from the raw lists;
+    ``"sampled"`` keeps O(1) sketches + a seeded SLO reservoir and tells
+    the target to drop per-request retention (``set_audit``); ``"off"``
+    additionally drops the reservoir.  Percentiles under sampled/off are
+    bit-identical to full below the sketch's exact cap (~2k samples) and
+    carry ±0.5% rank error beyond.
+
+    ``target`` needs only the uniform replica surface: ``submit``,
+    ``start``/``stop``, ``wait_until_complete``, ``finished``,
+    ``step_log``, and a ``clock`` attribute — plus
+    ``add_completion_listener`` for closed-loop or audited runs.
 
     ``autoscaler`` (optional, cluster targets): started/stopped with the
     run; its membership changes are reflected in ``replica_seconds``.
@@ -188,30 +228,87 @@ class BenchmarkRunner:
         transport=None,              # Timekeeper transport (emulate mode)
         autoscaler=None,             # repro.cluster.autoscaler.Autoscaler
         name: str = "bench",
+        expected: Optional[int] = None,   # streaming: declared request count
+        audit: str = "full",
+        metrics_seed: int = 0,       # reservoir seed (audit="sampled")
+        slo_reservoir: int = 8192,
     ):
+        if audit not in AUDIT_MODES:
+            raise ValueError(f"audit must be one of {AUDIT_MODES}, "
+                             f"got {audit!r}")
         self.target = target
         self.engine = target         # backwards-compatible alias
-        self.session_workload = (workload
-                                 if hasattr(workload, "initial_requests")
-                                 else None)
-        reqs = (self.session_workload.initial_requests()
-                if self.session_workload is not None else list(workload))
-        self.requests = sorted(reqs, key=lambda r: r.arrival_time)
-        self.expected = (self.session_workload.total_requests
-                         if self.session_workload is not None
-                         else len(self.requests))
+        self.audit = audit
+        self.session_workload = None
+        self.requests: Optional[List[Request]] = None
+        declared = expected
+
+        if hasattr(workload, "initial_stream"):
+            # streaming closed loop: turn-0 requests arrive lazily
+            self.session_workload = workload
+            streams = [workload.initial_stream()]
+            if declared is None:
+                declared = workload.total_requests
+        elif hasattr(workload, "initial_requests"):
+            # eager closed loop (historical behavior, list retained)
+            self.session_workload = workload
+            self.requests = sorted(workload.initial_requests(),
+                                   key=lambda r: r.arrival_time)
+            streams = [iter(self.requests)]
+            if declared is None:
+                declared = workload.total_requests
+        elif (isinstance(workload, (list, tuple)) and workload
+              and not hasattr(workload[0], "arrival_time")):
+            # several arrival-sorted streams: heap-merge below
+            streams = [iter(s) for s in workload]
+            if declared is None:
+                counts = [_declared_count(s) for s in workload]
+                if all(c is not None for c in counts):
+                    declared = sum(counts)
+        elif isinstance(workload, (list, tuple)):
+            # eager open loop (historical behavior, list retained + sorted)
+            self.requests = sorted(workload, key=lambda r: r.arrival_time)
+            streams = [iter(self.requests)]
+            if declared is None:
+                declared = len(self.requests)
+        else:
+            # one lazy arrival-sorted stream
+            streams = [iter(workload)]
+            if declared is None:
+                declared = _declared_count(workload)
+
+        if declared is None:
+            raise ValueError(
+                "streaming workload with no declared request count: the "
+                "runner cannot fall back to len(requests) without "
+                "materializing the stream.  Pass expected=N to "
+                "BenchmarkRunner, or use a workload that exposes "
+                "`.expected` / `.total_requests` (e.g. "
+                "repro.workload.StreamingWorkload)")
+        self.expected = int(declared)
+        # the dispatcher pulls from one heap-merged stream; each source must
+        # be individually sorted by arrival_time (all synthesizers are)
+        self._stream = (streams[0] if len(streams) == 1
+                        else heapq.merge(*streams,
+                                         key=attrgetter("arrival_time")))
         self.transport = transport
         self.autoscaler = autoscaler
         self.name = name
         self.clock: VirtualClock = target.clock
         self._think_ids = itertools.count()
         self._thinkers: List[threading.Thread] = []
+        self._metrics: Optional[StreamingMetrics] = None
+        if self.audit != "full":
+            self._metrics = StreamingMetrics(
+                slo_reservoir=slo_reservoir, seed=metrics_seed,
+                session_turns=getattr(self.session_workload,
+                                      "session_turns", None))
 
     # ---------------------------------------------------------- dispatch --
     def _dispatch_loop(self, client: Optional[TimeJumpClient]) -> None:
         t0 = self.clock.now()
         try:
-            for req in self.requests:
+            for req in self._stream:
                 target_t = t0 + req.arrival_time
                 if client is not None:
                     client.jump_to(target_t)      # Actor: jump, don't sleep
@@ -245,7 +342,20 @@ class BenchmarkRunner:
                 target=self._think_and_submit, args=(fu, client),
                 name=f"{self.name}-think", daemon=True)
             t.start()
+            # drop joined thinkers so the list tracks *live* actors, not
+            # every follow-up ever released (a million-turn run would
+            # otherwise accumulate a million dead Thread objects)
+            if len(self._thinkers) > 64:
+                self._thinkers = [th for th in self._thinkers
+                                  if th.is_alive()]
             self._thinkers.append(t)
+
+    # ------------------------------------------------------ audited runs --
+    def _observe_completions(self, finished: List[Request]) -> None:
+        """Completion listener (audit != "full"): fold each finished request
+        into the streaming accumulators; nothing is retained."""
+        for req in finished:
+            self._metrics.observe(req)
 
     def _think_and_submit(self, fu: Request,
                           client: Optional[TimeJumpClient]) -> None:
@@ -270,6 +380,14 @@ class BenchmarkRunner:
         if self.session_workload is not None:
             self.target.add_completion_listener(self._on_complete)
             listener_armed = True
+        metrics_armed = False
+        if self._metrics is not None:
+            # bounded-audit mode: metrics accumulate per completion and the
+            # target stops retaining per-request state
+            if hasattr(self.target, "set_audit"):
+                self.target.set_audit(self.audit)
+            self.target.add_completion_listener(self._observe_completions)
+            metrics_armed = True
         # The dispatcher's actor is registered HERE, before the autoscaler's
         # tick actor can start jumping: were the autoscaler briefly the only
         # registered actor, its ticks would free-run virtual time far ahead
@@ -299,14 +417,19 @@ class BenchmarkRunner:
         dispatcher.join(timeout=10)
         for t in self._thinkers:
             t.join(timeout=10)
+        if metrics_armed:
+            self.target.remove_completion_listener(
+                self._observe_completions)
         wall = time.monotonic() - wall0
         v1 = self.clock.now()
         if started_here:
             self.target.stop()
         if not ok:
             raise TimeoutError(
-                f"benchmark timed out: {len(self.target.finished)}/"
+                f"benchmark timed out: {_num_finished(self.target)}/"
                 f"{self.expected} finished")
+        if self._metrics is not None:
+            return self._collect_streaming(wall, v0, v1)
         return self._collect(wall, v0, v1)
 
     def _collect(self, wall: float, v0: float, v1: float) -> BenchmarkResult:
@@ -378,6 +501,53 @@ class BenchmarkRunner:
             session_tpot=session_tpot,
         )
 
+    def _collect_streaming(self, wall: float, v0: float,
+                           v1: float) -> BenchmarkResult:
+        """Build the result from the streaming accumulators: no walk over
+        ``target.finished`` (which audit != "full" does not retain)."""
+        m = self._metrics
+        m.finalize()
+        v_end = m.max_finish if m.max_finish is not None else v1
+        makespan = v_end - v0
+        stats = self.target.stats() if hasattr(self.target, "stats") else {}
+        cpu = float(stats.get("cpu_overhead_s", 0.0))
+        dev = float(stats.get("device_time_s", 0.0))
+        engines = getattr(self.target, "engines", None)
+        if hasattr(self.target, "replica_seconds"):
+            replica_s = self.target.replica_seconds(v0, v_end)
+        else:
+            replica_s = makespan
+        cost = tier_s = None
+        if hasattr(self.target, "replica_cost"):
+            cost = self.target.replica_cost(v0, v_end)
+        if hasattr(self.target, "tier_seconds"):
+            tier_s = self.target.tier_seconds(v0, v_end)
+        has_sessions = self.session_workload is not None
+        return BenchmarkResult(
+            ttft=m.ttft.stats(), tpot=m.tpot.stats(), e2e=m.e2e.stats(),
+            makespan_virtual=makespan,
+            wall_seconds=wall,
+            num_requests=m.count,
+            throughput_tokens_per_s=(m.total_new_tokens / makespan
+                                     if makespan else 0.0),
+            engine_cpu_overhead=cpu,
+            engine_device_time=dev,
+            num_replicas=len(engines) if engines else 1,
+            per_replica=([e.stats() for e in engines] if engines else []),
+            routing_policy=getattr(
+                getattr(self.target, "router", None), "policy", None),
+            slo_samples=([] if self.audit == "off"
+                         else list(m.slo.items)),
+            num_slo_samples=m.num_slo_samples,
+            audit=self.audit,
+            replica_seconds=replica_s,
+            cost_dollars=cost or 0.0,
+            tier_seconds=tier_s,
+            num_sessions=m.num_sessions if has_sessions else 0,
+            session_ttft=m.session_ttft.stats() if has_sessions else None,
+            session_tpot=m.session_tpot.stats() if has_sessions else None,
+        )
+
 
 def run_pipeline(workload_cfg, target, *, transport=None,
                  timeout: float = 600.0) -> BenchmarkResult:
@@ -392,16 +562,3 @@ def run_pipeline(workload_cfg, target, *, transport=None,
         workload = synthesize(workload_cfg)
     return BenchmarkRunner(target, workload,
                            transport=transport).run(timeout=timeout)
-
-
-def compare_distributions(a: LatencyStats, b: LatencyStats) -> Dict[str, float]:
-    """Percentile-wise relative error between two latency distributions
-    (the paper's Fig. 6/8 accuracy metric: <5% across the CDF)."""
-    out = {}
-    for q in (50, 75, 90, 95, 99):
-        va = float(np.percentile(a.values, q)) if a.values else 0.0
-        vb = float(np.percentile(b.values, q)) if b.values else 0.0
-        denom = max(abs(va), 1e-9)
-        out[f"p{q}_rel_err"] = abs(va - vb) / denom
-    out["median_rel_err"] = out["p50_rel_err"]
-    return out

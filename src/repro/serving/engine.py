@@ -92,6 +92,17 @@ class LLMEngine:
         self.step_log: List[StepRecord] = []
         self._finish_cond = threading.Condition()
         self._poll_cursor = 0
+        # Aggregate counters maintained unconditionally: stats() and
+        # wait_until_complete() read these, so they stay O(1) and correct
+        # even when audit mode drops the per-request/per-step lists.
+        self._finished_count = 0
+        self._num_steps = 0
+        self._device_time_s = 0.0
+        self._cpu_overhead_s = 0.0
+        # audit != "full": stop retaining finished requests / step records
+        # (the scale path: memory must not grow with the request count)
+        self.retain_finished = True
+        self.retain_step_log = True
         # Live set for lock-free load probes (router placement hints):
         # request_id -> Request, maintained by submit/step under _live_lock.
         self._live: Dict[int, Request] = {}
@@ -115,6 +126,22 @@ class LLMEngine:
     def remove_completion_listener(self, fn) -> None:
         if fn in self.completion_listeners:
             self.completion_listeners.remove(fn)
+
+    def set_audit(self, audit: str) -> None:
+        """Bound per-request memory: audit != "full" stops retaining the
+        ``finished`` list, the ``step_log``, and the runner's per-step
+        estimate breakdown (aggregate counters keep working; ``poll()``
+        and ``snapshot()`` need full retention)."""
+        retain = audit == "full"
+        self.retain_finished = retain
+        self.retain_step_log = retain
+        if hasattr(self.runner, "retain_estimates"):
+            self.runner.retain_estimates = retain
+
+    @property
+    def finished_count(self) -> int:
+        """Completions so far — counter-backed, valid in every audit mode."""
+        return self._finished_count
 
     # ------------------------------------------------------------- intake --
     def submit(self, req: Request) -> None:
@@ -198,12 +225,12 @@ class LLMEngine:
         pc = self.prefix_cache.stats
         return {
             "name": self.name,
-            "finished": len(self.finished),
+            "finished": self._finished_count,
             "outstanding_reqs": self.num_outstanding(),
             "outstanding_tokens": self.outstanding_tokens(),
-            "steps": len(self.step_log),
-            "device_time_s": sum(s.device_time for s in self.step_log),
-            "cpu_overhead_s": sum(s.cpu_overhead_wall for s in self.step_log),
+            "steps": self._num_steps,
+            "device_time_s": self._device_time_s,
+            "cpu_overhead_s": self._cpu_overhead_s,
             "num_preemptions": self.scheduler.num_preemptions,
             "prefix_hit_rate": pc.hit_rate,
         }
@@ -310,26 +337,32 @@ class LLMEngine:
             for fn in list(self.completion_listeners):
                 fn(finished)
             with self._finish_cond:
-                self.finished.extend(finished)
+                self._finished_count += len(finished)
+                if self.retain_finished:
+                    self.finished.extend(finished)
                 self._finish_cond.notify_all()
         cpu_post = time.monotonic() - cpu_t1
 
-        self.step_log.append(StepRecord(
-            t_start=t_start,
-            t_end=now,
-            num_prefill_tokens=n_prefill_tokens,
-            num_decode=n_decode,
-            batch_size=len(out.batch),
-            cpu_overhead_wall=cpu_sched + cpu_post,
-            device_time=now - t_start,
-        ))
+        self._num_steps += 1
+        self._device_time_s += now - t_start
+        self._cpu_overhead_s += cpu_sched + cpu_post
+        if self.retain_step_log:
+            self.step_log.append(StepRecord(
+                t_start=t_start,
+                t_end=now,
+                num_prefill_tokens=n_prefill_tokens,
+                num_decode=n_decode,
+                batch_size=len(out.batch),
+                cpu_overhead_wall=cpu_sched + cpu_post,
+                device_time=now - t_start,
+            ))
         return finished
 
     # ----------------------------------------------------------- waiting --
     def wait_until_complete(self, expected: int, timeout: float = 600.0) -> bool:
         deadline = time.monotonic() + timeout
         with self._finish_cond:
-            while len(self.finished) < expected:
+            while self._finished_count < expected:
                 remaining = deadline - time.monotonic()
                 if remaining <= 0:
                     return False
@@ -383,6 +416,10 @@ class LLMEngine:
         eng._inbox = list(state["inbox"])
         eng.finished = list(state["finished"])
         eng.step_log = list(state["step_log"])
+        eng._finished_count = len(eng.finished)
+        eng._num_steps = len(eng.step_log)
+        eng._device_time_s = sum(s.device_time for s in eng.step_log)
+        eng._cpu_overhead_s = sum(s.cpu_overhead_wall for s in eng.step_log)
         eng._poll_cursor = len(eng.finished)
         with eng._live_lock:
             for req in (state["running"] + state["waiting"] + state["inbox"]):

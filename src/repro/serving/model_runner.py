@@ -84,6 +84,10 @@ class TimeWarpModelRunner:
         self.client = client
         self.workers = workers
         self.devices = devices
+        # per-step breakdown for the accuracy/split figures; audit modes
+        # below "full" switch retention off so memory stays flat over
+        # million-request streams (engine.set_audit flips the flag)
+        self.retain_estimates = True
         self.step_estimates: List[dict] = []
         if devices is not None:
             n = len(devices.devices)
@@ -99,7 +103,8 @@ class TimeWarpModelRunner:
     # ------------------------------------------------------------ running --
     def execute(self, out: SchedulerOutput) -> Dict[int, int]:
         est = self.predictor.predict_step(batch_spec_of(out))
-        self.step_estimates.append(est.as_dict())
+        if self.retain_estimates:
+            self.step_estimates.append(est.as_dict())
         if self.workers is not None:
             self.workers.execute_step(est.total)
         elif self.client is not None:
@@ -140,11 +145,13 @@ class SleepModelRunner:
     def __init__(self, predictor: RuntimePredictor, clock: VirtualClock):
         self.predictor = predictor
         self.clock = clock
+        self.retain_estimates = True
         self.step_estimates: List[dict] = []
 
     def execute(self, out: SchedulerOutput) -> Dict[int, int]:
         est = self.predictor.predict_step(batch_spec_of(out))
-        self.step_estimates.append(est.as_dict())
+        if self.retain_estimates:
+            self.step_estimates.append(est.as_dict())
         # Precise (spin-tailed) sleep: plain time.sleep overshoots by OS timer
         # slop, which would systematically bias this baseline slow.
         self.clock.wall.sleep_precise(est.total)

@@ -7,12 +7,16 @@
 - :mod:`repro.workload.session` — closed-loop multi-turn sessions whose
   follow-ups carry the prior turn's tokens (drives the emulator *and* the
   DES through one object).
+- :mod:`repro.workload.streaming` — lazy million-request forms of the
+  above: bounded look-ahead streams for the flat-memory scale path.
 """
 
 from .arrival import (ARRIVAL_PROCESSES, ArrivalProcess, GammaArrivals,
                       OnOffArrivals, PoissonArrivals, RateTraceArrivals,
                       UniformArrivals, make_arrival)
 from .session import Session, SessionConfig, SessionWorkload, TurnSpec
+from .streaming import (StreamingSessionWorkload, StreamingWorkload,
+                        replay_trace_stream)
 from .synth import WorkloadConfig, replay_trace, synthesize
 
 __all__ = [
@@ -31,4 +35,7 @@ __all__ = [
     "SessionWorkload",
     "Session",
     "TurnSpec",
+    "StreamingWorkload",
+    "StreamingSessionWorkload",
+    "replay_trace_stream",
 ]

@@ -19,7 +19,18 @@ tests/test_workload.py):
   *shifting*; trace replay keeps absolute phase instead (see
   :class:`RateTraceArrivals`);
 * ``mean_rate()`` equals the configured long-run rate regardless of the
-  burstiness knobs, so a burstiness sweep holds offered load constant.
+  burstiness knobs, so a burstiness sweep holds offered load constant;
+* ``iter_times(rng)`` is the streaming form: an endless generator whose
+  first ``n`` values are byte-identical to ``sample(n, rng)`` for every
+  ``n`` — random draws happen in bounded chunks, so a million-arrival
+  stream never materializes an array of a million gaps.
+
+>>> import numpy as np
+>>> from itertools import islice
+>>> p = PoissonArrivals(qps=2.0)
+>>> lazy = list(islice(p.iter_times(np.random.default_rng(0)), 5))
+>>> lazy == p.sample(5, np.random.default_rng(0)).tolist()
+True
 
 >>> import numpy as np
 >>> times = PoissonArrivals(qps=2.0).sample(5, np.random.default_rng(0))
@@ -64,6 +75,15 @@ class ArrivalProcess:
     def sample(self, n: int, rng: np.random.Generator) -> np.ndarray:
         raise NotImplementedError
 
+    def iter_times(self, rng: np.random.Generator, chunk: int = 256):
+        """Endless generator of arrival times, byte-identical to ``sample``.
+
+        Draws from ``rng`` in ``chunk``-sized batches (numpy Generators fill
+        arrays sequentially, so chunked draws reproduce one big draw), so
+        look-ahead memory is O(chunk) no matter how far the stream runs.
+        """
+        raise NotImplementedError
+
     def mean_rate(self) -> float:
         """Long-run average arrivals/second (used by sizing heuristics)."""
         raise NotImplementedError
@@ -92,6 +112,12 @@ class UniformArrivals(ArrivalProcess):
     def sample(self, n: int, rng: np.random.Generator) -> np.ndarray:
         return np.arange(n, dtype=np.float64) / self.qps
 
+    def iter_times(self, rng: np.random.Generator, chunk: int = 256):
+        i = 0
+        while True:
+            yield float(np.float64(i) / self.qps)
+            i += 1
+
     def mean_rate(self) -> float:
         return self.qps
 
@@ -108,6 +134,16 @@ class PoissonArrivals(ArrivalProcess):
     def sample(self, n: int, rng: np.random.Generator) -> np.ndarray:
         gaps = rng.exponential(1.0 / self.qps, size=n)
         return _shift_to_zero(np.cumsum(gaps))
+
+    def iter_times(self, rng: np.random.Generator, chunk: int = 256):
+        t = 0.0
+        first = None
+        while True:
+            for g in rng.exponential(1.0 / self.qps, size=chunk):
+                t += g
+                if first is None:
+                    first = t
+                yield t - first
 
     def mean_rate(self) -> float:
         return self.qps
@@ -132,6 +168,18 @@ class GammaArrivals(ArrivalProcess):
         scale = self.cv2 / self.qps          # shape*scale = 1/qps
         gaps = rng.gamma(shape, scale, size=n)
         return _shift_to_zero(np.cumsum(gaps))
+
+    def iter_times(self, rng: np.random.Generator, chunk: int = 256):
+        shape = 1.0 / self.cv2
+        scale = self.cv2 / self.qps
+        t = 0.0
+        first = None
+        while True:
+            for g in rng.gamma(shape, scale, size=chunk):
+                t += g
+                if first is None:
+                    first = t
+                yield t - first
 
     def mean_rate(self) -> float:
         return self.qps
@@ -164,6 +212,20 @@ class OnOffArrivals(ArrivalProcess):
             periods = int(t // on_len)
             times[i] = t + periods * off_len
         return _shift_to_zero(times)
+
+    def iter_times(self, rng: np.random.Generator, chunk: int = 256):
+        on_len = self.period_s * self.duty
+        off_len = self.period_s - on_len
+        t = 0.0
+        first = None
+        while True:
+            for g in rng.exponential(self.duty / self.qps, size=chunk):
+                t += g
+                periods = int(t // on_len)
+                cur = t + periods * off_len
+                if first is None:
+                    first = cur
+                yield cur - first
 
     def mean_rate(self) -> float:
         return self.qps
@@ -215,6 +277,24 @@ class RateTraceArrivals(ArrivalProcess):
                 t0 += d
                 seg += 1
         return times                     # phase-aligned: no shift
+
+    def iter_times(self, rng: np.random.Generator, chunk: int = 256):
+        seg, t0, mass = 0, 0.0, 0.0
+        target = 0.0
+        nseg = len(self.durations)
+        while True:
+            for inc in rng.exponential(1.0, size=chunk):
+                target += inc
+                while True:
+                    d = self.durations[seg % nseg]
+                    r = self.rates[seg % nseg]
+                    seg_mass = d * r
+                    if mass + seg_mass >= target and r > 0:
+                        yield float(t0 + (target - mass) / r)
+                        break
+                    mass += seg_mass
+                    t0 += d
+                    seg += 1
 
     def mean_rate(self) -> float:
         return float((self.durations * self.rates).sum()

@@ -181,6 +181,11 @@ class SessionWorkload:
     def total_requests(self) -> int:
         return sum(s.num_turns for s in self.sessions)
 
+    def session_turns(self, session_id: int) -> int:
+        """Turn count of one session (streaming metrics use this to drop
+        per-session state the moment its last turn completes)."""
+        return self.sessions[self._index_of(session_id)].num_turns
+
     # ------------------------------------------------------------- release --
     def _request(self, sess: Session, turn: int, arrival: float) -> Request:
         spec = sess.turns[turn]

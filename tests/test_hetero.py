@@ -195,7 +195,7 @@ def test_mixed_tier_routing_byte_identical_across_runs():
                 for r in cluster.finished)
             return (timeline, list(cluster.router.decisions),
                     res.cost_dollars, res.tier_seconds,
-                    res.ttft.values, res.tpot.values)
+                    res.ttft, res.tpot)
         finally:
             cluster.shutdown()
 

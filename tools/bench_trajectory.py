@@ -1,11 +1,13 @@
 """Standing perf trajectory: the ``BENCH_*.json`` contract.
 
 Every PR that touches the emulation fast path lands one ``BENCH_<pr>.json``
-at the repo root (written by ``benchmarks/fig_emu_speed.py``), so emulation
+at the repo root (written by a ``benchmarks/fig_*`` script), so emulation
 speed is a *tracked series* rather than a one-off claim — the paper's 5–17×
 headline is only credible here if every change appends a comparable point.
+Each artifact declares its kind via ``bench``; two kinds exist:
 
-Schema (``schema_version`` 1) — one JSON object per file::
+``bench: "emu_speed"`` (``benchmarks/fig_emu_speed.py``) — raw coordination
+and end-to-end emulation throughput.  Schema (``schema_version`` 1)::
 
     {
       "bench": "emu_speed",
@@ -38,6 +40,31 @@ evaluation throughput.  ``virtual_per_wall`` is the emulation speedup (how
 much faster than real time the timeline ran).  ``batched_speedup_at_8`` is
 batched/unbatched coordination events/sec at 8 actors — the fast-path win.
 
+``bench: "scale"`` (``benchmarks/fig_scale.py``) — the streaming path's
+flat-memory session sweep::
+
+    {
+      "bench": "scale",
+      "pr": 7, "schema_version": 1, "mode": ..., "host": {...},
+      "cells": [
+        {"backend": "thread" | "process", "sessions": int, "requests": int,
+         "audit": "full" | "sampled" | "off", "qps": float,
+         "wall_s": float, "virtual_s": float,
+         "sessions_per_s": float, "requests_per_s": float,
+         "virtual_per_wall": float, "peak_rss_mb": float}, ...
+      ],
+      "summary": {"max_sessions": int, "max_sessions_per_s": float,
+                  "max_requests_per_s": float, "max_virtual_per_wall": float,
+                  "rss_ratio_thread": float, "rss_ratio_process": float,
+                  "rss_flat_within": float}
+    }
+
+``rss_ratio_<backend>`` is largest/smallest sampled-cell peak RSS across
+the session sweep; validation *enforces* ``rss_ratio <= rss_flat_within``
+— a committed artifact showing memory growth is a regression, not a data
+point.  The comparability floor is >= 3 distinct sampled session counts on
+the thread backend and >= 2 on process.
+
 Stdlib only (CI validates artifacts with no repo imports)::
 
     python tools/bench_trajectory.py validate BENCH_6.json
@@ -60,6 +87,9 @@ _COORD_REQUIRED = ("actors", "coordination_mode", "events", "wall_s",
                    "events_per_s", "rounds_per_s", "virtual_per_wall")
 _E2E_REQUIRED = ("backend", "replicas", "events", "wall_s", "virtual_s",
                  "events_per_s", "rounds_per_s", "virtual_per_wall")
+_SCALE_REQUIRED = ("backend", "sessions", "requests", "audit", "qps",
+                   "wall_s", "virtual_s", "sessions_per_s", "requests_per_s",
+                   "virtual_per_wall", "peak_rss_mb")
 
 
 def _is_num(v) -> bool:
@@ -69,22 +99,33 @@ def _is_num(v) -> bool:
 def validate(doc: dict, *, min_replica_counts: int = 3) -> List[str]:
     """Return every schema problem (empty list == valid artifact).
 
-    Beyond shape checks, enforces the trajectory's comparability floor: at
-    least ``min_replica_counts`` distinct replica counts on BOTH the thread
-    and process backends, each cell carrying events/sec and
-    virtual-s/wall-s.
+    Dispatches on ``doc["bench"]``; each kind enforces its own
+    comparability floor beyond shape checks (see the module docstring).
     """
-    problems: List[str] = []
     if not isinstance(doc, dict):
         return [f"artifact must be a JSON object, got {type(doc).__name__}"]
-    if doc.get("bench") != "emu_speed":
-        problems.append(f"bench: expected 'emu_speed', got {doc.get('bench')!r}")
+    problems: List[str] = []
     if not isinstance(doc.get("pr"), int):
         problems.append("pr: missing or not an integer")
     if doc.get("schema_version") != SCHEMA_VERSION:
         problems.append(f"schema_version: expected {SCHEMA_VERSION}, "
                         f"got {doc.get('schema_version')!r}")
+    kind = doc.get("bench")
+    if kind == "emu_speed":
+        problems += _validate_emu_speed(doc, min_replica_counts)
+    elif kind == "scale":
+        problems += _validate_scale(doc)
+    else:
+        problems.append(f"bench: expected 'emu_speed' or 'scale', "
+                        f"got {kind!r}")
+    return problems
 
+
+def _validate_emu_speed(doc: dict, min_replica_counts: int) -> List[str]:
+    """Floor: >= ``min_replica_counts`` distinct replica counts on BOTH the
+    thread and process backends, each cell carrying events/sec and
+    virtual-s/wall-s."""
+    problems: List[str] = []
     coord = doc.get("coordination")
     if not isinstance(coord, list) or not coord:
         problems.append("coordination: missing or empty")
@@ -133,6 +174,58 @@ def validate(doc: dict, *, min_replica_counts: int = 3) -> List[str]:
     return problems
 
 
+def _validate_scale(doc: dict) -> List[str]:
+    """Floor: >= 3 distinct sampled session counts on thread, >= 2 on
+    process, and the flat-memory gate ``rss_ratio <= rss_flat_within``."""
+    problems: List[str] = []
+    cells = doc.get("cells")
+    if not isinstance(cells, list) or not cells:
+        problems.append("cells: missing or empty")
+        cells = []
+    sampled: dict = {"thread": set(), "process": set()}
+    for i, row in enumerate(cells):
+        for k in _SCALE_REQUIRED:
+            if k not in row:
+                problems.append(f"cells[{i}].{k}: missing")
+            elif k not in ("backend", "audit") and not _is_num(row[k]):
+                problems.append(f"cells[{i}].{k}: not a number")
+        if row.get("backend") not in ("thread", "process"):
+            problems.append(f"cells[{i}].backend: expected thread|process, "
+                            f"got {row.get('backend')!r}")
+        if row.get("audit") not in ("full", "sampled", "off"):
+            problems.append(f"cells[{i}].audit: expected full|sampled|off, "
+                            f"got {row.get('audit')!r}")
+        if (row.get("audit") == "sampled"
+                and row.get("backend") in sampled
+                and isinstance(row.get("sessions"), int)):
+            sampled[row["backend"]].add(row["sessions"])
+    for b, floor in (("thread", 3), ("process", 2)):
+        if len(sampled[b]) < floor:
+            problems.append(
+                f"cells: backend {b!r} covers {len(sampled[b])} sampled "
+                f"session counts ({sorted(sampled[b])}), need >= {floor}")
+
+    summary = doc.get("summary")
+    if not isinstance(summary, dict):
+        problems.append("summary: missing")
+        return problems
+    for k in ("max_sessions", "max_sessions_per_s", "max_requests_per_s",
+              "max_virtual_per_wall", "rss_ratio_thread",
+              "rss_ratio_process", "rss_flat_within"):
+        if not _is_num(summary.get(k)):
+            problems.append(f"summary.{k}: missing or not a number")
+    gate = summary.get("rss_flat_within")
+    if _is_num(gate):
+        for b in ("thread", "process"):
+            ratio = summary.get(f"rss_ratio_{b}")
+            if _is_num(ratio) and ratio > gate:
+                problems.append(
+                    f"summary.rss_ratio_{b}: {ratio} exceeds the "
+                    f"flat-memory gate ({gate}) — streaming replay must "
+                    f"not grow RSS with session count")
+    return problems
+
+
 def write_bench(doc: dict, path: Path) -> Path:
     """Validate then write one trajectory point (refuses malformed docs —
     a broken artifact in the series is worse than a missing one)."""
@@ -178,10 +271,18 @@ def _cmd_validate(args) -> int:
             print(f"  - {p}", file=sys.stderr)
         return 1
     s = doc["summary"]
-    print(f"ok: {path.name} pr={doc['pr']} mode={doc.get('mode', '?')} "
-          f"batched_speedup_at_8={s['batched_speedup_at_8']}x "
-          f"max_events_per_s={s['max_events_per_s']:.0f} "
-          f"max_virtual_per_wall={s['max_virtual_per_wall']:.1f}")
+    head = f"ok: {path.name} pr={doc['pr']} mode={doc.get('mode', '?')}"
+    if doc["bench"] == "scale":
+        print(f"{head} max_sessions={s['max_sessions']} "
+              f"max_sessions_per_s={s['max_sessions_per_s']:.0f} "
+              f"rss_ratio_thread={s['rss_ratio_thread']} "
+              f"rss_ratio_process={s['rss_ratio_process']} "
+              f"(gate <= {s['rss_flat_within']})")
+    else:
+        print(f"{head} "
+              f"batched_speedup_at_8={s['batched_speedup_at_8']}x "
+              f"max_events_per_s={s['max_events_per_s']:.0f} "
+              f"max_virtual_per_wall={s['max_virtual_per_wall']:.1f}")
     return 0
 
 
@@ -190,15 +291,29 @@ def _cmd_show(args) -> int:
     if not points:
         print(f"(no BENCH_*.json under {args.root})")
         return 0
-    header = (f"{'pr':>4}  {'mode':<6} {'batched@8':>10}  "
+    speed = [d for d in points if d.get("bench") == "emu_speed"]
+    scale = [d for d in points if d.get("bench") == "scale"]
+    if speed:
+        print(f"{'pr':>4}  {'mode':<6} {'batched@8':>10}  "
               f"{'max_events/s':>13}  {'max_virt/wall':>13}")
-    print(header)
-    for doc in points:
-        s = doc.get("summary", {})
-        print(f"{doc.get('pr', '?'):>4}  {doc.get('mode', '?'):<6} "
-              f"{s.get('batched_speedup_at_8', float('nan')):>9.2f}x  "
-              f"{s.get('max_events_per_s', float('nan')):>13.0f}  "
-              f"{s.get('max_virtual_per_wall', float('nan')):>13.1f}")
+        for doc in speed:
+            s = doc.get("summary", {})
+            print(f"{doc.get('pr', '?'):>4}  {doc.get('mode', '?'):<6} "
+                  f"{s.get('batched_speedup_at_8', float('nan')):>9.2f}x  "
+                  f"{s.get('max_events_per_s', float('nan')):>13.0f}  "
+                  f"{s.get('max_virtual_per_wall', float('nan')):>13.1f}")
+    if scale:
+        if speed:
+            print()
+        print(f"{'pr':>4}  {'mode':<6} {'max_sessions':>12}  "
+              f"{'sessions/s':>10}  {'rss_thread':>10}  {'rss_proc':>9}")
+        for doc in scale:
+            s = doc.get("summary", {})
+            print(f"{doc.get('pr', '?'):>4}  {doc.get('mode', '?'):<6} "
+                  f"{s.get('max_sessions', float('nan')):>12}  "
+                  f"{s.get('max_sessions_per_s', float('nan')):>10.0f}  "
+                  f"{s.get('rss_ratio_thread', float('nan')):>9.2f}x  "
+                  f"{s.get('rss_ratio_process', float('nan')):>8.2f}x")
     return 0
 
 
