@@ -107,6 +107,15 @@ def _distributed(mode):
             f"decisions_equal={all(p['decisions_equal'] for p in parities)}")
 
 
+def _chaos(mode):
+    from benchmarks import fig_chaos as m
+    rows = m.main(n=_n(mode, 40, 24, 10))
+    worst = min(r["attainment"] for r in rows)
+    return (f"worst_attainment={worst:.4f},"
+            f"faults_equal={all(r['faults_equal'] for r in rows)},"
+            f"max_parity_err={max(r['max_err_steps'] for r in rows)}steps")
+
+
 def _emu_speed(mode):
     from benchmarks import fig_emu_speed as m
     m.main(n=_n(mode, 24, 12, 6),
@@ -161,6 +170,7 @@ SUITES = [
     ("fig_autoscale", _autoscale),
     ("fig_hetero", _hetero),
     ("fig_distributed", _distributed),
+    ("fig_chaos", _chaos),
     ("fig_emu_speed", _emu_speed),
     ("fig_scale", _scale),
     ("table1_features", _table1),

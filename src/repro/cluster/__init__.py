@@ -22,6 +22,8 @@ from .autoscaler import (AUTOSCALER_POLICIES, Autoscaler, AutoscalerConfig,
                          TTFTSLOPolicy, drain_victim, make_autoscaler_policy,
                          provision_delay)
 from .cluster import Cluster, ClusterBase, ClusterConfig, build_cluster
+from .faults import (FAULT_KINDS, FaultInjector, FaultSpec, ON_CRASH_POLICIES,
+                     SlowdownPredictor)
 from .process_backend import ProcessCluster, ProcessReplicaHandle
 from .router import (CostNormalizedLoadRouter, LeastOutstandingTokensRouter,
                      PDPoolRouter, PrefixAffinityRouter, ReplicaView,
@@ -61,4 +63,9 @@ __all__ = [
     "SchedulePolicy",
     "AUTOSCALER_POLICIES",
     "make_autoscaler_policy",
+    "FaultSpec",
+    "FaultInjector",
+    "SlowdownPredictor",
+    "FAULT_KINDS",
+    "ON_CRASH_POLICIES",
 ]

@@ -155,6 +155,11 @@ class ClusterBase:
         # read this, so audit modes can drop the retained lists without
         # breaking the wait/progress surface.
         self._finished_count = 0
+        # Terminally failed requests (crash with on_crash="fail"): they count
+        # toward wait_until_complete's expected total but never join
+        # ``finished`` — metrics exclude them, the wait surface does not.
+        self.failed: List[Request] = []
+        self._failed_count = 0
         self._audit = "full"
         self.retain_finished = True
         self.retain_placements = True
@@ -224,11 +229,16 @@ class ClusterBase:
         closed-loop think-time actors, so the route+enqueue pair is
         serialised (router state is not thread-safe)."""
         with self._submit_lock:
-            idx = self.router.route(req, self.replicas, active=self.active)
-            if self.retain_placements:
-                self.placements.append(
-                    (req.session_id, req.turn_index, req.request_id, idx))
-            self.replicas[idx].submit(req)
+            return self._submit_locked(req)
+
+    def _submit_locked(self, req: Request) -> int:
+        """Route + enqueue; caller holds ``_submit_lock`` (crash requeues
+        reuse this so a batch of re-routes is one atomic decision run)."""
+        idx = self.router.route(req, self.replicas, active=self.active)
+        if self.retain_placements:
+            self.placements.append(
+                (req.session_id, req.turn_index, req.request_id, idx))
+        self.replicas[idx].submit(req)
         return idx
 
     def submit_many(self, reqs: Sequence[Request]) -> List[int]:
@@ -383,6 +393,87 @@ class ClusterBase:
         self._membership[idx]["drained"] = self.clock.now()
         self.replicas[idx].retire()
 
+    # ------------------------------------------------------ fault injection --
+    def crash_replica(self, idx: int, *, on_crash: str = "requeue") -> dict:
+        """Kill replica ``idx`` *now* (fault injection): KV/prefix state is
+        lost, the replica leaves the routing set immediately (not via the
+        drain ledger — a dead replica must be invisible to the router and
+        the autoscaler's drain-victim rule at once), its cost window closes
+        at the crash instant, and every in-flight request is either
+        re-routed (``on_crash="requeue"``, progress zeroed, original
+        arrival time kept) or terminally failed (``on_crash="fail"``).
+
+        A replica crashing *while already draining* is removed from the
+        drain ledger first so it can never be double-finalized nor
+        re-picked as a victim; its ``drained`` stamp is the crash time, so
+        ``replica_seconds``/``cost_dollars`` bill it exactly once.  The
+        last active replica refuses to crash (``crashed=False``) — a
+        cluster with no capacity could never finish the run, mirroring the
+        drain-side ``len(active) > 1`` invariant.
+
+        Returns ``{"crashed", "requeued", "failed", "tier"}``.
+        """
+        assert on_crash in ("requeue", "fail"), on_crash
+        with self._submit_lock, self._membership_lock:
+            tier = self.replica_tiers[idx]
+            m = self._membership[idx]
+            if m["drained"] is not None:          # already fully gone
+                return {"crashed": False, "requeued": 0, "failed": 0,
+                        "tier": tier}
+            if idx in self.active:
+                if len(self.active) <= 1:
+                    return {"crashed": False, "requeued": 0, "failed": 0,
+                            "tier": tier}
+                self.active.remove(idx)
+            self._draining.pop(idx, None)         # never finalized twice
+            if m["drain_started"] is None:
+                m["drain_started"] = self.clock.now()
+            m["drained"] = self.clock.now()
+        # Kill OUTSIDE the cluster locks: the victim's step thread may be
+        # delivering a completion that co-resolved with the fault's barrier
+        # round, and that path takes _membership_lock (drain progress) —
+        # holding it through the join would deadlock.
+        victims = list(self._force_kill(idx))
+        victims.sort(key=lambda r: (r.arrival_time, r.request_id))
+        requeued = failed = 0
+        if on_crash == "requeue":
+            with self._submit_lock:
+                for req in victims:
+                    req.reset_for_requeue()
+                    self._submit_locked(req)
+            requeued = len(victims)
+        else:
+            with self._finish_cond:
+                self.failed.extend(victims)
+                self._failed_count += len(victims)
+                self._finish_cond.notify_all()
+            failed = len(victims)
+        return {"crashed": True, "requeued": requeued, "failed": failed,
+                "tier": tier}
+
+    def set_replica_slowdown(self, idx: int, factor: Optional[float]) -> bool:
+        """Straggler injection: scale replica ``idx``'s predicted step times
+        by ``factor`` (``None`` restores full speed).  Steps whose duration
+        was computed before the change keep it — identical semantics to the
+        DES, whose in-flight STEP_DONE events are already on the heap."""
+        if idx >= len(self.replicas):
+            return False
+        return self._set_slowdown(idx, factor)
+
+    def _force_kill(self, idx: int) -> List[Request]:
+        """Backend hook: destroy replica ``idx`` immediately and return its
+        in-flight requests (un-reset)."""
+        raise NotImplementedError
+
+    def _set_slowdown(self, idx: int, factor: Optional[float]) -> bool:
+        """Backend hook for :meth:`set_replica_slowdown`."""
+        raise NotImplementedError
+
+    @property
+    def failed_count(self) -> int:
+        with self._finish_cond:
+            return self._failed_count
+
     def num_active(self) -> int:
         with self._membership_lock:
             return len(self.active)
@@ -470,7 +561,7 @@ class ClusterBase:
         import time as _time
         deadline = _time.monotonic() + timeout
         with self._finish_cond:
-            while self._finished_count < expected:
+            while self._finished_count + self._failed_count < expected:
                 remaining = deadline - _time.monotonic()
                 if remaining <= 0:
                     return False
@@ -503,6 +594,7 @@ class ClusterBase:
             "tiers": list(self.replica_tiers),
             "policy": getattr(self.router, "policy", "?"),
             "finished": self._finished_count,
+            "failed": self._failed_count,
             "steps": sum(r["steps"] for r in per_replica),
             "device_time_s": sum(r["device_time_s"] for r in per_replica),
             "cpu_overhead_s": sum(r["cpu_overhead_s"] for r in per_replica),
@@ -573,6 +665,23 @@ class Cluster(ClusterBase):
         assert engine.clock is self.clock, \
             "new replica must share the cluster's clock"
         engine.on_finish = self._complete
+
+    def _force_kill(self, idx: int) -> List[Request]:
+        return self.replicas[idx].force_kill()
+
+    def _set_slowdown(self, idx: int, factor: Optional[float]) -> bool:
+        from repro.cluster.faults import SlowdownPredictor
+        runner = self.replicas[idx].runner
+        base = SlowdownPredictor.unwrap(runner.predictor)
+        if factor is None:
+            runner.predictor = base
+        else:
+            runner.predictor = SlowdownPredictor(base, factor)
+        return True
+
+    def crash_replica(self, idx: int, *, on_crash: str = "requeue") -> dict:
+        assert not self._pd, "fault injection is not supported for pd_pool"
+        return super().crash_replica(idx, on_crash=on_crash)
 
     # ------------------------------------------------------------- intake --
     def submit(self, req: Request) -> int:

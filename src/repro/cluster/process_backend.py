@@ -299,6 +299,14 @@ class _ReplicaServer:
             return {"op": "ack"}
         if op == "step_log":
             return {"op": "step_log_ack", "log": list(self.engine.step_log)}
+        if op == "slowdown":
+            from repro.cluster.faults import SlowdownPredictor
+            runner = self.engine.runner
+            base = SlowdownPredictor.unwrap(runner.predictor)
+            factor = msg["factor"]
+            runner.predictor = (base if factor is None
+                                else SlowdownPredictor(base, factor))
+            return {"op": "ack"}
         if op == "retire":
             # drain final step: park semantics then the full departure —
             # TimeJumpClient.park is a no-op once deregistered, so the
@@ -345,7 +353,11 @@ class ProcessReplicaHandle:
         self._replies: Dict[int, "queue.Queue[dict]"] = {}
         self._replies_lock = threading.Lock()
         self._rid = itertools.count()
-        self._in_flight: set = set()
+        # request_id -> the parent's Request copy: submits minus completion
+        # frames.  Keeping the object (not just the id) is the crash-recovery
+        # ledger — after a SIGKILL the child's progressed copies are gone,
+        # and these are what gets requeued/failed.
+        self._in_flight: Dict[int, Request] = {}
         self._in_flight_lock = threading.Lock()
         self.activated = False
         self.retired = False
@@ -372,7 +384,8 @@ class ProcessReplicaHandle:
                 if msg["op"] == "complete":
                     finished = msg["reqs"]
                     with self._in_flight_lock:
-                        self._in_flight -= {r.request_id for r in finished}
+                        for r in finished:
+                            self._in_flight.pop(r.request_id, None)
                     try:
                         if self.on_complete is not None:
                             self.on_complete(finished)
@@ -446,12 +459,12 @@ class ProcessReplicaHandle:
         unpark — without it the dispatcher's next jump could skip the
         request's processing entirely)."""
         with self._in_flight_lock:
-            self._in_flight.add(req.request_id)
+            self._in_flight[req.request_id] = req
         try:
             self._rpc({"op": "submit", "req": req})
         except Exception:
             with self._in_flight_lock:
-                self._in_flight.discard(req.request_id)
+                self._in_flight.pop(req.request_id, None)
             raise
 
     def set_audit(self, audit: str) -> None:
@@ -498,6 +511,50 @@ class ProcessReplicaHandle:
         except (TransportClosed, RuntimeError):
             pass
         self.stopped = True
+
+    def set_slowdown(self, factor: Optional[float]) -> bool:
+        """Straggler injection: swap the child engine's predictor wrap."""
+        if not self.activated or self.stopped:
+            return False
+        self._rpc({"op": "slowdown", "factor": factor})
+        return True
+
+    def force_kill(self) -> List[Request]:
+        """Fault injection: SIGKILL the child — no drain, no goodbye frame —
+        and surrender the requests it was holding.
+
+        This is the real failure mode the socket transport must survive:
+        the child's worker actor dies mid-jump, its Timekeeper socket goes
+        EOF, and the server's per-connection reaper deregisters every actor
+        of the dead connection so pending barrier rounds re-resolve without
+        it.  Order matters:
+
+        1. snapshot ``stats``/``step_log`` over the still-live command loop
+           (a SIGKILLed engine can never answer the shutdown-time RPC, and
+           the dead replica still owes its device-time accounting);
+        2. ``proc.kill()`` — SIGKILL, nothing runs in the child;
+        3. join the reader to EOF: completion frames already on the wire
+           (steps that finished *before* the crash instant) still land, so
+           the ledger handed back is exact — submits minus every completion
+           the dead replica actually delivered.
+        """
+        self.retired = True
+        if self.activated and not self.stopped:
+            try:
+                self._step_log_cache = self._rpc({"op": "step_log"})["log"]
+                self._stats_cache = self._rpc({"op": "stats"})["stats"]
+            except (TransportClosed, RuntimeError):
+                pass                      # child already dying: ledger still valid
+        self.stopped = True
+        self.proc.kill()
+        self.proc.join(timeout=30.0)
+        self._reader.join(timeout=30.0)
+        assert not self._reader.is_alive(), \
+            f"{self.name}: reader failed to reach EOF after SIGKILL"
+        with self._in_flight_lock:
+            victims = list(self._in_flight.values())
+            self._in_flight.clear()
+        return victims
 
     def shutdown(self, timeout: float = 10.0) -> None:
         self._send_oneway({"op": "shutdown"})
@@ -603,6 +660,12 @@ class ProcessCluster(ClusterBase):
 
     def _attach_replica(self, handle) -> None:
         handle.on_complete = self._complete
+
+    def _force_kill(self, idx: int) -> List[Request]:
+        return self.replicas[idx].force_kill()
+
+    def _set_slowdown(self, idx: int, factor: Optional[float]) -> bool:
+        return self.replicas[idx].set_slowdown(factor)
 
     # ---------------------------------------------------------- lifecycle --
     def shutdown(self) -> None:

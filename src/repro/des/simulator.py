@@ -78,6 +78,7 @@ class SimRequest:
     num_generated: int = 0
     first_token_time: Optional[float] = None
     finish_time: Optional[float] = None
+    failed: bool = False                           # crash, on_crash="fail"
     replica: int = -1                              # placement decision
     prompt_tokens: Optional[Tuple[int, ...]] = None  # routing key only
     session_id: Optional[int] = None               # closed-loop identity
@@ -113,6 +114,7 @@ class _ReplicaState:
         self.in_flight_batch: List[Tuple[SimRequest, int]] = []
         self.added_at = added_at
         self.drained_at: Optional[float] = None
+        self.dead = False                # crashed/reclaim-killed (faults)
         self.tier = tier                 # hardware tier name (None = untiered)
         self.predictor = predictor       # tier-resolved step-time predictor
 
@@ -161,6 +163,9 @@ class DiscreteEventSimulator:
     optionally elastic and closed-loop)."""
 
     ARRIVAL, STEP_DONE, TICK, PROVISION = 0, 1, 2, 3
+    # fault events, mirroring repro.cluster.faults.FaultInjector one-to-one
+    CRASH, STRAGGLE, STRAGGLE_END = 4, 5, 6
+    RECLAIM, RECLAIM_KILL, RESPAWN = 7, 8, 9
 
     def __init__(
         self,
@@ -174,6 +179,7 @@ class DiscreteEventSimulator:
         replica_tiers=None,          # per-replica tier names (heterogeneous)
         tier_predictors=None,        # tier name -> RuntimePredictor
         tier_specs=None,             # tier name -> repro.cluster.tiers.TierSpec
+        faults=None,                 # iterable of repro.cluster.faults.FaultSpec
     ):
         self.predictor = predictor
         # per-instance default: a shared mutable default DESConfig would
@@ -206,8 +212,15 @@ class DiscreteEventSimulator:
         self.router = router
         self.autoscaler_policy = autoscaler_policy
         self.autoscaler_cfg = autoscaler_cfg
+        self.faults = list(faults or [])
         self.replicas: List[_ReplicaState] = []
         self.active: List[int] = []
+        # fault-injection audit, filled per run(); tuples identical to
+        # FaultInjector.events (nominal times, primitives) for compare()
+        self.fault_log: List[tuple] = []
+        self.failed: List[SimRequest] = []
+        self.requeued_total = 0
+        self.recoveries: List[Tuple[float, float]] = []
         self._finish_log: List[Tuple[float, float]] = []   # (finish, ttft)
         # sink mode prunes the TTFT log to this sliding window of virtual
         # seconds; keep it comfortably wider than any autoscaler policy's
@@ -321,6 +334,10 @@ class DiscreteEventSimulator:
                                 cost=spec.cost_per_replica_s)
         self.active = list(range(self.num_replicas))
         self._finish_log = []
+        self.fault_log = []
+        self.failed = []
+        self.requeued_total = 0
+        self.recoveries = []
         asc_cfg = self.autoscaler_cfg
         if self.autoscaler_policy is not None and asc_cfg is None:
             from repro.cluster.autoscaler import AutoscalerConfig
@@ -348,6 +365,19 @@ class DiscreteEventSimulator:
         if self.autoscaler_policy is not None:
             heapq.heappush(events, (asc_cfg.interval_s, next(counter),
                                     self.TICK, None))
+        if self.faults:
+            # the SAME static schedule expansion the emulator's FaultInjector
+            # pops: one heap walk, so relative order of same-time faults is
+            # pinned equal across backends
+            from repro.cluster.faults import schedule_of
+            _kind_of = {"crash": self.CRASH, "straggle": self.STRAGGLE,
+                        "straggle_end": self.STRAGGLE_END,
+                        "reclaim": self.RECLAIM}
+            sched = schedule_of(self.faults)
+            while sched:
+                f_t, _, action, f_spec = heapq.heappop(sched)
+                heapq.heappush(events, (f_t, next(counter),
+                                        _kind_of[action], f_spec))
 
         def pull_source() -> Optional[SimRequest]:
             """Next source arrival from a lazy stream (None when drained)."""
@@ -443,6 +473,63 @@ class DiscreteEventSimulator:
                     if rep.idle():
                         rep.drained_at = now
 
+        def crash_now(idx: int, spec, *, log_kind: str):
+            """Kill replica ``idx`` with crash semantics — the DES mirror of
+            ``ClusterBase.crash_replica`` + ``FaultInjector._apply_crash``,
+            guard-for-guard: missing/drained/last-active replicas refuse,
+            the log records nominal time, victims sort by
+            ``(arrival_time, request_id)`` and re-route (or fail)."""
+            t = now
+            if idx >= len(self.replicas):
+                self.fault_log.append((log_kind, t, idx, 0, 0, False))
+                return
+            rep = self.replicas[idx]
+            if rep.dead or rep.drained_at is not None:
+                self.fault_log.append((log_kind, t, idx, 0, 0, False))
+                return
+            if idx in self.active:
+                if len(self.active) <= 1:
+                    self.fault_log.append((log_kind, t, idx, 0, 0, False))
+                    return
+                self.active.remove(idx)
+            rep.dead = True
+            rep.drained_at = now          # cost window closes at the crash
+            # in_flight_batch entries are running-list members; the step's
+            # STEP_DONE event stays on the heap but is skipped (rep.dead) —
+            # the step never completes, its tokens are lost with the KV
+            victims = list(rep.waiting) + list(rep.running)
+            rep.waiting.clear()
+            rep.running.clear()
+            rep.in_flight_batch = []
+            rep.step_in_flight = False
+            victims.sort(key=lambda s: (s.arrival_time, s.request_id))
+            requeued = failed_n = 0
+            if spec.on_crash == "requeue":
+                for s in victims:
+                    s.num_prefilled = 0
+                    s.num_generated = 0
+                    s.first_token_time = None
+                    s.finish_time = None
+                    tgt = router.route(s, self.replicas, active=self.active)
+                    s.replica = tgt
+                    self.replicas[tgt].waiting.append(s)
+                for tgt in sorted({s.replica for s in victims}):
+                    schedule_step(self.replicas[tgt])
+                requeued = len(victims)
+                self.requeued_total += requeued
+            else:
+                for s in victims:
+                    s.failed = True
+                self.failed.extend(victims)
+                failed_n = len(victims)
+            self.fault_log.append((log_kind, t, idx, requeued, failed_n, True))
+            if spec.recover:
+                tier = (spec.respawn_tier if spec.respawn_tier is not None
+                        else rep.tier)
+                heapq.heappush(events, (t + spec.respawn_delay_s,
+                                        next(counter), self.RESPAWN,
+                                        (tier, t)))
+
         while events or pending is not None:
             # One-ahead merge of the lazy source with the event heap.  Ties
             # go to the source arrival — the exact order the eager path
@@ -467,6 +554,8 @@ class DiscreteEventSimulator:
                 schedule_step(rep)
             elif kind == self.STEP_DONE:
                 rep = self.replicas[payload]
+                if rep.dead:
+                    continue      # step of a crashed replica: tokens lost
                 rep.step_in_flight = False
                 for s, n in rep.in_flight_batch:
                     if s.num_prefilled < s.prompt_len:
@@ -520,10 +609,10 @@ class DiscreteEventSimulator:
             elif kind == self.TICK:
                 view._now = now
                 apply_autoscale(self.autoscaler_policy.decide(view))
-                if completed < expected:
+                if completed + len(self.failed) < expected:
                     heapq.heappush(events, (now + asc_cfg.interval_s,
                                             next(counter), self.TICK, None))
-            else:  # PROVISION
+            elif kind == self.PROVISION:
                 provisioning -= 1
                 idx = len(self.replicas)
                 # payload is the tier chosen at tick time; None clones the
@@ -540,5 +629,58 @@ class DiscreteEventSimulator:
                                 cost=spec.cost_per_replica_s)
                 else:
                     router.grow(idx + 1)
+            elif kind == self.CRASH:
+                crash_now(payload.replica, payload, log_kind="crash")
+            elif kind == self.STRAGGLE:
+                from repro.cluster.faults import SlowdownPredictor
+                if payload.replica < len(self.replicas):
+                    rep = self.replicas[payload.replica]
+                    rep.predictor = SlowdownPredictor(
+                        rep.predictor, payload.slowdown)
+                self.fault_log.append(("straggle", now, payload.replica,
+                                       payload.slowdown))
+            elif kind == self.STRAGGLE_END:
+                from repro.cluster.faults import SlowdownPredictor
+                if payload.replica < len(self.replicas):
+                    rep = self.replicas[payload.replica]
+                    rep.predictor = SlowdownPredictor.unwrap(rep.predictor)
+                self.fault_log.append(("straggle_end", now, payload.replica))
+            elif kind == self.RECLAIM:
+                # drain notice: victims leave routing now, keep working;
+                # whoever is not fully drained at now+notice_s is killed
+                victims = [i for i in list(self.active)
+                           if self.replicas[i].tier == payload.tier]
+                if victims and len(victims) >= len(self.active):
+                    victims = victims[1:]   # never reclaim the whole pool
+                self.fault_log.append(("reclaim", now, payload.tier,
+                                       tuple(victims)))
+                for idx in victims:
+                    self.active.remove(idx)
+                    rep = self.replicas[idx]
+                    if rep.idle():
+                        rep.drained_at = now
+                if victims:
+                    heapq.heappush(events, (now + payload.notice_s,
+                                            next(counter), self.RECLAIM_KILL,
+                                            (payload, victims)))
+            elif kind == self.RECLAIM_KILL:
+                f_spec, victims = payload
+                for idx in victims:
+                    crash_now(idx, f_spec, log_kind="reclaim_kill")
+            else:  # RESPAWN
+                tier, fault_t = payload
+                idx = len(self.replicas)
+                self.replicas.append(_ReplicaState(
+                    idx, added_at=now, tier=tier,
+                    predictor=self._tier_predictor(tier)))
+                self.active.append(idx)
+                if tier is not None:
+                    spec = self.tier_specs[tier]
+                    router.grow(idx + 1, weight=spec.throughput_factor,
+                                cost=spec.cost_per_replica_s)
+                else:
+                    router.grow(idx + 1)
+                self.fault_log.append(("respawn", now, tier, idx))
+                self.recoveries.append((fault_t, now))
 
         return sims

@@ -152,6 +152,14 @@ def _cmd_compare(args) -> int:
     print(f"parity ok: decisions_equal={summary['decisions_equal']} "
           f"max_err={summary['max_err_steps']} slow-steps "
           f"(slow_step={cres.slow_step_s * 1e3:.0f} ms)")
+    if scenario.faults:
+        any_res = next(iter(cres.results.values()))
+        recov = (f" mean_recovery={any_res.mean_recovery_s * 1e3:.0f} ms"
+                 if any_res.recovery_times else "")
+        print(f"chaos ok: faults_equal={cres.faults_equal} "
+              f"injected={len(any_res.faults_injected)} "
+              f"requeued={any_res.requests_requeued} "
+              f"failed={any_res.requests_failed}{recov}")
     _emit(rows + [summary], args.out)
     return 0
 

@@ -19,16 +19,16 @@ True
 Traceback (most recent call last):
   ...
 KeyError: "unknown preset 'nope'; choose from ['autoscale_burst', \
-'cluster_scaling', 'distributed_parity', 'elastic_tier_parity', \
-'hetero_mix', 'scale_stream']"
+'chaos_spot', 'cluster_scaling', 'crash_recovery', 'distributed_parity', \
+'elastic_tier_parity', 'hetero_mix', 'scale_stream']"
 """
 
 from __future__ import annotations
 
 from typing import Callable, Dict, List
 
-from .spec import (AutoscaleSpec, PoolSpec, RoutingSpec, Scenario, SLOSpec,
-                   WorkloadSpec)
+from .spec import (AutoscaleSpec, FaultSpec, PoolSpec, RoutingSpec, Scenario,
+                   SLOSpec, WorkloadSpec)
 
 __all__ = ["PRESETS", "get_preset", "list_presets", "describe"]
 
@@ -148,6 +148,63 @@ def elastic_tier_parity() -> Scenario:
         seed=17)
 
 
+def crash_recovery() -> Scenario:
+    """Chaos parity cell: replica 1 is SIGKILL-crashed mid-decode at t=0.97
+    (a deliberate off-step-grid instant — see the determinism caveat in
+    :mod:`repro.cluster.faults`), its in-flight requests requeue through the
+    router, and a warm standby respawns 0.35 virtual seconds later.  All
+    three backends must report the identical fault log and requeue count."""
+    return Scenario(
+        name="crash_recovery",
+        workload=WorkloadSpec(
+            kind="open", qps=2.0, arrival="uniform", num_requests=10,
+            prompt_len_mean=24.0, max_prompt_len=48,
+            output_len_mean=4.0, max_output_len=5),
+        pool=PoolSpec(
+            model="qwen2_5_3b", reduced=True, replicas=2,
+            max_num_seqs=8, max_batched_tokens=64, block_size=4,
+            num_blocks=4096, enable_prefix_caching=False,
+            step_time_s=100e-3),
+        routing=RoutingSpec(policy="round_robin"),
+        faults=(
+            FaultSpec(kind="crash", time_s=0.97, replica=1,
+                      on_crash="requeue", recover=True,
+                      respawn_delay_s=0.35),
+        ),
+        seed=17)
+
+
+def chaos_spot() -> Scenario:
+    """Chaos parity cell on a mixed spot pool: an H100 replica straggles at
+    2× for one virtual second, then the whole L4 (spot) tier is reclaimed
+    with a notice window too short to drain, so the kill lands mid-decode
+    and requeues work — stragglers, drain-then-kill, and warm-pool
+    recovery in one deterministic scenario (fault times off the step
+    grid).  The slowdown (2 × 50 ms = 100 ms) stays under the slow-step
+    parity unit (125 ms), so the ≤ 1-slow-step latency bar still binds."""
+    return Scenario(
+        name="chaos_spot",
+        workload=WorkloadSpec(
+            kind="open", qps=2.0, arrival="uniform", num_requests=10,
+            prompt_len_mean=24.0, max_prompt_len=48,
+            output_len_mean=4.0, max_output_len=5),
+        pool=PoolSpec(
+            model="qwen2_5_3b", reduced=True, replicas=3,
+            tiers=("h100", "h100", "l4"),
+            max_num_seqs=8, max_batched_tokens=64, block_size=4,
+            num_blocks=4096, enable_prefix_caching=False,
+            tier_step_time_s={"h100": 50e-3, "l4": 125e-3}),
+        routing=RoutingSpec(policy="round_robin"),
+        faults=(
+            FaultSpec(kind="straggler", time_s=0.47, replica=1,
+                      slowdown=2.0, duration_s=1.0),
+            FaultSpec(kind="spot_reclaim", time_s=1.07, tier="l4",
+                      notice_s=0.15, on_crash="requeue", recover=True,
+                      respawn_delay_s=0.4),
+        ),
+        seed=17)
+
+
 def scale_stream() -> Scenario:
     """Diurnal-trace streaming sessions — the million-session scale base
     cell (``fig_scale`` sweeps ``num_sessions`` at fixed qps, so session
@@ -183,7 +240,8 @@ def scale_stream() -> Scenario:
 PRESETS: Dict[str, Callable[[], Scenario]] = {
     fn.__name__: fn
     for fn in (cluster_scaling, autoscale_burst, hetero_mix,
-               distributed_parity, elastic_tier_parity, scale_stream)
+               distributed_parity, elastic_tier_parity, crash_recovery,
+               chaos_spot, scale_stream)
 }
 
 

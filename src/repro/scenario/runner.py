@@ -103,6 +103,21 @@ class ScenarioResult:
     replica_tiers: List[Optional[str]] = field(default_factory=list)
     scaleups: List[Tuple[float, Optional[str]]] = field(default_factory=list)
     drained: List[int] = field(default_factory=list)
+    # fault-injection audit (chaos scenarios): the applied fault log in
+    # nominal virtual times — primitive tuples, float-exactly comparable
+    # across backends (see repro.cluster.faults.FaultInjector.events)
+    faults_injected: List[tuple] = field(default_factory=list)
+    requests_requeued: int = 0
+    requests_failed: int = 0
+    # (fault_time, respawn_time) per recovered replica, virtual seconds
+    recovery_times: List[Tuple[float, float]] = field(default_factory=list)
+
+    @property
+    def mean_recovery_s(self) -> float:
+        """Mean fault-to-respawn delay across recovered replicas."""
+        if not self.recovery_times:
+            return 0.0
+        return float(np.mean([r - f for f, r in self.recovery_times]))
 
     @property
     def speedup(self) -> float:
@@ -170,6 +185,12 @@ class ScenarioResult:
                     self.session_ttft.p50 * 1e3, 1)
         if self.scaleups:
             row["tiers_added"] = ",".join(t or "?" for t in self.tiers_added)
+        if self.faults_injected:
+            row["faults"] = len(self.faults_injected)
+            row["requeued"] = self.requests_requeued
+            row["failed"] = self.requests_failed
+            if self.recovery_times:
+                row["mean_recovery_s"] = round(self.mean_recovery_s, 3)
         return row
 
 
@@ -267,12 +288,26 @@ def _run_emulated(scenario: Scenario, wiring: _Wiring, backend: str,
     from repro.serving.benchmark import BenchmarkRunner
 
     pool, autoscale = scenario.pool, scenario.autoscale
+    # respawn headroom: every fault that can recover activates one warm
+    # standby per killed replica (spot_reclaim: one per tier member)
+    respawn_extra = 0
+    tiers_list = pool.replica_tiers() or []
+    for f in scenario.faults:
+        if not f.recover:
+            continue
+        if f.kind == "crash":
+            respawn_extra += 1
+        elif f.kind == "spot_reclaim":
+            respawn_extra += sum(1 for t in tiers_list if t == f.tier)
     warm = None
-    if backend == "process" and autoscale is not None:
-        # pre-spawn the autoscaler's whole headroom so scale-ups activate a
-        # warm child (paying only the modeled provisioning delay, never
-        # process-spawn wall time mid-run)
-        warm = autoscale.max_replicas
+    if backend == "process" and (autoscale is not None or respawn_extra):
+        # pre-spawn the whole headroom (autoscaler max + chaos respawns) so
+        # scale-ups and recoveries activate a warm child, paying only the
+        # modeled provisioning/respawn delay, never process-spawn wall time
+        # mid-run
+        base_total = (autoscale.max_replicas if autoscale is not None
+                      else pool.replicas)
+        warm = base_total + respawn_extra
     cluster = build_cluster(
         wiring.model_cfg, wiring.engine_cfg, pool.replicas,
         policy=scenario.routing.policy, mode="emulate", backend=backend,
@@ -285,12 +320,17 @@ def _run_emulated(scenario: Scenario, wiring: _Wiring, backend: str,
     if autoscale is not None:
         autoscaler = Autoscaler(cluster, autoscale.make_policy(),
                                 autoscale.make_config())
+    injector = None
+    if scenario.faults:
+        from repro.cluster.faults import FaultInjector
+        injector = FaultInjector(cluster, scenario.faults)
     workload = scenario.workload.materialize(scenario.seed)
     closed = scenario.workload.kind == "sessions"
     try:
         res = BenchmarkRunner(cluster, workload,
                               transport=cluster.transport,
                               autoscaler=autoscaler,
+                              fault_injector=injector,
                               audit=audit,
                               metrics_seed=scenario.seed
                               ).run(timeout=timeout)
@@ -315,6 +355,12 @@ def _run_emulated(scenario: Scenario, wiring: _Wiring, backend: str,
             latencies = {}
         drained = [m["replica"] for m in cluster.membership_events()
                    if m["drained"] is not None]
+        # one scale-up audit: autoscaler provisions + chaos respawns, in
+        # virtual-time order (both sources record absolute clock stamps)
+        scaleups = list(autoscaler.scaleups) if autoscaler else []
+        if injector is not None:
+            scaleups = sorted(scaleups + list(injector.respawn_scaleups),
+                              key=lambda e: e[0])
         cstats = cluster.stats()
         return ScenarioResult(
             scenario=scenario.name, backend=backend, seed=scenario.seed,
@@ -337,8 +383,12 @@ def _run_emulated(scenario: Scenario, wiring: _Wiring, backend: str,
             placements=placements,
             latencies=latencies,
             replica_tiers=list(cluster.replica_tiers),
-            scaleups=list(autoscaler.scaleups) if autoscaler else [],
+            scaleups=scaleups,
             drained=drained,
+            faults_injected=list(injector.events) if injector else [],
+            requests_requeued=injector.requeued if injector else 0,
+            requests_failed=injector.failed if injector else 0,
+            recovery_times=list(injector.recoveries) if injector else [],
         )
     finally:
         cluster.shutdown()
@@ -364,7 +414,8 @@ def _run_des(scenario: Scenario, wiring: _Wiring,
         autoscaler_cfg=(autoscale.make_config() if autoscale else None),
         replica_tiers=pool.replica_tiers(),
         tier_predictors=wiring.tier_predictors,
-        tier_specs=wiring.tier_specs)
+        tier_specs=wiring.tier_specs,
+        faults=scenario.faults)
     workload = scenario.workload.materialize(scenario.seed)
     closed = scenario.workload.kind == "sessions"
     initial_replicas = pool.replicas
@@ -407,6 +458,10 @@ def _run_des(scenario: Scenario, wiring: _Wiring,
                       for r in sim.replicas[initial_replicas:]],
             drained=[r.index for r in sim.replicas
                      if r.drained_at is not None],
+            faults_injected=list(sim.fault_log),
+            requests_requeued=sim.requeued_total,
+            requests_failed=len(sim.failed),
+            recovery_times=list(sim.recoveries),
         )
 
     wall0 = time.monotonic()
@@ -469,6 +524,10 @@ def _run_des(scenario: Scenario, wiring: _Wiring,
                   for r in sim.replicas[initial_replicas:]],
         drained=[r.index for r in sim.replicas
                  if r.drained_at is not None],
+        faults_injected=list(sim.fault_log),
+        requests_requeued=sim.requeued_total,
+        requests_failed=len(sim.failed),
+        recovery_times=list(sim.recoveries),
     )
 
 
@@ -577,6 +636,7 @@ class CompareResult:
     drained_equal: bool
     max_ttft_err_s: float
     max_tpot_err_s: float
+    faults_equal: bool = True
 
     @property
     def max_err_steps(self) -> float:
@@ -649,10 +709,24 @@ def compare(scenario: Scenario,
     decisions_equal = True
     scaleups_equal = True
     drained_equal = True
+    faults_equal = True
     max_ttft = 0.0
     max_tpot = 0.0
     for b in backends[1:]:
         other = results[b]
+        if base.faults_injected != other.faults_injected:
+            faults_equal = False
+            problems.append(
+                f"{base_b}/{b}: fault event sequences diverge "
+                f"({base.faults_injected} vs {other.faults_injected})")
+        if (base.requests_requeued != other.requests_requeued
+                or base.requests_failed != other.requests_failed):
+            faults_equal = False
+            problems.append(
+                f"{base_b}/{b}: requeue/fail outcomes diverge "
+                f"(requeued {base.requests_requeued} vs "
+                f"{other.requests_requeued}, failed {base.requests_failed} "
+                f"vs {other.requests_failed})")
         if set(base.latencies) != set(other.latencies):
             completed_equal = False
             problems.append(
@@ -688,7 +762,8 @@ def compare(scenario: Scenario,
         slow_step_s=step, completed_equal=completed_equal,
         decisions_equal=decisions_equal,
         scaleup_tiers_equal=scaleups_equal, drained_equal=drained_equal,
-        max_ttft_err_s=max_ttft, max_tpot_err_s=max_tpot)
+        max_ttft_err_s=max_ttft, max_tpot_err_s=max_tpot,
+        faults_equal=faults_equal)
     if check and problems:
         raise ParityError(
             f"scenario {scenario.name!r} parity failed across "

@@ -43,6 +43,8 @@ import typing
 from dataclasses import dataclass, field
 from typing import Dict, Optional, Tuple
 
+from repro.cluster.faults import FaultSpec
+
 __all__ = [
     "SpecError",
     "WorkloadSpec",
@@ -50,6 +52,7 @@ __all__ = [
     "RoutingSpec",
     "AutoscaleSpec",
     "SLOSpec",
+    "FaultSpec",
     "Scenario",
     "scenario_with",
     "BACKENDS",
@@ -503,6 +506,7 @@ class Scenario(_SpecBase):
     routing: RoutingSpec = field(default_factory=RoutingSpec)
     autoscale: Optional[AutoscaleSpec] = None
     slo: SLOSpec = field(default_factory=SLOSpec)
+    faults: Tuple[FaultSpec, ...] = ()    # chaos schedule (virtual times)
     seed: int = 0
 
     def validate(self, *, path: str = "") -> None:
@@ -511,6 +515,23 @@ class Scenario(_SpecBase):
         self.pool.validate(path=f"{dot}pool")
         self.routing.validate(path=f"{dot}routing")
         self.slo.validate(path=f"{dot}slo")
+        for i, f in enumerate(self.faults):
+            f.validate(path=f"{dot}faults[{i}]")
+            if f.kind == "spot_reclaim" and not self.pool.tiers:
+                raise SpecError(f"{dot}faults[{i}].tier: spot_reclaim needs "
+                                "a tiered pool (pool.tiers)")
+        if self.faults:
+            if self.routing.policy == "pd_pool":
+                raise SpecError(f"{dot}faults: fault injection is not "
+                                "supported for pd_pool routing")
+            if self.workload.kind == "sessions" and any(
+                    f.on_crash == "fail" for f in self.faults
+                    if f.kind in ("crash", "spot_reclaim")):
+                raise SpecError(
+                    f"{dot}faults: on_crash='fail' cannot be combined with a "
+                    "sessions workload (a failed turn would strand its "
+                    "session's follow-ups and the run would never complete); "
+                    "use on_crash='requeue'")
         if self.autoscale is not None:
             self.autoscale.validate(path=f"{dot}autoscale")
             a = self.autoscale

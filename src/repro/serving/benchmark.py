@@ -227,6 +227,7 @@ class BenchmarkRunner:
         *,
         transport=None,              # Timekeeper transport (emulate mode)
         autoscaler=None,             # repro.cluster.autoscaler.Autoscaler
+        fault_injector=None,         # repro.cluster.faults.FaultInjector
         name: str = "bench",
         expected: Optional[int] = None,   # streaming: declared request count
         audit: str = "full",
@@ -293,6 +294,7 @@ class BenchmarkRunner:
                                          key=attrgetter("arrival_time")))
         self.transport = transport
         self.autoscaler = autoscaler
+        self.fault_injector = fault_injector
         self.name = name
         self.clock: VirtualClock = target.clock
         self._think_ids = itertools.count()
@@ -397,6 +399,11 @@ class BenchmarkRunner:
         if self.transport is not None:
             disp_client = TimeJumpClient(self.transport,
                                          f"{self.name}-dispatcher")
+        # Same anchoring rule for the chaos schedule: arm (register) the
+        # injector's actor before any other actor can move virtual time, so
+        # fault times measure from the run's origin.
+        if self.fault_injector is not None:
+            self.fault_injector.arm()
         dispatcher = threading.Thread(
             target=self._dispatch_loop, args=(disp_client,),
             name=f"{self.name}-dispatch", daemon=True)
@@ -406,10 +413,19 @@ class BenchmarkRunner:
             started_here = True
         if self.autoscaler is not None:
             self.autoscaler.start()
+        if self.fault_injector is not None:
+            self.fault_injector.start()
         dispatcher.start()
         try:
             ok = self.target.wait_until_complete(self.expected, timeout=timeout)
+            if ok and self.fault_injector is not None:
+                # trailing schedule entries (after the last completion) must
+                # apply deterministically, not race teardown — the DES drains
+                # its heap unconditionally and the fault logs are compared
+                self.fault_injector.join()
         finally:
+            if self.fault_injector is not None:
+                self.fault_injector.stop()
             if self.autoscaler is not None:
                 self.autoscaler.stop()
             if listener_armed:

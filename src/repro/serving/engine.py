@@ -88,6 +88,9 @@ class LLMEngine:
         self._wake = threading.Event()
         self._stop = threading.Event()
         self._idle = threading.Event()
+        # set by force_kill (crash injection): the loop thread swallows the
+        # unwedge exception from its aborted jump and exits immediately
+        self._killed = threading.Event()
         self.finished: List[Request] = []
         self.step_log: List[StepRecord] = []
         self._finish_cond = threading.Condition()
@@ -263,6 +266,42 @@ class LLMEngine:
         if retire is not None:
             retire()
 
+    def force_kill(self) -> List[Request]:
+        """Crash semantics (fault injection): tear the engine down *now* and
+        surrender every in-flight request.
+
+        The step thread may be blocked mid-TIMEJUMP; retiring the worker
+        actor deregisters it, and the resulting epoch bump makes the blocked
+        client raise ``KeyError`` (the established force-departure path the
+        autoscaler's ``stop`` uses).  The wake-and-recheck can race the
+        deregistration by one epoch, so we keep bumping the clock epoch (a
+        virtual-time no-op: ``advance_to(now)``) until the loop thread
+        exits — required on a ManualWallSource, where a missed wakeup would
+        otherwise never time out.  Only after the join are the queues
+        harvested, so no step mutates them concurrently.  KV/prefix state
+        is lost by construction: the surrendered ``Request`` objects keep
+        only identity, prompt, and arrival time as far as the caller is
+        concerned (the cluster zeroes their progress before requeueing).
+        """
+        self._killed.set()
+        self._stop.set()
+        self._wake.set()
+        self.retire()
+        if self._thread is not None and self._thread.is_alive():
+            deadline = time.monotonic() + 30.0
+            while self._thread.is_alive() and time.monotonic() < deadline:
+                self.clock.advance_to(self.clock.now())   # epoch bump only
+                self._thread.join(timeout=0.02)
+            assert not self._thread.is_alive(), \
+                f"{self.name}: step thread failed to exit on force_kill"
+        with self._state_lock, self._lock, self._live_lock:
+            victims = list(self._live.values())
+            self._live.clear()
+            self._inbox = []
+            self.scheduler.waiting.clear()
+            self.scheduler.running.clear()
+        return victims
+
     def run_loop(self) -> None:
         while not self._stop.is_set():
             # Drain + scheduler-add under one _state_lock acquisition: a
@@ -290,10 +329,20 @@ class LLMEngine:
                 self._wake.clear()
                 continue
             with self._lock:
+                if self._killed.is_set():
+                    break                 # never re-register a dead replica
                 self.runner.unpark()
             self._idle.clear()
 
-            self.step()
+            try:
+                self.step()
+            except Exception:
+                # force_kill retires the worker actor out from under a
+                # blocked jump; the client raises (KeyError) — that is the
+                # expected unwedge path, not an error
+                if self._killed.is_set():
+                    break
+                raise
         # drain: mark idle so waiters exit
         self._idle.set()
 

@@ -98,6 +98,22 @@ class Request:
             return None
         return self.finish_time - self.arrival_time
 
+    def reset_for_requeue(self) -> None:
+        """Crash recovery (fault injection): the replica — and every byte of
+        its KV/prefix state — is gone.  The request re-enters routing as if
+        freshly arrived: identity and the *original* arrival time are kept
+        (TTFT keeps measuring from first submission, so a crash costs
+        latency, never erases it), all progress and measurements zero."""
+        self.output_tokens = []
+        self.num_prefilled = 0
+        self.cached_prefix_len = 0
+        self.first_scheduled_time = None
+        self.first_token_time = None
+        self.finish_time = None
+        self.token_times = []
+        self.kv_migrated = False
+        self.state = RequestState.WAITING
+
     def reset_for_recompute(self) -> None:
         """Preemption-by-recompute: KV is dropped; prompt + generated tokens
         are replayed as a (longer) prefill on resume."""

@@ -7,11 +7,14 @@ mid-run restores into a fresh engine and every in-flight request completes
 with exactly the right number of tokens.
 """
 
+import dataclasses
 import threading
 import time
 
 import pytest
 
+from repro.cluster import build_cluster
+from repro.cluster.autoscaler import drain_victim
 from repro.core.client import LocalTransport, TimeJumpClient
 from repro.core.predictor import StaticPredictor
 from repro.core.timekeeper import Timekeeper
@@ -242,18 +245,41 @@ def test_snapshot_never_tears_a_running_step():
 
 def test_straggler_degrades_to_wall_clock_never_wrong():
     """An actor that stops responding mid-barrier costs wall time but the
-    other actor's TIMEJUMP still returns with the correct virtual target."""
-    tk = Timekeeper(jitter_cooldown=0.0)
+    other actor's TIMEJUMP still returns with the correct virtual target.
+    Wall time is a ManualWallSource: the degradation *accounting* (virtual
+    progress is paid for in wall seconds) is asserted exactly, without the
+    test itself sleeping on the real clock."""
+    from repro.core.clock import ManualWallSource, VirtualClock
+    wall = ManualWallSource()
+    tk = Timekeeper(VirtualClock(wall), jitter_cooldown=0.0)
     tr = LocalTransport(tk)
     fast = TimeJumpClient(tr, "fast")
     straggler = TimeJumpClient(tr, "straggler")   # registers, never jumps
 
     t0 = fast.now()
-    wall0 = time.monotonic()
-    t1 = fast.time_jump(0.15)     # barrier can't resolve -> timeout path
-    wall = time.monotonic() - wall0
-    assert t1 >= t0 + 0.15 - 1e-6, "virtual target must still be reached"
-    assert wall >= 0.10, "degradation means paying wall clock"
+    wall0 = wall.time()
+    done = threading.Event()
+    result = {}
+
+    def jump():
+        result["t1"] = fast.time_jump(0.15)   # timeout path: rides wall
+        done.set()
+
+    th = threading.Thread(target=jump)
+    th.start()
+    # drive the manual wall forward until the degraded jump completes; the
+    # barrier never resolves (the straggler never jumps), so the only way
+    # the jump can return is by paying these wall seconds
+    for _ in range(10_000):
+        if done.wait(0.0005):
+            break
+        wall.advance(0.01)
+    th.join(10)
+    assert done.is_set(), "degraded jump must complete once wall flows"
+    spent = wall.time() - wall0
+    assert result["t1"] >= t0 + 0.15 - 1e-6, \
+        "virtual target must still be reached"
+    assert spent >= 0.15 - 1e-6, "degradation means paying wall clock"
     fast.deregister()
     straggler.deregister()
     tk.close()
@@ -283,13 +309,192 @@ def test_engine_park_prevents_barrier_wedge():
                         predictor=StaticPredictor(1e-3),
                         use_worker_group=False)
     eng = stack.engine.start()
-    time.sleep(0.1)               # engine parks (no work)
+    assert eng._idle.wait(10.0), "engine must park (no work)"
     client = TimeJumpClient(stack.transport, "probe")
     wall0 = time.monotonic()
     client.time_jump(10.0)        # must resolve without the engine
     assert time.monotonic() - wall0 < 2.0
     client.deregister()
     stack.shutdown()
+
+
+# =========================================================================
+# chaos fault matrix: {crash, straggler, spot_reclaim} × backend × policy
+# =========================================================================
+
+def _chaos_cell(kind, on_crash):
+    """One matrix cell as a Scenario: the chaos presets re-pointed at one
+    fault kind with the requested on-crash policy.  Fault times are the
+    presets' verified mid-decode instants, so the fault always has victims
+    (requeue/fail counts are deterministic, not racy)."""
+    from repro.scenario import get_preset
+    if kind == "crash":
+        base = get_preset("crash_recovery")
+        faults = tuple(dataclasses.replace(f, on_crash=on_crash)
+                       for f in base.faults)
+    elif kind == "straggler":
+        base = get_preset("chaos_spot")
+        faults = tuple(f for f in base.faults if f.kind == "straggler")
+    else:
+        base = get_preset("chaos_spot")
+        faults = tuple(dataclasses.replace(f, on_crash=on_crash)
+                       if f.kind == "spot_reclaim" else f
+                       for f in base.faults)
+    return dataclasses.replace(base, name=f"{kind}_{on_crash}",
+                               faults=faults)
+
+
+FAULT_MATRIX = [("crash", "requeue"), ("crash", "fail"),
+                ("straggler", "requeue"),
+                ("spot_reclaim", "requeue"), ("spot_reclaim", "fail")]
+
+
+@pytest.mark.timeout(180)
+@pytest.mark.parametrize("backend", ["thread", "process", "des"])
+@pytest.mark.parametrize("kind,on_crash", FAULT_MATRIX)
+def test_fault_matrix_conservation(kind, on_crash, backend):
+    """Every fault kind on every backend under both crash policies:
+    completed + failed == submitted (nothing lost, nothing duplicated),
+    the fault is actually applied, and fail-policy runs never requeue."""
+    from repro.scenario import run
+    scenario = _chaos_cell(kind, on_crash)
+    res = run(scenario, backend=backend, timeout=120)
+    n = scenario.workload.num_requests
+    assert res.num_requests + res.requests_failed == n, (
+        f"conservation violated: {res.num_requests} completed + "
+        f"{res.requests_failed} failed != {n} submitted")
+    kinds = {e[0] for e in res.faults_injected}
+    if kind == "crash":
+        assert {"crash", "respawn"} <= kinds
+        hit = (res.requests_requeued if on_crash == "requeue"
+               else res.requests_failed)
+        assert hit == 1, "the preset crash instant is mid-decode"
+    elif kind == "straggler":
+        assert {"straggle", "straggle_end"} <= kinds
+        assert res.num_requests == n
+    else:
+        assert {"reclaim", "reclaim_kill", "respawn"} <= kinds
+        hit = (res.requests_requeued if on_crash == "requeue"
+               else res.requests_failed)
+        assert hit == 1, "the notice window is too short to drain"
+    if on_crash == "fail":
+        assert res.requests_requeued == 0
+    # each completion measured exactly once in the audit trail
+    assert len(res.latencies) == res.num_requests
+
+
+@pytest.mark.timeout(300)
+@pytest.mark.parametrize("preset", ["crash_recovery", "chaos_spot"])
+def test_chaos_preset_three_way_parity(preset):
+    """The acceptance bar: both chaos presets through thread / process /
+    DES must produce the identical fault log (same faults at the same
+    virtual instants, same requeue/fail outcomes), identical routing
+    decisions, and latencies within one slow-step.  ``compare`` raises
+    ParityError on any divergence."""
+    from repro.scenario import compare, get_preset
+    cres = compare(get_preset(preset),
+                   backends=("thread", "process", "des"), timeout=240)
+    assert cres.faults_equal and cres.decisions_equal
+    assert cres.max_err_steps <= 1.0
+    logs = [tuple(r.faults_injected) for r in cres.results.values()]
+    assert len(set(logs)) == 1 and logs[0], "fault logs must match exactly"
+
+
+@pytest.mark.timeout(180)
+@pytest.mark.parametrize("on_crash", ["requeue", "fail"])
+def test_process_backend_sigkill_exact_tokens(on_crash):
+    """Crash on the process backend is a real SIGKILL of the replica child;
+    the parent recovers in-flight requests from its submission ledger and
+    the run still completes with exact token counts — no lost and no
+    duplicated completions."""
+    cluster = build_cluster(MODEL, small_cfg(), 2,
+                            predictor=StaticPredictor(5e-3),
+                            backend="process")
+    try:
+        cluster.start()
+        reqs = small_workload(n=12, qps=500.0, seed=7)
+        ids = {r.request_id for r in reqs}
+        for r in reqs:
+            cluster.submit(r)
+        out = cluster.crash_replica(1, on_crash=on_crash)
+        assert out["crashed"], "child must be killable mid-run"
+        # the child OS process is really gone (SIGKILL, not a drain)
+        assert not cluster.replicas[1].proc.is_alive()
+        assert cluster.wait_until_complete(len(reqs), timeout=120)
+        finished = list(cluster.finished)
+        failed = list(cluster.failed)
+        fids = [r.request_id for r in finished]
+        assert len(fids) == len(set(fids)), "duplicate completion"
+        assert len(finished) + len(failed) == len(reqs)
+        assert set(fids) | {r.request_id for r in failed} == ids
+        assert not (set(fids) & {r.request_id for r in failed})
+        for r in finished:
+            assert r.num_generated == r.max_new_tokens
+        if on_crash == "requeue":
+            assert not failed and out["requeued"] > 0
+        else:
+            assert len(failed) == out["failed"] > 0
+    finally:
+        cluster.shutdown()
+
+
+def test_crash_while_draining_not_refinalized_or_double_billed():
+    """Regression: a replica that crashes *while draining* must (a) leave
+    the drain ledger so later completions never re-finalize it, (b) never
+    be a future drain victim, and (c) close its billing window exactly once
+    at the crash instant.  Engines are deliberately not started, so the
+    in-flight set at drain time is deterministic."""
+    cluster = build_cluster(MODEL, small_cfg(), 3,
+                            predictor=StaticPredictor(5e-3))
+    try:
+        reqs = small_workload(n=6, qps=1000.0, seed=5)
+        for r in reqs:
+            cluster.submit(r)               # round robin: 2 per replica
+        cluster.drain_replica(1)
+        assert 1 in cluster._draining, "drain must be pending (in-flight)"
+        out = cluster.crash_replica(1, on_crash="requeue")
+        assert out["crashed"] and out["requeued"] == 2
+        assert 1 not in cluster._draining
+        m_crash = cluster.membership_events()[1]
+        assert m_crash["drained"] is not None
+        # (a) delivering the requeued work's completions later must not
+        # re-finalize the membership record
+        cluster._drain_progress(reqs)
+        assert cluster.membership_events()[1] == m_crash
+        # (b) gone from the routing set -> drain_victim can't pick it
+        assert 1 not in cluster.active
+        victim = drain_victim(cluster.active, idle_of=lambda i: True,
+                              cost_of=lambda i: 1.0)
+        assert victim != 1
+        # (c) billed exactly once: replica 1's window closes at the crash
+        # stamp, so a window starting there bills only the two survivors —
+        # a leaked drain ledger entry would bill it through the window end
+        t_crash = m_crash["drained"]
+        assert cluster.replica_seconds(t_crash, t_crash + 10.0) == \
+            pytest.approx(20.0)
+    finally:
+        cluster.shutdown()
+
+
+@pytest.mark.timeout(180)
+def test_crash_while_draining_parity_and_single_billing():
+    """The chaos_spot reclaim IS a crash-while-draining (drain notice too
+    short, kill lands mid-decode): thread and DES must agree on the drain
+    record (victim drained exactly once) and bill the same replica-seconds
+    and dollars — double-counting a crashed-while-draining replica would
+    show up as a cost divergence."""
+    from repro.scenario import compare, get_preset
+    cres = compare(get_preset("chaos_spot"), backends=("thread", "des"),
+                   timeout=120)
+    thread, des = cres.results["thread"], cres.results["des"]
+    kill = next(e for e in thread.faults_injected
+                if e[0] == "reclaim_kill")
+    assert kill[5], "the reclaim kill must land mid-drain (crashed=True)"
+    assert thread.drained == des.drained
+    assert thread.drained.count(2) == 1, "victim finalized exactly once"
+    assert thread.replica_seconds == pytest.approx(des.replica_seconds,
+                                                   rel=1e-9)
+    assert thread.cost_dollars == pytest.approx(des.cost_dollars, rel=1e-9)
 
 
 # =========================================================================
