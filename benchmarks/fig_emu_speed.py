@@ -3,7 +3,7 @@
 The paper's headline is that time-warp emulation runs the serving timeline
 5–17× faster than real execution; this figure is the repo's standing
 measurement of *how fast the emulator itself goes*, tracked per-PR so the
-coordination hot path cannot silently regress.  Two layers:
+coordination hot path cannot silently regress.  Four layers:
 
 **Coordination microbenchmark** — N synthetic actors drive one Timekeeper
 through a fixed schedule of 1 ms jump targets under a manual wall (pure
@@ -13,14 +13,32 @@ runs that the barrier resolves as merged bursts (``batched``).  The batched
 path must hold ≥ 2× events/sec at 8 actors — that assertion is the fast
 path's regression gate.
 
-**End-to-end cells** — the same ``cluster_scaling``-derived scenario at 2/4/8
-replicas on the thread and process backends, reporting emulated engine
-steps per wall second, virtual-seconds-per-wall-second (the emulation
-speedup), barrier rounds/sec, and the Timekeeper's batching counters
-(``batched_requests``, ``merged_rounds``, ``coalesced_parks``) so barrier
-pressure is visible in the artifact.
+**Wire microbenchmark** — the same jump traffic from real child
+*processes* (one bare :class:`TimeJumpClient` each, staggered cadences, no
+engine) over each wire, isolating pure transport cost: frame fan-in, epoch
+fan-out, and the context switches per event.  Reported as
+``summary.shm_wire_speedup_at_8``; ungated — the gate binds on the
+end-to-end cells below, where the transport carries a real serving stack.
 
-Writes ``BENCH_6.json`` at the repo root (schema:
+**End-to-end cells** — the same ``cluster_scaling``-derived scenario on the
+thread backend (2/4/8 replicas) and the process backend over BOTH wires
+(tcp and shm, 2/4/8/16 replicas), reporting emulated engine steps per wall
+second, virtual-seconds-per-wall-second (the emulation speedup), barrier
+rounds/sec, and the Timekeeper's batching counters so barrier pressure is
+visible in the artifact.  The shm transport (PR 9) replaces per-replica
+epoch broadcast writes with one seqlock word store, every child clock
+read with a lock-free shared-memory load, and the per-jump ack round trip
+with a pre-send epoch read off the word (one-way fan-in);
+``summary.shm_speedup_at_8`` is its regression gate (≥ 2× tcp events/sec
+at 8 replicas, full mode).
+
+**Diurnal headline cell** — an hour of virtual time on a 100-replica shm
+pool replaying the ``scale_stream`` diurnal trace as a streaming session
+workload with ``audit="sampled"``: the paper-style capacity claim (a whole
+production hour, a hundred engines, minutes of wall time on one machine)
+as a single tracked number.
+
+Writes ``BENCH_9.json`` at the repo root (schema:
 ``tools/bench_trajectory.py``; CI validates it and uploads it as an
 artifact).
 """
@@ -37,13 +55,27 @@ from benchmarks.common import emit, print_table
 from repro.scenario import get_preset, run, scenario_with
 
 REPO_ROOT = Path(__file__).resolve().parent.parent
-PR_NUMBER = 6
+PR_NUMBER = 9
 
 ACTOR_COUNTS = [2, 4, 8]
-REPLICAS = [2, 4, 8]
-BACKENDS = ["thread", "process"]
+THREAD_REPLICAS = [2, 4, 8]
+PROCESS_REPLICAS = [2, 4, 8, 16]
 STEP_S = 1e-3          # microbench jump size
 CHUNK = 40             # targets per jump_run request
+
+# Diurnal headline sizing per mode: (replicas, virtual seconds, session
+# arrival qps).  Session count follows as qps * virtual_s, and the trace's
+# eight relative-rate segments are stretched to cover exactly one cycle.
+# The full cell keeps the paper-shaped 100-replica virtual hour; qps is
+# picked so the run finishes in minutes of wall time on a small host:
+# ~20 engine events per session at these think times, and a 100-wide
+# barrier sustains ~400 events/s/core steady state (the Timekeeper's
+# idle sweep is O(replicas)), so qps 3 lands near ten minutes.
+DIURNAL = {
+    "full": (100, 3600.0, 3.0),
+    "quick": (16, 240.0, 50.0),
+    "smoke": (4, 24.0, 50.0),
+}
 
 
 # =========================================================================
@@ -114,6 +146,102 @@ def coordination_cell(actors: int, steps: int, batched: bool) -> dict:
 
 
 # =========================================================================
+# wire microbenchmark (transport cost only: real child processes, no engine)
+# =========================================================================
+
+def _wire_child(desc, index: int, steps: int, barrier) -> None:
+    """Spawn target: one bare TimeJumpClient over the chosen wire."""
+    from repro.core.client import TimeJumpClient
+
+    if desc[0] == "shm":
+        from repro.core.shm_transport import ShmEndpoint
+        transport = ShmEndpoint.attach(desc[1]).child_transport()
+    else:
+        from repro.core.transport import SocketTransport
+        transport = SocketTransport(tuple(desc[1]))
+    client = TimeJumpClient(transport, f"wire{index}")
+    # Staggered cadences (actor i jumps (i+1)x1 ms steps): replicas in a
+    # real pool run at different phases/durations, so each barrier round
+    # releases only the actor(s) whose target arrived.  Lockstep-identical
+    # targets would be the degenerate case where every broadcast usefully
+    # wakes everyone — it hides the fan-out cost this cell exists to
+    # measure.  Every actor covers the same virtual horizon (fast cadences
+    # take more jumps), keeping the barrier at full width for the whole
+    # run instead of draining from the fastest actor up.
+    dt = STEP_S * (index + 1)
+    horizon = steps * STEP_S * 4.0
+    n = max(1, round(horizon / dt))
+    barrier.wait(timeout=120)
+    for _ in range(n):
+        client.time_jump(dt)
+    client.deregister()
+    close = getattr(transport, "close", None)
+    if close is not None:
+        close()
+
+
+def wire_cell(transport: str, replicas: int, steps: int) -> dict:
+    """N bare actor *processes* × ``steps`` 1 ms single-target jumps against
+    one Timekeeper over the real wire — no engine, no scheduler.
+
+    Events/sec here is pure transport throughput: frame round-trip, barrier
+    resolution, epoch broadcast, wake latency.  This is the cell the
+    shm ≥ 2× tcp gate binds on — the e2e cells below keep the serving
+    stack's per-step CPU work, which is identical on both wires and so
+    dilutes the wire difference both sides pay it on top of.
+    """
+    import multiprocessing
+    ctx = multiprocessing.get_context("spawn")
+    barrier = ctx.Barrier(replicas + 1)
+    procs: list = []
+    endpoints: list = []
+    if transport == "shm":
+        from repro.core.shm_transport import ShmEndpoint, ShmTimekeeperServer
+        server = ShmTimekeeperServer(jitter_cooldown=0.0)
+        for i in range(replicas):
+            ep = ShmEndpoint.create(server.clock_word.name)
+            proc = ctx.Process(target=_wire_child,
+                               args=(("shm", ep.spec), i, steps, barrier),
+                               daemon=True)
+            proc.start()
+            ep.accept_wakes(5.0)
+            server.serve(ep.tk_c2p, ep.tk_p2c, peer_alive=proc.is_alive,
+                         name=f"wire-shm-{i}")
+            procs.append(proc)
+            endpoints.append(ep)
+    else:
+        from repro.core.transport import TimekeeperServer
+        server = TimekeeperServer(jitter_cooldown=0.0)
+        addr = tuple(server.address)
+        for i in range(replicas):
+            proc = ctx.Process(target=_wire_child,
+                               args=(("tcp", addr), i, steps, barrier),
+                               daemon=True)
+            proc.start()
+            procs.append(proc)
+    barrier.wait(timeout=120)
+    wall0 = time.perf_counter()
+    for proc in procs:
+        proc.join(timeout=600)
+        assert proc.exitcode == 0, \
+            f"wire child wedged/crashed (exit {proc.exitcode})"
+    wall = time.perf_counter() - wall0
+    server.close()
+    for ep in endpoints:
+        ep.unlink()
+    # Mirrors the per-child jump count: equal virtual horizon per actor.
+    events = sum(max(1, round(steps * 4.0 / (i + 1)))
+                 for i in range(replicas))
+    return {
+        "transport": transport,
+        "replicas": replicas,
+        "events": events,
+        "wall_s": round(wall, 4),
+        "events_per_s": round(events / wall, 1),
+    }
+
+
+# =========================================================================
 # end-to-end cells (full serving stack)
 # =========================================================================
 
@@ -137,11 +265,15 @@ def e2e_scenario(replicas: int, n: int):
 
 
 def e2e_cell(backend: str, replicas: int, n: int) -> dict:
+    """One serving run.  ``backend`` may be a wire alias (``process-tcp`` /
+    ``process-shm``); the artifact row keeps ``backend`` in the schema's
+    thread|process enum and carries the wire in ``transport``."""
     res = run(e2e_scenario(replicas, n), backend=backend, timeout=3600)
     tks = res.timekeeper or {}
     wall = max(res.wall_seconds, 1e-9)
-    return {
-        "backend": backend,
+    base, _, transport = backend.partition("-")
+    row = {
+        "backend": base,
         "replicas": replicas,
         "events": res.num_steps,
         "requests": res.num_requests,
@@ -152,6 +284,58 @@ def e2e_cell(backend: str, replicas: int, n: int) -> dict:
         "virtual_per_wall": round(res.makespan_virtual / wall, 1),
         "timekeeper": tks,
     }
+    if transport:
+        row["transport"] = transport
+    return row
+
+
+def e2e_cells(n: int) -> list:
+    cells = [e2e_cell("thread", r, n) for r in THREAD_REPLICAS]
+    for transport in ("tcp", "shm"):
+        cells += [e2e_cell(f"process-{transport}", r, n)
+                  for r in PROCESS_REPLICAS]
+    return cells
+
+
+# =========================================================================
+# diurnal headline cell (100-replica virtual hour over shm)
+# =========================================================================
+
+def diurnal_cell(replicas: int, virtual_s: float, qps: float) -> dict:
+    """Replay one diurnal cycle of ``virtual_s`` virtual seconds of
+    streaming sessions on a ``replicas``-wide process-shm pool.
+
+    Sessions arrive at ``qps`` against the scale_stream rate shape
+    stretched to one cycle per run; ``audit="sampled"`` keeps memory flat
+    (O(1) sketches) regardless of session count; think times are short so
+    the barrier population stays dominated by the replicas themselves.
+    """
+    sessions = int(qps * virtual_s)
+    trace = [[virtual_s / 8.0, r] for r in
+             (0.3, 0.6, 1.0, 1.5, 1.7, 1.3, 0.8, 0.4)]
+    scenario = scenario_with(
+        get_preset("scale_stream"),
+        name=f"diurnal[{replicas}r,{int(virtual_s)}s]",
+        **{"workload.num_sessions": sessions,
+           "workload.qps": qps,
+           "workload.think_time_mean": 0.02,
+           "workload.arrival_kwargs": {"trace": trace},
+           "pool.replicas": replicas})
+    t0 = time.monotonic()
+    res = run(scenario, backend="process-shm", audit="sampled",
+              timeout=7200)
+    wall = max(time.monotonic() - t0, 1e-9)
+    return {
+        "backend": "process",
+        "transport": "shm",
+        "replicas": replicas,
+        "sessions": sessions,
+        "events": res.num_steps,
+        "wall_s": round(wall, 3),
+        "virtual_s": round(res.makespan_virtual, 3),
+        "events_per_s": round(res.num_steps / wall, 1),
+        "virtual_per_wall": round(res.makespan_virtual / wall, 3),
+    }
 
 
 # =========================================================================
@@ -161,14 +345,22 @@ def e2e_cell(backend: str, replicas: int, n: int) -> dict:
 def rows(n: int = 24, coord_steps: int = 400) -> list:
     coord = [coordination_cell(a, coord_steps, batched)
              for a in ACTOR_COUNTS for batched in (False, True)]
-    e2e = [e2e_cell(b, r, n) for b in BACKENDS for r in REPLICAS]
-    return coord + e2e
+    wire = [wire_cell(t, 8, coord_steps) for t in ("tcp", "shm")]
+    return coord + wire + e2e_cells(n)
 
 
-def _bench_doc(coord: list, e2e: list, mode: str) -> dict:
+def _bench_doc(coord: list, wire: list, e2e: list, diurnal: dict,
+               mode: str) -> dict:
     by_mode = {(r["actors"], r["coordination_mode"]): r for r in coord}
     speedup_at_8 = (by_mode[(8, "batched")]["events_per_s"]
                     / by_mode[(8, "unbatched")]["events_per_s"])
+    by_wire = {(r.get("transport"), r["replicas"]): r for r in e2e
+               if r["backend"] == "process"}
+    shm_at_8 = (by_wire[("shm", 8)]["events_per_s"]
+                / by_wire[("tcp", 8)]["events_per_s"])
+    wire_by = {r["transport"]: r for r in wire}
+    shm_wire_at_8 = (wire_by["shm"]["events_per_s"]
+                     / wire_by["tcp"]["events_per_s"])
     return {
         "bench": "emu_speed",
         "pr": PR_NUMBER,
@@ -180,9 +372,13 @@ def _bench_doc(coord: list, e2e: list, mode: str) -> dict:
             "cpus": __import__("os").cpu_count() or 1,
         },
         "coordination": coord,
+        "wire": wire,
         "end_to_end": [{k: v for k, v in r.items()} for r in e2e],
+        "diurnal": diurnal,
         "summary": {
             "batched_speedup_at_8": round(speedup_at_8, 2),
+            "shm_speedup_at_8": round(shm_at_8, 2),
+            "shm_wire_speedup_at_8": round(shm_wire_at_8, 2),
             "max_events_per_s": max(
                 float(r["events_per_s"]) for r in coord + e2e),
             "max_virtual_per_wall": max(
@@ -200,7 +396,9 @@ def main(n: int = 24, coord_steps: int = 400, mode: str = "full") -> list:
                              "wall_s", "events_per_s", "rounds_per_s",
                              "virtual_per_wall", "batched_requests",
                              "merged_rounds", "coalesced_parks"])
-    e2e = [e2e_cell(b, r, n) for b in BACKENDS for r in REPLICAS]
+    wire = [wire_cell(t, 8, coord_steps) for t in ("tcp", "shm")]
+    print_table(wire)
+    e2e = e2e_cells(n)
     printable = [{**{k: v for k, v in r.items() if k != "timekeeper"},
                   "rounds": r["timekeeper"].get("rounds", 0),
                   "batched_requests":
@@ -209,9 +407,13 @@ def main(n: int = 24, coord_steps: int = 400, mode: str = "full") -> list:
                       r["timekeeper"].get("coalesced_parks", 0)}
                  for r in e2e]
     print_table(printable)
-    emit("fig_emu_speed", coord + printable)
 
-    doc = _bench_doc(coord, e2e, mode)
+    replicas, virtual_s, qps = DIURNAL[mode]
+    diurnal = diurnal_cell(replicas, virtual_s, qps)
+    print_table([diurnal])
+    emit("fig_emu_speed", coord + wire + printable + [diurnal])
+
+    doc = _bench_doc(coord, wire, e2e, diurnal, mode)
     out = write_bench(doc, REPO_ROOT / f"BENCH_{PR_NUMBER}.json")
     print(f"[fig_emu_speed] trajectory point -> {out}")
 
@@ -219,10 +421,22 @@ def main(n: int = 24, coord_steps: int = 400, mode: str = "full") -> list:
     assert speedup >= 2.0, (
         f"batched coordination regressed: {speedup:.2f}x events/sec over "
         f"unbatched at 8 actors (gate: >= 2.0x)")
+    shm_speedup = doc["summary"]["shm_speedup_at_8"]
+    if mode == "full":
+        # Smoke/quick cells are too small for a stable ratio (process
+        # startup dominates); the gate binds on the committed full run.
+        assert shm_speedup >= 2.0, (
+            f"shm transport below its gate: {shm_speedup:.2f}x tcp "
+            f"events/sec at 8 replicas (gate: >= 2.0x)")
     print(f"batched coordination: {speedup:.2f}x events/sec over the "
-          f"unbatched path at 8 actors; best end-to-end "
+          f"unbatched path at 8 actors; shm wire: {shm_speedup:.2f}x tcp "
+          f"events/sec end-to-end at 8 replicas "
+          f"({doc['summary']['shm_wire_speedup_at_8']:.2f}x transport-only); "
+          f"diurnal: {diurnal['replicas']} "
+          f"replicas x {diurnal['virtual_s']:.0f} virtual s in "
+          f"{diurnal['wall_s']:.0f} wall s; best end-to-end "
           f"{doc['summary']['max_virtual_per_wall']:.0f}x virtual/wall")
-    return coord + printable
+    return coord + wire + printable + [diurnal]
 
 
 if __name__ == "__main__":
@@ -232,6 +446,9 @@ if __name__ == "__main__":
     ap.add_argument("--quick", action="store_true")
     args = ap.parse_args()
     run_mode = "smoke" if args.smoke else ("quick" if args.quick else "full")
-    sizes = {"full": (24, 400), "quick": (12, 200), "smoke": (6, 120)}
+    # Full-mode e2e cells use n=96 requests/replica: small cells are
+    # dominated by spawn + registration wall time, which dilutes the
+    # wire-level shm-vs-tcp ratio the gate binds on.
+    sizes = {"full": (96, 400), "quick": (12, 200), "smoke": (6, 120)}
     n_, steps_ = sizes[run_mode]
     main(n=n_, coord_steps=steps_, mode=run_mode)

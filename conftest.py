@@ -1,0 +1,16 @@
+"""Repo-root pytest bootstrap: never write bytecode during test runs.
+
+Stale ``__pycache__`` dirs under ``src/`` shadow source edits (an old
+``.pyc`` with a matching mtime wins over the file you just changed) and
+keep sneaking back in.  Tier-1 enforces their absence
+(``tests/test_hygiene.py``); this conftest makes the enforcement
+self-consistent by ensuring the test run itself — including spawned
+replica children, which inherit the environment variable — never creates
+what the hygiene test would then flag.
+"""
+
+import os
+import sys
+
+sys.dont_write_bytecode = True
+os.environ["PYTHONDONTWRITEBYTECODE"] = "1"

@@ -791,16 +791,20 @@ def build_cluster(
     router_kwargs: Optional[dict] = None,
     warm_replicas: Optional[int] = None,
     name: str = "cluster",
+    transport: str = "tcp",
 ):
     """Wire N replica engines onto one shared Timekeeper + router.
 
     ``backend`` picks where replicas run: ``"thread"`` (default) keeps every
     engine in this process on a directly shared clock; ``"process"`` runs
-    each replica engine in its own OS process wired to a
-    :class:`~repro.core.transport.TimekeeperServer` over framed TCP
-    (``warm_replicas`` pre-spawns standby processes the autoscaler can
-    activate without paying process-start wall time mid-run; emulate mode
-    only, and ``wall`` must stay host-shared, i.e. None).
+    each replica engine in its own OS process wired to the parent's
+    Timekeeper server (``warm_replicas`` pre-spawns standby processes the
+    autoscaler can activate without paying process-start wall time mid-run;
+    emulate mode only, and ``wall`` must stay host-shared, i.e. None).
+    ``transport`` picks the process backend's wire — ``"tcp"`` (framed
+    sockets) or ``"shm"`` (shared-memory rings + seqlock clock word,
+    :mod:`repro.core.shm_transport`); the thread backend, which has no
+    wire, ignores it.
 
     ``engine_cfg`` may be a single config (homogeneous replicas) or one per
     replica (heterogeneous — e.g. differently-sized prefill/decode pools).
@@ -876,7 +880,7 @@ def build_cluster(
             default_tier=default_tier, cluster_cfg=cluster_cfg,
             tier_specs=tier_specs, tier_spec_factory=spec_factory,
             jitter_cooldown=jitter_cooldown,
-            warm_replicas=warm_replicas, name=name)
+            warm_replicas=warm_replicas, name=name, transport=transport)
 
     assert backend == "thread", \
         f"unknown cluster backend {backend!r} (thread | process)"

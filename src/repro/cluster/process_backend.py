@@ -2,26 +2,40 @@
 
 This is the deployment shape the paper's coordination protocol exists for:
 every replica's :class:`~repro.serving.engine.LLMEngine` runs in its **own
-OS process**, its worker actor wired to the parent's
-:class:`~repro.core.transport.TimekeeperServer` over the framed-TCP
-protocol.  The engine, runner, and :class:`~repro.core.client.TimeJumpClient`
-code are byte-identical to the in-process thread backend — only the
-``ActorTransport`` underneath changes (``SocketTransport`` with a
-broadcast-driven replica clock instead of ``LocalTransport`` on the shared
-clock object).
+OS process**, its worker actor wired to the parent's Timekeeper server.
+The engine, runner, and :class:`~repro.core.client.TimeJumpClient` code are
+byte-identical to the in-process thread backend — only the
+``ActorTransport`` underneath changes.
+
+Two wire transports carry the same protocol (``transport=`` on
+:func:`build_process_cluster`):
+
+* ``"tcp"`` — framed TCP: :class:`~repro.core.transport.TimekeeperServer`
+  + ``SocketTransport`` for the time plane, a pickle-framed socket per
+  replica for the control plane.
+* ``"shm"`` — shared memory (:mod:`repro.core.shm_transport`): a seqlock
+  clock word makes every child clock read a zero-syscall load and epoch
+  broadcast a single word write; per-replica SPSC rings carry the identical
+  fan-in and control ops.
+
+Both planes run over the same duck-typed channel surface
+(``send_obj``/``recv_obj``/``mark_peer_dead``/``close`` —
+:class:`SocketChannel` here, :class:`~repro.core.shm_transport.ShmChannel`
+there), so ``ProcessReplicaHandle`` and ``_ReplicaServer`` run unchanged
+protocol logic over either.
 
 Topology (one parent, N children)::
 
     parent process                          child process i
     ──────────────                          ───────────────
-    TimekeeperServer ◄────framed TCP────►  SocketTransport ── TimeJumpClient
+    Timekeeper server ◄───tcp | shm─────►  ActorTransport ── TimeJumpClient
     LocalTransport (dispatcher, think        │                     │
       actors, autoscaler ticks)              │              TimeWarpModelRunner
     ProcessCluster                           │                     │
       └─ ProcessReplicaHandle ◄──control──► _ReplicaServer ─── LLMEngine
               (route/submit/probe/drain)       (command loop)
 
-Control protocol (length-prefixed pickle frames, one socket per replica;
+Control protocol (length-prefixed pickle frames, one channel per replica;
 requests carry a ``rid`` echoed by the reply):
 
 ==================  =====================================================
@@ -87,12 +101,15 @@ from .cluster import ClusterBase, ClusterConfig
 from .router import Router
 from .tiers import TierSpec
 
-__all__ = ["ProcessCluster", "ProcessReplicaHandle", "build_process_cluster"]
+__all__ = ["ProcessCluster", "ProcessReplicaHandle", "SocketChannel",
+           "build_process_cluster"]
 
 _LEN = struct.Struct(">I")
 _HANDSHAKE_TIMEOUT = 120.0      # spawn + interpreter boot + numpy import
 _RPC_TIMEOUT = 60.0
 _ACK_TIMEOUT = 60.0
+
+TRANSPORTS = ("tcp", "shm")
 
 
 def _send_obj(writer: FrameWriter, obj: dict) -> None:
@@ -129,6 +146,38 @@ def _recv_obj(sock: socket.socket) -> Optional[dict]:
     return pickle.loads(body)
 
 
+class SocketChannel:
+    """Control channel over one TCP socket (the duck type ``ShmChannel``
+    mirrors): ``send_obj`` raises :class:`OSError` on a dead peer,
+    ``recv_obj`` returns None at EOF.  ``mark_peer_dead`` is a no-op — the
+    kernel delivers EOF for a SIGKILLed peer on its own."""
+
+    def __init__(self, sock: socket.socket):
+        self.sock = sock
+        self.writer = FrameWriter(sock)
+
+    def send_obj(self, obj: dict) -> None:
+        _send_obj(self.writer, obj)
+
+    def recv_obj(self, timeout: Optional[float] = None) -> Optional[dict]:
+        if timeout is not None:
+            self.sock.settimeout(timeout)
+            try:
+                return _recv_obj(self.sock)
+            finally:
+                self.sock.settimeout(None)
+        return _recv_obj(self.sock)
+
+    def mark_peer_dead(self) -> None:
+        pass
+
+    def close(self) -> None:
+        try:
+            self.sock.close()
+        except OSError:
+            pass
+
+
 @dataclass
 class _EngineSpec:
     """Everything a child needs to build its replica engine (all picklable)."""
@@ -144,13 +193,18 @@ class _EngineSpec:
 # =========================================================================
 
 class _ReplicaServer:
-    """Runs inside the child: one engine + the control-socket command loop."""
+    """Runs inside the child: one engine + the control-channel command loop.
 
-    def __init__(self, ctrl: socket.socket, tk_addr: tuple, index: int):
-        self.ctrl = ctrl
-        self.tk_addr = tuple(tk_addr)
+    Transport-agnostic: ``chan`` is any control channel (socket or shm) and
+    ``transport_factory`` builds the matching ``ActorTransport`` lazily, at
+    engine activation — warm standbys stay engine-less and transport-less.
+    """
+
+    def __init__(self, chan, transport_factory: Callable[[], object],
+                 index: int):
+        self.chan = chan
+        self.transport_factory = transport_factory
         self.index = index
-        self.writer = FrameWriter(ctrl)
         self.engine = None
         self.transport = None
         self.worker_client = None
@@ -164,12 +218,11 @@ class _ReplicaServer:
         from repro.core.client import TimeJumpClient
         from repro.core.emulation import VirtualDeviceContext
         from repro.core.hardware import get_chip
-        from repro.core.transport import SocketTransport
         from repro.serving.engine import LLMEngine
         from repro.serving.model_runner import TimeWarpModelRunner
 
         if self.transport is None:
-            self.transport = SocketTransport(self.tk_addr)
+            self.transport = self.transport_factory()
         cfg = spec.engine_cfg
         chip = get_chip(cfg.chip)
         n_dev = cfg.tp * cfg.pp
@@ -195,8 +248,8 @@ class _ReplicaServer:
         with self._ack_lock:
             self._ack_events[cid] = ev
         try:
-            _send_obj(self.writer,
-                      {"op": "complete", "cid": cid, "reqs": finished})
+            self.chan.send_obj({"op": "complete", "cid": cid,
+                                "reqs": finished})
         except OSError:
             return                        # parent died: nothing to wait for
         # Block the step thread until the parent has run every completion
@@ -220,7 +273,7 @@ class _ReplicaServer:
         cmd_thread.start()
         try:
             while True:
-                msg = _recv_obj(self.ctrl)
+                msg = self.chan.recv_obj()
                 if msg is None:
                     break                    # parent gone
                 if msg["op"] == "complete_ack":
@@ -251,10 +304,7 @@ class _ReplicaServer:
                     pass
             if self.transport is not None:
                 self.transport.close()
-            try:
-                self.ctrl.close()
-            except OSError:
-                pass
+            self.chan.close()
 
     def _cmd_loop(self) -> None:
         while True:
@@ -272,7 +322,7 @@ class _ReplicaServer:
                 continue                     # fire-and-forget op
             reply["rid"] = rid
             try:
-                _send_obj(self.writer, reply)
+                self.chan.send_obj(reply)
             except OSError:
                 return
 
@@ -319,12 +369,32 @@ class _ReplicaServer:
         return {"op": "error", "error": f"unknown op {op!r}"}
 
 
-def _replica_main(ctrl_addr, tk_addr, index: int) -> None:
-    """Child process entry point (multiprocessing ``spawn`` target)."""
-    ctrl = socket.create_connection(tuple(ctrl_addr))
-    ctrl.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
-    server = _ReplicaServer(ctrl, tk_addr, index)
-    _send_obj(server.writer, {"op": "hello", "replica": index})
+def _replica_main(ctrl_desc, tk_desc, index: int) -> None:
+    """Child process entry point (multiprocessing ``spawn`` target).
+
+    Descriptors are ``(kind, payload)`` pairs: ``("tcp", address)`` dials
+    sockets; ``("shm", ShmEndpointSpec)`` attaches the pre-created segment —
+    the control channel and the timekeeper ring pair live in the same
+    endpoint, so both descriptors carry the same spec.
+    """
+    kind, payload = ctrl_desc
+    if kind == "shm":
+        from repro.core.shm_transport import ShmEndpoint
+        endpoint = ShmEndpoint.attach(payload)
+        chan = endpoint.child_channel()
+        transport_factory = endpoint.child_transport
+    else:
+        ctrl = socket.create_connection(tuple(payload))
+        ctrl.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        chan = SocketChannel(ctrl)
+        tk_addr = tuple(tk_desc[1])
+
+        def transport_factory():
+            from repro.core.transport import SocketTransport
+            return SocketTransport(tk_addr)
+
+    server = _ReplicaServer(chan, transport_factory, index)
+    chan.send_obj({"op": "hello", "replica": index})
     server.run()
 
 
@@ -341,15 +411,20 @@ class ProcessReplicaHandle:
     racy-read semantics they see on the thread backend.  ``in_flight_ids``
     is parent-side bookkeeping (submits minus completion frames) — exact,
     because completions are the parent's own observation point.
+
+    ``reclaim`` (shm transport) releases the child's shared-memory segment
+    name once the child is gone — called after a graceful shutdown AND after
+    a SIGKILL's ledger drain, so crash faults cannot leak segments.
     """
 
-    def __init__(self, index: int, conn: socket.socket, proc):
+    def __init__(self, index: int, chan, proc, *,
+                 reclaim: Optional[Callable[[], None]] = None):
         self.index = index
-        self.conn = conn
+        self.chan = chan
         self.proc = proc
+        self._reclaim = reclaim
         self.name = f"replica-{index}"
         self.on_complete: Optional[Callable[[List[Request]], None]] = None
-        self._writer = FrameWriter(conn)
         self._replies: Dict[int, "queue.Queue[dict]"] = {}
         self._replies_lock = threading.Lock()
         self._rid = itertools.count()
@@ -378,7 +453,7 @@ class ProcessReplicaHandle:
         # stall instead of an immediate TransportClosed.
         try:
             while True:
-                msg = _recv_obj(self.conn)
+                msg = self.chan.recv_obj()
                 if msg is None:
                     break
                 if msg["op"] == "complete":
@@ -394,9 +469,8 @@ class ProcessReplicaHandle:
                         # listeners have run, follow-up actors are
                         # registered, the replica may re-enter the barrier.
                         try:
-                            _send_obj(self._writer,
-                                      {"op": "complete_ack",
-                                       "cid": msg["cid"]})
+                            self.chan.send_obj({"op": "complete_ack",
+                                                "cid": msg["cid"]})
                         except OSError:
                             pass
                     continue
@@ -424,7 +498,7 @@ class ProcessReplicaHandle:
             self._replies[rid] = q
         try:
             try:
-                _send_obj(self._writer, msg)
+                self.chan.send_obj(msg)
             except OSError as e:
                 raise TransportClosed(f"{self.name}: {e}") from None
             try:
@@ -442,7 +516,7 @@ class ProcessReplicaHandle:
 
     def _send_oneway(self, msg: dict) -> None:
         try:
-            _send_obj(self._writer, msg)
+            self.chan.send_obj(msg)
         except OSError:
             pass
 
@@ -536,7 +610,11 @@ class ProcessReplicaHandle:
         3. join the reader to EOF: completion frames already on the wire
            (steps that finished *before* the crash instant) still land, so
            the ledger handed back is exact — submits minus every completion
-           the dead replica actually delivered.
+           the dead replica actually delivered.  TCP gets the EOF from the
+           kernel; shm gets it from ``mark_peer_dead`` (the ring drains
+           committed frames first, same exactness);
+        4. reclaim the shm segment — a SIGKILLed child can never unlink
+           anything itself.
         """
         self.retired = True
         if self.activated and not self.stopped:
@@ -548,24 +626,26 @@ class ProcessReplicaHandle:
         self.stopped = True
         self.proc.kill()
         self.proc.join(timeout=30.0)
+        self.chan.mark_peer_dead()
         self._reader.join(timeout=30.0)
         assert not self._reader.is_alive(), \
             f"{self.name}: reader failed to reach EOF after SIGKILL"
         with self._in_flight_lock:
             victims = list(self._in_flight.values())
             self._in_flight.clear()
+        if self._reclaim is not None:
+            self._reclaim()
         return victims
 
     def shutdown(self, timeout: float = 10.0) -> None:
         self._send_oneway({"op": "shutdown"})
-        try:
-            self.conn.close()
-        except OSError:
-            pass
+        self.chan.close()
         self.proc.join(timeout=timeout)
         if self.proc.is_alive():
             self.proc.terminate()
             self.proc.join(timeout=5.0)
+        if self._reclaim is not None:
+            self._reclaim()
 
     # ----------------------------------------------------------- accounting --
     def stats(self) -> dict:
@@ -615,7 +695,7 @@ class ProcessCluster(ClusterBase):
         handles: List[ProcessReplicaHandle],
         router: Router,
         *,
-        server: TimekeeperServer,
+        server,            # TimekeeperServer | ShmTimekeeperServer
         warm_pool: List[ProcessReplicaHandle],
         spec_of: Callable[[int, Optional[str]], _EngineSpec],
         spawn_replica: Callable[[int], ProcessReplicaHandle],
@@ -624,8 +704,12 @@ class ProcessCluster(ClusterBase):
         model_cfg: Optional[ModelConfig] = None,
         tier_specs: Optional[Dict[str, TierSpec]] = None,
         tier_spec_factory=None,
+        transport: str = "tcp",
     ):
         self.server = server
+        # NB: ClusterBase.transport is the parent-side ActorTransport object;
+        # the wire-transport *kind* gets its own name.
+        self.transport_kind = transport
         self._warm_pool = list(warm_pool)
         self._spec_of = spec_of
         self._spawn_replica = spawn_replica
@@ -686,6 +770,7 @@ class ProcessCluster(ClusterBase):
     def stats(self) -> dict:
         agg = super().stats()
         agg["warm_standby"] = self.warm_available
+        agg["transport"] = self.transport_kind
         return agg
 
 
@@ -707,25 +792,64 @@ def build_process_cluster(
     jitter_cooldown: float = 0.0,
     warm_replicas: Optional[int] = None,
     name: str = "cluster",
+    transport: str = "tcp",
 ) -> ProcessCluster:
     """Spawn the Timekeeper server + child replica processes and wire them
     into a :class:`ProcessCluster`.  Called through
     :func:`repro.cluster.build_cluster` (``backend="process"``), which owns
-    the config/tier/predictor resolution shared with the thread backend."""
-    server = TimekeeperServer(jitter_cooldown=jitter_cooldown)
+    the config/tier/predictor resolution shared with the thread backend.
 
-    # Control listener: children dial back in and identify via `hello`.
-    listener = socket.create_server(("127.0.0.1", 0))
-    ctrl_addr = listener.getsockname()
+    ``transport`` selects the wire: ``"tcp"`` (framed sockets) or ``"shm"``
+    (seqlock clock word + SPSC rings, :mod:`repro.core.shm_transport`).
+    """
+    if transport not in TRANSPORTS:
+        raise ValueError(
+            f"transport={transport!r}: choose from {TRANSPORTS}")
     ctx = multiprocessing.get_context("spawn")   # parent is multi-threaded:
     # fork would duplicate it mid-lock; spawn re-imports a clean interpreter
+
+    listener = None
+    if transport == "shm":
+        from repro.core.shm_transport import ShmEndpoint, ShmTimekeeperServer
+        server = ShmTimekeeperServer(jitter_cooldown=jitter_cooldown)
+    else:
+        server = TimekeeperServer(jitter_cooldown=jitter_cooldown)
+        # Control listener: children dial back in and identify via `hello`.
+        listener = socket.create_server(("127.0.0.1", 0))
+        ctrl_addr = listener.getsockname()
 
     total = max(num_replicas, warm_replicas or 0)
 
     def spawn_replica(index: int) -> ProcessReplicaHandle:
+        if transport == "shm":
+            # The segment exists before the child does; the child only ever
+            # attaches.  The parent-side service thread and control channel
+            # poll child liveness so a SIGKILL can never wedge them.
+            endpoint = ShmEndpoint.create(server.clock_word.name)
+            proc = ctx.Process(
+                target=_replica_main,
+                args=(("shm", endpoint.spec), ("shm", endpoint.spec), index),
+                name=f"{name}-r{index}", daemon=True)
+            proc.start()
+            # Doorbell handshake: the child dials during attach; a timeout
+            # (crashed child, exotic platform) just leaves the endpoint on
+            # its bounded-poll fallback — correct either way.
+            endpoint.accept_wakes(_HANDSHAKE_TIMEOUT)
+            server.serve(endpoint.tk_c2p, endpoint.tk_p2c,
+                         peer_alive=proc.is_alive,
+                         name=f"shm-tk-r{index}")
+            chan = endpoint.parent_channel(peer_alive=proc.is_alive)
+            try:
+                hello = chan.recv_obj(timeout=_HANDSHAKE_TIMEOUT)
+            except TransportClosed:
+                hello = None
+            assert hello is not None and hello["op"] == "hello", \
+                f"replica {index} handshake failed"
+            return ProcessReplicaHandle(hello["replica"], chan, proc,
+                                        reclaim=endpoint.unlink)
         proc = ctx.Process(
             target=_replica_main,
-            args=(ctrl_addr, tuple(server.address), index),
+            args=(("tcp", ctrl_addr), ("tcp", tuple(server.address)), index),
             name=f"{name}-r{index}", daemon=True)
         proc.start()
         listener.settimeout(_HANDSHAKE_TIMEOUT)
@@ -734,7 +858,8 @@ def build_process_cluster(
         hello = _recv_obj(conn)
         assert hello is not None and hello["op"] == "hello", \
             f"replica {index} handshake failed"
-        return ProcessReplicaHandle(hello["replica"], conn, proc)
+        return ProcessReplicaHandle(hello["replica"], SocketChannel(conn),
+                                    proc)
 
     def spec_of(i: int, tier: Optional[str]) -> _EngineSpec:
         tier = tier if tier is not None else default_tier(i)
@@ -754,7 +879,8 @@ def build_process_cluster(
     except Exception:
         for h in handles + warm:
             h.shutdown(timeout=2.0)
-        listener.close()
+        if listener is not None:
+            listener.close()
         server.close()
         raise
 
@@ -762,4 +888,5 @@ def build_process_cluster(
         handles, router, server=server, warm_pool=warm, spec_of=spec_of,
         spawn_replica=spawn_replica, ctrl_listener=listener,
         cfg=cluster_cfg, model_cfg=model_cfg,
-        tier_specs=tier_specs, tier_spec_factory=tier_spec_factory)
+        tier_specs=tier_specs, tier_spec_factory=tier_spec_factory,
+        transport=transport)

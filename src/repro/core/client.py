@@ -236,7 +236,8 @@ class TimeJumpClient:
             if t_remaining > 0:
                 # Degradation timeout: worst case we ride wall time to the
                 # target (sleep-based emulation) — slow, never incorrect.
-                clock.wait_for_update(epoch, timeout=t_remaining)
+                clock.wait_for_update(epoch, timeout=t_remaining,
+                                      target=t_target)
 
     def jump_run(
         self, targets: Sequence[float], *, park_after: bool = False
@@ -333,7 +334,10 @@ class TimeJumpClient:
             if t_remaining > 0:
                 # Degradation timeout: worst case we ride wall time to the
                 # target (sleep-based emulation) — slow, never incorrect.
-                clock.wait_for_update(epoch, timeout=t_remaining)
+                # The target lets a remote clock sleep through rounds that
+                # don't reach it (see ShmReplicaClock.wait_for_update).
+                clock.wait_for_update(epoch, timeout=t_remaining,
+                                      target=t_target)
 
     def jump_to(self, t_target: float) -> float:
         """Advance virtual time to an absolute target (dispatcher convenience)."""

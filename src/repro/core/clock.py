@@ -178,12 +178,17 @@ class VirtualClock:
             self._cond.notify_all()
 
     # ------------------------------------------------------------- waits --
-    def wait_for_update(self, since_epoch: int, timeout: float) -> bool:
+    def wait_for_update(self, since_epoch: int, timeout: float,
+                        target: Optional[float] = None) -> bool:
         """Block until the epoch moves past ``since_epoch`` (WAITFORCLOCKUPDATE).
 
         ``timeout`` is in wall seconds.  Returns True if an update arrived,
         False on timeout — the graceful-degradation path of Algorithm 1: by
         then wall time (and hence virtual time) has advanced by ``timeout``.
+        ``target`` is the virtual time the caller is riding toward; a local
+        condition wake is cheap so this implementation ignores it, but
+        remote-clock subclasses (the shm seqlock word) use it to stay
+        asleep through epoch bumps that can't matter to the caller.
         """
         if timeout <= 0:
             with self._cond:

@@ -62,7 +62,7 @@ from .clock import UnixWallSource, VirtualClock
 from .timekeeper import Timekeeper
 
 __all__ = ["TimekeeperServer", "SocketTransport", "TransportClosed",
-           "FrameWriter", "pack_frame"]
+           "FrameWriter", "pack_frame", "handle_timekeeper_request"]
 
 _LEN = struct.Struct(">I")
 
@@ -86,19 +86,43 @@ class FrameWriter:
     ``sendmsg``.  Raises the underlying ``OSError`` to the flushing sender;
     frames it had drained are lost with the connection (same contract as the
     direct ``sendall`` path this replaces).
+
+    ``send(frame, tag=...)`` marks the frame *coalescable*: if a frame with
+    the same tag is still queued (the flusher is stuck inside a syscall on a
+    slow socket), the new frame replaces it in place instead of appending.
+    Clock broadcasts use this — replica clocks install updates with
+    max(offset)/max(epoch), so only the newest queued update carries any
+    information, and a burst of N epoch bumps leaves at most one pending
+    clock frame per peer no matter how slow the socket drains.
     """
 
     def __init__(self, sock: socket.socket):
         self._sock = sock
         self._lock = threading.Lock()
         self._queue: list = []
+        self._tag_pos: Dict[str, int] = {}
         self._flushing = False
         self.flushes = 0          # syscall batches issued
         self.frames = 0           # frames written (frames > flushes == win)
+        self.coalesced = 0        # tagged frames superseded before hitting wire
 
-    def send(self, *frames: bytes) -> None:
+    def pending(self) -> int:
+        """Frames queued but not yet handed to a syscall (tests/metrics)."""
         with self._lock:
-            self._queue.extend(frames)
+            return len(self._queue)
+
+    def send(self, *frames: bytes, tag: Optional[str] = None) -> None:
+        with self._lock:
+            if tag is not None:
+                pos = self._tag_pos.get(tag)
+                if pos is not None:
+                    self._queue[pos] = frames[0]
+                    self.coalesced += len(frames)
+                else:
+                    self._tag_pos[tag] = len(self._queue)
+                    self._queue.extend(frames)
+            else:
+                self._queue.extend(frames)
             if self._flushing:
                 return            # the elected flusher will carry these out
             self._flushing = True
@@ -106,6 +130,7 @@ class FrameWriter:
             while True:
                 with self._lock:
                     batch, self._queue = self._queue, []
+                    self._tag_pos.clear()
                     if not batch:
                         self._flushing = False
                         return
@@ -157,6 +182,68 @@ def _recv_exact(sock: socket.socket, n: int) -> Optional[bytes]:
             return None
         buf += chunk
     return buf
+
+
+def handle_timekeeper_request(
+    tk: Timekeeper, msg: dict, actors_here: set
+) -> dict:
+    """Apply one fan-in request to the Timekeeper and build the reply dict.
+
+    This is the protocol logic shared by every server front-end — the TCP
+    :class:`TimekeeperServer` and the shared-memory server in
+    :mod:`repro.core.shm_transport` dispatch through the same function, so
+    the wire ops (and their error/piggyback semantics) cannot drift between
+    transports.  ``actors_here`` is the caller's per-peer registration set:
+    it is mutated on register/deregister so the caller's cleanup path can
+    deregister whatever a dead peer left behind.
+    """
+    op = msg["op"]
+    try:
+        if op == "jump":
+            epoch = tk.request_jump(msg["actor"], msg["target"])
+            reply = {"op": "jump_ack", "rid": msg["rid"], "epoch": epoch}
+        elif op == "jump_run":
+            epoch = tk.request_jump_run(
+                msg["actor"],
+                msg["targets"],
+                unpark=bool(msg.get("unpark")),
+                park_after=bool(msg.get("park_after")),
+            )
+            reply = {"op": "jump_ack", "rid": msg["rid"], "epoch": epoch}
+        elif op == "register":
+            tk.register_actor(msg["actor"])
+            actors_here.add(msg["actor"])
+            reply = {"op": "register_ack", "rid": msg["rid"]}
+        elif op == "deregister":
+            tk.deregister_actor(msg["actor"])
+            actors_here.discard(msg["actor"])
+            reply = {"op": "deregister_ack", "rid": msg["rid"]}
+        elif op == "park":
+            tk.park_actor(msg["actor"])
+            reply = {"op": "park_ack", "rid": msg["rid"]}
+        elif op == "unpark":
+            tk.unpark_actor(msg["actor"])
+            reply = {"op": "unpark_ack", "rid": msg["rid"]}
+        elif op == "time":
+            reply = {"op": "time_ack", "rid": msg["rid"]}
+        else:
+            reply = {"op": "error", "rid": msg.get("rid"),
+                     "error": f"unknown op {op!r}"}
+    except (KeyError, RuntimeError) as e:
+        # Unregistered actor / closed Timekeeper: the *request* fails, the
+        # peer (and its other actors) lives on.
+        reply = {"op": "error", "rid": msg["rid"], "error": str(e)}
+    if reply["op"] != "error":
+        # Every ack piggybacks the current clock pair (distinct keys:
+        # jump_ack's "epoch" is the *pre-resolution* value the client waits
+        # past).  The reply path is FIFO with this peer's broadcasts, but a
+        # *cross-channel* message (e.g. a cluster-plane submit racing the
+        # fan-out) can outrun them — piggybacking bounds that staleness at
+        # one RPC, so an actor acting on an ack always acts on a clock at
+        # least as fresh as the state that ack observed.
+        reply["clock_offset"] = tk.clock.offset
+        reply["clock_epoch"] = tk.clock.epoch
+    return reply
 
 
 class TimekeeperServer:
@@ -228,7 +315,10 @@ class TimekeeperServer:
                 writers = list(self._writers.items())
             for cid, writer in writers:
                 try:
-                    writer.send(frame)
+                    # Tagged: a clock frame still queued behind a slow
+                    # socket's flusher is replaced, never stacked — a burst
+                    # of epoch bumps leaves <=1 pending frame per peer.
+                    writer.send(frame, tag="clock")
                 except OSError:
                     self._drop(cid)
             if stop:
@@ -266,56 +356,7 @@ class TimekeeperServer:
                 msg = _recv_frame(conn)
                 if msg is None:
                     break
-                op = msg["op"]
-                try:
-                    if op == "jump":
-                        epoch = tk.request_jump(msg["actor"], msg["target"])
-                        reply = {"op": "jump_ack", "rid": msg["rid"],
-                                 "epoch": epoch}
-                    elif op == "jump_run":
-                        epoch = tk.request_jump_run(
-                            msg["actor"],
-                            msg["targets"],
-                            unpark=bool(msg.get("unpark")),
-                            park_after=bool(msg.get("park_after")),
-                        )
-                        reply = {"op": "jump_ack", "rid": msg["rid"],
-                                 "epoch": epoch}
-                    elif op == "register":
-                        tk.register_actor(msg["actor"])
-                        actors_here.add(msg["actor"])
-                        reply = {"op": "register_ack", "rid": msg["rid"]}
-                    elif op == "deregister":
-                        tk.deregister_actor(msg["actor"])
-                        actors_here.discard(msg["actor"])
-                        reply = {"op": "deregister_ack", "rid": msg["rid"]}
-                    elif op == "park":
-                        tk.park_actor(msg["actor"])
-                        reply = {"op": "park_ack", "rid": msg["rid"]}
-                    elif op == "unpark":
-                        tk.unpark_actor(msg["actor"])
-                        reply = {"op": "unpark_ack", "rid": msg["rid"]}
-                    elif op == "time":
-                        reply = {"op": "time_ack", "rid": msg["rid"]}
-                    else:
-                        reply = {"op": "error", "rid": msg.get("rid"),
-                                 "error": f"unknown op {op!r}"}
-                except (KeyError, RuntimeError) as e:
-                    # Unregistered actor / closed Timekeeper: the *request*
-                    # fails, the connection (and its other actors) live on.
-                    reply = {"op": "error", "rid": msg["rid"], "error": str(e)}
-                if reply["op"] != "error":
-                    # Every ack piggybacks the current clock pair (distinct
-                    # keys: jump_ack's "epoch" is the *pre-resolution* value
-                    # the client waits past).  The reply path is FIFO with
-                    # this connection's broadcasts, but a *cross-channel*
-                    # message (e.g. a cluster-plane submit racing the
-                    # fan-out) can outrun them — piggybacking bounds that
-                    # staleness at one RPC, so an actor acting on an ack
-                    # always acts on a clock at least as fresh as the state
-                    # that ack observed.
-                    reply["clock_offset"] = tk.clock.offset
-                    reply["clock_epoch"] = tk.clock.epoch
+                reply = handle_timekeeper_request(tk, msg, actors_here)
                 # Reply through the shared per-connection writer so acks
                 # coalesce with concurrent clock broadcasts into one
                 # sendmsg flush instead of interleaved sendall syscalls.

@@ -22,8 +22,9 @@ parity bar.  See ``docs/scenarios.md``.
 """
 
 from .presets import PRESETS, describe, get_preset, list_presets
-from .runner import (CompareResult, ParityError, ScenarioResult, compare,
-                     derive_cell_seed, run, run_sweep)
+from .runner import (BACKEND_ALIASES, CompareResult, ParityError,
+                     ScenarioResult, compare, derive_cell_seed, run,
+                     run_sweep)
 from .spec import (BACKENDS, AutoscaleSpec, PoolSpec, RoutingSpec, Scenario,
                    SLOSpec, SpecError, WorkloadSpec, scenario_with)
 from .sweep import Sweep
@@ -39,6 +40,7 @@ __all__ = [
     "scenario_with",
     "Sweep",
     "BACKENDS",
+    "BACKEND_ALIASES",
     "run",
     "run_sweep",
     "derive_cell_seed",

@@ -86,6 +86,8 @@ def _cmd_run(args) -> int:
         overrides[key] = args.sessions
     if args.streaming:
         overrides["workload.streaming"] = True
+    if getattr(args, "transport", None):
+        overrides["pool.transport"] = args.transport
     if overrides:
         scenario = scenario_with(scenario, **overrides)
     res = run(scenario, backend=args.backend, timeout=args.timeout,
@@ -179,7 +181,12 @@ def main(argv=None) -> int:
     p = sub.add_parser("run", help="run one scenario on one backend")
     p.add_argument("spec")
     p.add_argument("--backend", default="thread",
-                   choices=["thread", "process", "des"])
+                   choices=["thread", "process", "des",
+                            "process-tcp", "process-shm"])
+    p.add_argument("--transport", default="",
+                   choices=["", "tcp", "shm"],
+                   help="override pool.transport (the process backend's "
+                        "wire: framed TCP or shared-memory rings)")
     p.add_argument("--sessions", type=int, default=None,
                    help="override workload size (num_sessions for session "
                         "workloads, num_requests for open loop)")
@@ -199,7 +206,8 @@ def main(argv=None) -> int:
     p.add_argument("--axis", action="append",
                    help="dotted.path=v1,v2,... (repeatable)")
     p.add_argument("--backend", default="thread",
-                   choices=["thread", "process", "des"])
+                   choices=["thread", "process", "des",
+                            "process-tcp", "process-shm"])
     p.add_argument("--jobs", type=int, default=1,
                    help="fan cells across N worker processes "
                         "(results identical to --jobs 1, same order)")
@@ -214,7 +222,8 @@ def main(argv=None) -> int:
                        help="run one scenario on several backends + parity")
     p.add_argument("spec")
     p.add_argument("--backends", default="thread,des",
-                   help="comma-separated subset of thread,process,des")
+                   help="comma-separated subset of thread,process,des "
+                        "(plus the process-tcp/process-shm wire aliases)")
     p.add_argument("--jobs", type=int, default=1,
                    help="run the backend legs in N parallel workers")
     p.add_argument("--timeout", type=float, default=600.0)

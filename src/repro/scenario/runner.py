@@ -282,7 +282,9 @@ def _session_stats(groups: Dict[int, List[tuple]]):
 # =========================================================================
 
 def _run_emulated(scenario: Scenario, wiring: _Wiring, backend: str,
-                  timeout: float, audit: str = "full") -> ScenarioResult:
+                  timeout: float, audit: str = "full",
+                  transport: Optional[str] = None,
+                  label: Optional[str] = None) -> ScenarioResult:
     from repro.cluster import Autoscaler, build_cluster
     from repro.core.clock import ManualWallSource
     from repro.serving.benchmark import BenchmarkRunner
@@ -315,7 +317,8 @@ def _run_emulated(scenario: Scenario, wiring: _Wiring, backend: str,
         tier_predictors=wiring.tier_predictors, tier_specs=wiring.tier_specs,
         router_kwargs=scenario.routing.kwargs,
         wall=ManualWallSource() if backend == "thread" else None,
-        warm_replicas=warm)
+        warm_replicas=warm,
+        transport=transport if transport is not None else pool.transport)
     autoscaler = None
     if autoscale is not None:
         autoscaler = Autoscaler(cluster, autoscale.make_policy(),
@@ -363,7 +366,8 @@ def _run_emulated(scenario: Scenario, wiring: _Wiring, backend: str,
                               key=lambda e: e[0])
         cstats = cluster.stats()
         return ScenarioResult(
-            scenario=scenario.name, backend=backend, seed=scenario.seed,
+            scenario=scenario.name, backend=label or backend,
+            seed=scenario.seed,
             num_requests=res.num_requests, num_sessions=res.num_sessions,
             ttft=res.ttft, tpot=res.tpot, e2e=res.e2e,
             session_ttft=res.session_ttft,
@@ -535,14 +539,25 @@ def _run_des(scenario: Scenario, wiring: _Wiring,
 # public entry points
 # =========================================================================
 
+BACKEND_ALIASES = {
+    # backend aliases pinning the process backend's wire transport; they
+    # override the scenario's pool.transport, so one scenario can run
+    # process-tcp vs process-shm side by side in a compare()
+    "process-tcp": ("process", "tcp"),
+    "process-shm": ("process", "shm"),
+}
+
+
 def run(scenario: Scenario, backend: str = "thread", *,
         timeout: float = 600.0, audit: str = "full") -> ScenarioResult:
     """Execute one scenario on one backend; all wiring included.
 
     ``backend`` is ``"thread"`` (in-process emulator on a deterministic
-    manual wall), ``"process"`` (replicas as OS processes over the socket
-    transport), or ``"des"`` (the discrete-event baseline).  The same
-    scenario object/JSON runs unmodified on all three.
+    manual wall), ``"process"`` (replicas as OS processes over the wire
+    transport the scenario's ``pool.transport`` selects), or ``"des"``
+    (the discrete-event baseline).  The aliases ``"process-tcp"`` and
+    ``"process-shm"`` pin the wire explicitly (compare() legs).  The same
+    scenario object/JSON runs unmodified on all of them.
 
     ``audit`` selects per-request retention (see
     :class:`ScenarioResult`): ``"full"`` (default, required for parity
@@ -550,22 +565,26 @@ def run(scenario: Scenario, backend: str = "thread", *,
     scale mode), or ``"off"`` (sketches only).
     """
     from repro.serving.benchmark import AUDIT_MODES
-    if backend not in BACKENDS:
-        raise SpecError(f"backend: invalid value {backend!r} "
-                        f"(choose from {sorted(BACKENDS)})")
+    base, transport = BACKEND_ALIASES.get(backend, (backend, None))
+    if base not in BACKENDS:
+        raise SpecError(
+            f"backend: invalid value {backend!r} (choose from "
+            f"{sorted(BACKENDS) + sorted(BACKEND_ALIASES)})")
     if audit not in AUDIT_MODES:
         raise SpecError(f"audit: invalid value {audit!r} "
                         f"(choose from {sorted(AUDIT_MODES)})")
     wiring = _Wiring(scenario)
-    if backend == "des":
+    if base == "des":
         if scenario.routing.policy == "pd_pool":
             raise SpecError("routing.policy: pd_pool is not supported on "
                             "the des backend (Table 1 semantic gap)")
         return _run_des(scenario, wiring, timeout, audit)
-    if backend == "process" and scenario.routing.policy == "pd_pool":
+    if base == "process" and scenario.routing.policy == "pd_pool":
         raise SpecError("routing.policy: pd_pool is not supported on the "
                         "process backend")
-    return _run_emulated(scenario, wiring, backend, timeout, audit)
+    return _run_emulated(scenario, wiring, base, timeout, audit,
+                         transport=transport,
+                         label=backend if backend != base else None)
 
 
 # =========================================================================

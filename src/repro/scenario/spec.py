@@ -355,6 +355,10 @@ class PoolSpec(_SpecBase):
     # predictor override: virtual step seconds (None = analytical predictor)
     step_time_s: Optional[float] = None
     tier_step_time_s: Optional[Dict[str, float]] = None
+    # process-backend wire: "tcp" (framed sockets) | "shm" (shared-memory
+    # rings + seqlock clock word); thread/des backends have no wire and
+    # ignore it, so parity scenarios stay backend-portable
+    transport: str = "tcp"
 
     def validate(self, *, path: str = "pool") -> None:
         from repro.configs import ARCH_IDS, PAPER_ARCH_IDS
@@ -362,6 +366,7 @@ class PoolSpec(_SpecBase):
         valid_models = set(ARCH_IDS) | set(PAPER_ARCH_IDS)
         _enum(path, "model", self.model, valid_models)
         _enum(path, "scheduler", self.scheduler, ("vllm", "sglang"))
+        _enum(path, "transport", self.transport, ("tcp", "shm"))
         if self.replicas < 1:
             raise SpecError(f"{path}.replicas: must be >= 1")
         if self.tiers is not None:

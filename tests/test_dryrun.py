@@ -18,7 +18,11 @@ def test_dryrun_cell_subprocess(tmp_path):
         env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "HOME": "/root",
              # force CPU: an installed libtpu would probe cloud instance
              # metadata over the network (slow retries) before falling back
-             "JAX_PLATFORMS": "cpu"})
+             "JAX_PLATFORMS": "cpu",
+             # the minimal env drops the repo conftest's no-bytecode guard,
+             # and this child imports half of src/ — keep it from littering
+             # __pycache__ dirs that test_hygiene then rejects
+             "PYTHONDONTWRITEBYTECODE": "1"})
     assert proc.returncode == 0, proc.stderr[-3000:]
     rec = json.loads(out.read_text().splitlines()[0])
     assert rec["mesh"] == "16x16" and rec["chips"] == 256

@@ -1,0 +1,37 @@
+"""Repo hygiene: no bytecode — tracked OR on disk — under ``src/``.
+
+A stale ``.pyc`` silently shadows the source edit you are testing: Python
+trusts the cached file when mtimes line up, which they do after checkouts
+and branch switches.  CI already rejects *tracked* bytecode; this tier-1
+test extends the guard to *untracked* ``__pycache__`` dirs sitting in the
+working tree (they are gitignored, so nothing else ever complains about
+them).  The root ``conftest.py`` keeps the test run itself from writing
+any, so a failure here always points at an outside invocation — fix with
+``find src -name __pycache__ -exec rm -rf {} +`` and export
+``PYTHONDONTWRITEBYTECODE=1`` in the offending workflow.
+"""
+
+import subprocess
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+def test_no_tracked_bytecode():
+    out = subprocess.run(
+        ["git", "ls-files"], cwd=REPO, check=True,
+        capture_output=True, text=True,
+    ).stdout
+    tracked = [line for line in out.splitlines()
+               if line.endswith(".pyc") or "__pycache__/" in line]
+    assert not tracked, f"bytecode committed to git: {tracked}"
+
+
+def test_no_stale_bytecode_on_disk_under_src():
+    stale = sorted(str(p.relative_to(REPO))
+                   for p in (REPO / "src").rglob("__pycache__"))
+    assert not stale, (
+        f"stale bytecode dirs under src/ (these shadow source edits): "
+        f"{stale} — remove with: find src -name __pycache__ "
+        f"-exec rm -rf {{}} +"
+    )

@@ -23,13 +23,27 @@ and end-to-end emulation throughput.  Schema (``schema_version`` 1)::
          "rounds": int, "requests": int, "batched_requests": int,
          "merged_rounds": int, "coalesced_parks": int}, ...
       ],
+      "wire": [                      # optional (PR 9+): transport-only
+        {"transport": "tcp" | "shm", # cells — bare client processes, no
+         "replicas": int,            # engine, isolating wire cost
+         "events": int, "wall_s": float, "events_per_s": float}, ...
+      ],
       "end_to_end": [                # full serving stack cells
         {"backend": "thread" | "process", "replicas": int,
+         "transport": "tcp" | "shm",  # optional: process wire (PR 9+)
          "events": int, "wall_s": float, "virtual_s": float,
          "events_per_s": float, "rounds_per_s": float,
          "virtual_per_wall": float, "timekeeper": {...}}, ...
       ],
+      "diurnal": {                   # optional headline cell (PR 9+): an
+        "backend": "process",        # hour of virtual time on a streaming
+        "transport": "shm",          # diurnal trace at high replica count
+        "replicas": 100, "virtual_s": 3600.0, "wall_s": float,
+        "events": int, "events_per_s": float, "virtual_per_wall": float,
+        "sessions": int},
       "summary": {"batched_speedup_at_8": float,
+                  "shm_speedup_at_8": float,       # optional: shm/tcp e2e
+                  "shm_wire_speedup_at_8": float,  # optional: wire-only
                   "max_events_per_s": float,
                   "max_virtual_per_wall": float}
     }
@@ -69,6 +83,18 @@ Stdlib only (CI validates artifacts with no repo imports)::
 
     python tools/bench_trajectory.py validate BENCH_6.json
     python tools/bench_trajectory.py show            # trajectory table
+    python tools/bench_trajectory.py compare BENCH_6.json BENCH_9.json \\
+        --gate 50          # fail if any shared cell regressed > 50%
+
+``compare`` diffs two artifacts of the same kind cell by cell (cells are
+keyed by what identifies them: (actors, mode) for coordination rows,
+(transport, replicas) for wire rows, (backend, transport, replicas) for
+end-to-end, (backend, sessions, audit)
+for scale) on their primary throughput metric, prints per-cell deltas, and
+— with ``--gate`` — exits non-zero when any shared cell regressed by more
+than the given percentage.  Cells present on only one side are listed but
+never gate: a new transport axis or replica count is growth, not a
+regression.
 """
 
 from __future__ import annotations
@@ -157,11 +183,39 @@ def _validate_emu_speed(doc: dict, min_replica_counts: int) -> List[str]:
                             f"thread|process, got {b!r}")
         elif isinstance(row.get("replicas"), int):
             per_backend[b].add(row["replicas"])
+        if "transport" in row and row["transport"] not in ("tcp", "shm"):
+            problems.append(f"end_to_end[{i}].transport: expected tcp|shm, "
+                            f"got {row['transport']!r}")
     for b, counts in per_backend.items():
         if len(counts) < min_replica_counts:
             problems.append(
                 f"end_to_end: backend {b!r} covers {len(counts)} replica "
                 f"counts ({sorted(counts)}), need >= {min_replica_counts}")
+
+    wire = doc.get("wire")
+    if wire is not None:
+        if not isinstance(wire, list):
+            problems.append("wire: not a list")
+            wire = []
+        for i, row in enumerate(wire):
+            if row.get("transport") not in ("tcp", "shm"):
+                problems.append(f"wire[{i}].transport: expected tcp|shm, "
+                                f"got {row.get('transport')!r}")
+            for k in ("replicas", "events", "wall_s", "events_per_s"):
+                if not _is_num(row.get(k)):
+                    problems.append(f"wire[{i}].{k}: missing or not a number")
+
+    diurnal = doc.get("diurnal")
+    if diurnal is not None:
+        if not isinstance(diurnal, dict):
+            problems.append("diurnal: not an object")
+        else:
+            for k in ("backend", "replicas", "virtual_s", "wall_s",
+                      "events", "events_per_s", "virtual_per_wall"):
+                if k not in diurnal:
+                    problems.append(f"diurnal.{k}: missing")
+                elif k != "backend" and not _is_num(diurnal[k]):
+                    problems.append(f"diurnal.{k}: not a number")
 
     summary = doc.get("summary")
     if not isinstance(summary, dict):
@@ -171,6 +225,9 @@ def _validate_emu_speed(doc: dict, min_replica_counts: int) -> List[str]:
                   "max_virtual_per_wall"):
             if not _is_num(summary.get(k)):
                 problems.append(f"summary.{k}: missing or not a number")
+        for k in ("shm_speedup_at_8", "shm_wire_speedup_at_8"):
+            if k in summary and not _is_num(summary[k]):
+                problems.append(f"summary.{k}: not a number")
     return problems
 
 
@@ -317,6 +374,88 @@ def _cmd_show(args) -> int:
     return 0
 
 
+def cells_of(doc: dict) -> dict:
+    """Comparable cells of one artifact: ``{key_tuple: throughput}``.
+
+    Keys carry everything that identifies a cell across artifacts —
+    including the transport axis introduced in PR 9, so a tcp row never
+    silently compares against an shm row.
+    """
+    kind = doc.get("bench")
+    cells: dict = {}
+    if kind == "emu_speed":
+        for row in doc.get("coordination", []):
+            cells[("coordination", row.get("actors"),
+                   row.get("coordination_mode"))] = row.get("events_per_s")
+        for row in doc.get("wire", []):
+            cells[("wire", row.get("transport"),
+                   row.get("replicas"))] = row.get("events_per_s")
+        for row in doc.get("end_to_end", []):
+            cells[("end_to_end", row.get("backend"),
+                   row.get("transport", ""),
+                   row.get("replicas"))] = row.get("events_per_s")
+        d = doc.get("diurnal")
+        if isinstance(d, dict):
+            cells[("diurnal", d.get("backend"), d.get("transport", ""),
+                   d.get("replicas"))] = d.get("events_per_s")
+    elif kind == "scale":
+        for row in doc.get("cells", []):
+            cells[("scale", row.get("backend"), row.get("sessions"),
+                   row.get("audit"))] = row.get("sessions_per_s")
+    return cells
+
+
+def _cmd_compare(args) -> int:
+    docs = []
+    for p in (args.old, args.new):
+        path = Path(p)
+        if not path.exists():
+            print(f"MISSING: {path}", file=sys.stderr)
+            return 1
+        try:
+            docs.append(json.loads(path.read_text()))
+        except json.JSONDecodeError as e:
+            print(f"MALFORMED JSON: {path}: {e}", file=sys.stderr)
+            return 1
+    old, new = docs
+    if old.get("bench") != new.get("bench"):
+        print(f"incomparable artifacts: bench {old.get('bench')!r} vs "
+              f"{new.get('bench')!r}", file=sys.stderr)
+        return 1
+    if old.get("mode") != new.get("mode"):
+        print(f"note: comparing mode={old.get('mode')!r} against "
+              f"mode={new.get('mode')!r} — deltas reflect harness size, "
+              f"not just code")
+    oc, nc = cells_of(old), cells_of(new)
+    shared = [k for k in oc if k in nc]
+    regressions = []
+    print(f"{args.old} (pr={old.get('pr')}) -> {args.new} "
+          f"(pr={new.get('pr')}), {len(shared)} shared cells:")
+    for k in sorted(shared, key=str):
+        a, b = oc[k], nc[k]
+        if not (_is_num(a) and _is_num(b)) or a <= 0:
+            print(f"  {' '.join(map(str, k)):<44} (not comparable)")
+            continue
+        pct = (b - a) / a * 100.0
+        print(f"  {' '.join(map(str, k)):<44} {a:>12.1f} -> {b:>12.1f}  "
+              f"{pct:+7.1f}%")
+        if args.gate is not None and pct < -args.gate:
+            regressions.append((k, pct))
+    for label, only in (("only in old", [k for k in oc if k not in nc]),
+                        ("only in new", [k for k in nc if k not in oc])):
+        for k in sorted(only, key=str):
+            print(f"  {' '.join(map(str, k)):<44} ({label})")
+    if regressions:
+        print(f"GATE FAILED (> {args.gate}% regression):", file=sys.stderr)
+        for k, pct in regressions:
+            print(f"  - {' '.join(map(str, k))}: {pct:+.1f}%",
+                  file=sys.stderr)
+        return 1
+    if args.gate is not None:
+        print(f"gate ok: no shared cell regressed > {args.gate}%")
+    return 0
+
+
 def main(argv: Optional[list] = None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.split("\n\n")[0])
     sub = ap.add_subparsers(dest="cmd", required=True)
@@ -327,6 +466,14 @@ def main(argv: Optional[list] = None) -> int:
     p = sub.add_parser("show", help="print the whole trajectory")
     p.add_argument("--root", default=str(REPO_ROOT))
     p.set_defaults(fn=_cmd_show)
+    p = sub.add_parser("compare",
+                       help="diff two artifacts cell by cell (+ --gate)")
+    p.add_argument("old")
+    p.add_argument("new")
+    p.add_argument("--gate", type=float, default=None, metavar="PCT",
+                   help="fail if any shared cell's throughput regressed "
+                        "by more than PCT percent")
+    p.set_defaults(fn=_cmd_compare)
     args = ap.parse_args(argv)
     return args.fn(args)
 
