@@ -139,6 +139,18 @@ def _scale(mode):
             f"rss_ratio_thread={s['rss_ratio_thread']}x")
 
 
+def _fleet(mode):
+    from benchmarks import fig_fleet as m
+    m.main(n=_n(mode, 64, 24, 12), mode=mode)
+    import json
+    doc = json.loads((m.REPO_ROOT / f"BENCH_{m.PR_NUMBER}.json").read_text())
+    s = doc["summary"]
+    return (f"replica_seconds_saving={s['replica_seconds_saving']:.0%},"
+            f"attainment_mux={s['attainment_multiplexed']},"
+            f"min_fairness={s['min_fairness']},"
+            f"parity_err={doc['parity']['max_err_steps']}steps")
+
+
 def _table1(mode):
     from benchmarks import table1_features as m
     rows = m.main()
@@ -173,6 +185,7 @@ SUITES = [
     ("fig_chaos", _chaos),
     ("fig_emu_speed", _emu_speed),
     ("fig_scale", _scale),
+    ("fig_fleet", _fleet),
     ("table1_features", _table1),
     ("roofline", _roofline),
 ]

@@ -25,9 +25,10 @@ from .cluster import Cluster, ClusterBase, ClusterConfig, build_cluster
 from .faults import (FAULT_KINDS, FaultInjector, FaultSpec, ON_CRASH_POLICIES,
                      SlowdownPredictor)
 from .process_backend import ProcessCluster, ProcessReplicaHandle
-from .router import (CostNormalizedLoadRouter, LeastOutstandingTokensRouter,
-                     PDPoolRouter, PrefixAffinityRouter, ReplicaView,
-                     RoundRobinRouter, Router, ROUTER_POLICIES, make_router)
+from .router import (AdapterAffinityRouter, CostNormalizedLoadRouter,
+                     LeastOutstandingTokensRouter, PDPoolRouter,
+                     PrefixAffinityRouter, ReplicaView, RoundRobinRouter,
+                     Router, ROUTER_POLICIES, make_router)
 from .tiers import (TierSpec, make_tier_spec, make_tier_specs,
                     probe_throughput, probe_ttft, tier_engine_cfg)
 
@@ -45,6 +46,7 @@ __all__ = [
     "LeastOutstandingTokensRouter",
     "CostNormalizedLoadRouter",
     "PrefixAffinityRouter",
+    "AdapterAffinityRouter",
     "PDPoolRouter",
     "ROUTER_POLICIES",
     "make_router",

@@ -34,6 +34,13 @@ Policies
     least-loaded prefill replica, and after the KV handoff the cluster asks
     :meth:`PDPoolRouter.route_decode` for the decode-side placement.  This
     unifies ``repro.serving.disagg`` behind the same Router interface.
+``adapter_affinity``
+    Multi-LoRA placement (``repro.fleet``): requests tagged with an adapter
+    name stick to the replica that already holds that adapter's weights
+    (first placement by shortest drain), so each adapter is resident on one
+    replica and swap churn is minimized; untagged (base-model) traffic is
+    placed by shortest drain.  A sticky replica that drains away triggers a
+    deterministic re-placement.
 ``cost_normalized_load``
     Heterogeneous-pool placement by *marginal dollar cost*: each replica is
     scored by its estimated drain time (weighted backlog, as in
@@ -79,6 +86,7 @@ __all__ = [
     "LeastOutstandingTokensRouter",
     "CostNormalizedLoadRouter",
     "PrefixAffinityRouter",
+    "AdapterAffinityRouter",
     "PDPoolRouter",
     "ROUTER_POLICIES",
     "make_router",
@@ -270,6 +278,45 @@ class PrefixAffinityRouter(Router):
         return idx
 
 
+class AdapterAffinityRouter(Router):
+    """Sticky adapter→replica placement for multi-LoRA pools.
+
+    The fleet ingress tags each request with the LoRA adapter it must be
+    served with (``req.adapter``; ``None`` = base model).  The first request
+    for an adapter is placed on the shortest-drain replica and the mapping
+    is remembered, so subsequent requests for that adapter land where its
+    weights (and its sessions' KV) already live — one resident replica per
+    adapter, no swap churn.  Base-model traffic load-balances by shortest
+    drain.  If a sticky replica leaves the active set (drain/crash) the
+    adapter is deterministically re-placed.
+
+    The sticky map is router state shared verbatim by the emulator and the
+    DES (both see the same tag on the same request in the same order), so
+    adapter placements are part of the audited decision log that parity
+    compares.
+    """
+
+    policy = "adapter_affinity"
+
+    def __init__(self, num_replicas: int):
+        super().__init__(num_replicas)
+        self._sticky: Dict[str, int] = {}
+
+    def _pick(self, req, views, active) -> int:
+        adapter = getattr(req, "adapter", None)
+        if not adapter:
+            return self._shortest_drain(views, active)
+        idx = self._sticky.get(adapter)
+        if idx is None or idx not in active:
+            idx = self._shortest_drain(views, active)
+            self._sticky[adapter] = idx
+        return idx
+
+    def adapter_placements(self) -> Dict[str, int]:
+        """Current adapter→replica residency (audit/introspection)."""
+        return dict(self._sticky)
+
+
 class PDPoolRouter(Router):
     """Prefill/decode pool split (DistServe/Splitwise-style) as routing.
 
@@ -310,7 +357,8 @@ class PDPoolRouter(Router):
 ROUTER_POLICIES = {
     cls.policy: cls
     for cls in (RoundRobinRouter, LeastOutstandingTokensRouter,
-                CostNormalizedLoadRouter, PrefixAffinityRouter, PDPoolRouter)
+                CostNormalizedLoadRouter, PrefixAffinityRouter,
+                AdapterAffinityRouter, PDPoolRouter)
 }
 
 
@@ -320,8 +368,8 @@ def make_router(policy: str, num_replicas: int, **kwargs) -> Router:
     >>> make_router("round_robin", 2).policy
     'round_robin'
     >>> sorted(ROUTER_POLICIES)      # doctest: +NORMALIZE_WHITESPACE
-    ['cost_normalized_load', 'least_outstanding_tokens', 'pd_pool',
-     'prefix_affinity', 'round_robin']
+    ['adapter_affinity', 'cost_normalized_load', 'least_outstanding_tokens',
+     'pd_pool', 'prefix_affinity', 'round_robin']
     """
     try:
         cls = ROUTER_POLICIES[policy]

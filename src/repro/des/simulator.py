@@ -83,6 +83,8 @@ class SimRequest:
     prompt_tokens: Optional[Tuple[int, ...]] = None  # routing key only
     session_id: Optional[int] = None               # closed-loop identity
     turn_index: int = 0
+    tenant: Optional[str] = None                   # fleet ingress tag
+    adapter: Optional[str] = None                  # LoRA adapter (routing key)
 
     def ttft(self) -> Optional[float]:
         if self.first_token_time is None:
@@ -238,7 +240,9 @@ class DiscreteEventSimulator:
             arrival_time=r.arrival_time,
             prompt_tokens=tuple(toks) if toks is not None else None,
             session_id=getattr(r, "session_id", None),
-            turn_index=getattr(r, "turn_index", 0))
+            turn_index=getattr(r, "turn_index", 0),
+            tenant=getattr(r, "tenant", None),
+            adapter=getattr(r, "adapter", None))
 
     def _tier_predictor(self, tier: Optional[str]):
         if tier is not None and tier in self.tier_predictors:

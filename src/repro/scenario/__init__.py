@@ -29,6 +29,19 @@ from .spec import (BACKENDS, AutoscaleSpec, PoolSpec, RoutingSpec, Scenario,
                    SLOSpec, SpecError, WorkloadSpec, scenario_with)
 from .sweep import Sweep
 
+# fleet extension specs (repro.fleet) re-exported lazily (PEP 562):
+# fleet.spec imports the codec from .spec, so an eager import here would
+# cycle through this package's own init
+_FLEET_EXPORTS = ("FleetSpec", "ModelPoolSpec", "TenantSpec", "AdapterSpec")
+
+
+def __getattr__(name):
+    if name in _FLEET_EXPORTS:
+        from repro.fleet import spec as _fleet_spec
+        return getattr(_fleet_spec, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
 __all__ = [
     "Scenario",
     "WorkloadSpec",
@@ -36,6 +49,10 @@ __all__ = [
     "RoutingSpec",
     "AutoscaleSpec",
     "SLOSpec",
+    "FleetSpec",
+    "ModelPoolSpec",
+    "TenantSpec",
+    "AdapterSpec",
     "SpecError",
     "scenario_with",
     "Sweep",

@@ -94,8 +94,25 @@ def _cmd_run(args) -> int:
               audit=args.audit)
     row = res.to_row()
     _print_rows([row])
+    _print_fleet(res)
     _emit([row], args.out)
     return 0
+
+
+def _print_fleet(res) -> None:
+    """Per-tenant rollup lines for fleet results (run/compare)."""
+    if not res.tenants:
+        return
+    print(f"fleet: {len(res.pools or {})} pools, {len(res.tenants)} "
+          f"tenants, fairness={res.fairness:.4f} "
+          f"attainment={res.tenant_attainment():.4f}")
+    for name, row in res.tenants.items():
+        target = row["model"] + (f"+{row['adapter']}" if row["adapter"]
+                                 else "")
+        print(f"  tenant {name:12s} -> {target:16s} "
+              f"submitted={row['submitted']} completed={row['completed']} "
+              f"failed={row['failed']} attainment={row['attainment']} "
+              f"goodput={row['goodput_rps']}/s")
 
 
 def _cmd_sweep(args) -> int:
@@ -162,6 +179,8 @@ def _cmd_compare(args) -> int:
               f"injected={len(any_res.faults_injected)} "
               f"requeued={any_res.requests_requeued} "
               f"failed={any_res.requests_failed}{recov}")
+    if scenario.fleet is not None:
+        _print_fleet(next(iter(cres.results.values())))
     _emit(rows + [summary], args.out)
     return 0
 

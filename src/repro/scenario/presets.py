@@ -20,7 +20,7 @@ Traceback (most recent call last):
   ...
 KeyError: "unknown preset 'nope'; choose from ['autoscale_burst', \
 'chaos_spot', 'cluster_scaling', 'crash_recovery', 'distributed_parity', \
-'elastic_tier_parity', 'hetero_mix', 'scale_stream']"
+'elastic_tier_parity', 'fleet_mix', 'hetero_mix', 'scale_stream']"
 """
 
 from __future__ import annotations
@@ -205,6 +205,63 @@ def chaos_spot() -> Scenario:
         seed=17)
 
 
+def fleet_mix() -> Scenario:
+    """Multi-model multi-tenant fleet parity cell (``repro.fleet``): a
+    shared qwen "chat" base pool serving two LoRA tenants (adapter-affinity
+    routing, per-adapter KV debit, cold-load swap stalls) plus a dedicated
+    olmo "code" pool, under a scheduled per-pool scale-up — deterministic
+    (uniform arrivals, static steps) so thread / process / DES must agree
+    to one slow-step, multi-LoRA shared-base cell included."""
+    from repro.fleet import (AdapterSpec, FleetSpec, ModelPoolSpec,
+                             TenantSpec)
+    return Scenario(
+        name="fleet_mix",
+        workload=WorkloadSpec(
+            kind="open", qps=2.0, arrival="uniform", num_requests=12,
+            prompt_len_mean=24.0, max_prompt_len=48,
+            output_len_mean=4.0, max_output_len=5),
+        fleet=FleetSpec(
+            models=(
+                ModelPoolSpec(
+                    name="chat",
+                    pool=PoolSpec(
+                        model="qwen2_5_3b", reduced=True, replicas=2,
+                        max_num_seqs=8, max_batched_tokens=64, block_size=4,
+                        num_blocks=4096, enable_prefix_caching=False,
+                        step_time_s=100e-3),
+                    routing=RoutingSpec(policy="adapter_affinity"),
+                    autoscale=AutoscaleSpec(
+                        policy="schedule", schedule=((0.5, 1),),
+                        interval_s=0.1, provision_delay_s=0.1,
+                        min_replicas=2, max_replicas=3),
+                    adapters=(
+                        AdapterSpec(name="alpha", kv_blocks=64,
+                                    swap_s=0.12),
+                        AdapterSpec(name="beta", kv_blocks=64,
+                                    swap_s=0.12),
+                    )),
+                ModelPoolSpec(
+                    name="code",
+                    pool=PoolSpec(
+                        model="olmo_1b", reduced=True, replicas=1,
+                        max_num_seqs=8, max_batched_tokens=64, block_size=4,
+                        num_blocks=4096, enable_prefix_caching=False,
+                        step_time_s=80e-3),
+                    routing=RoutingSpec(policy="round_robin")),
+            ),
+            tenants=(
+                TenantSpec(name="acme", share=2.0, priority=1,
+                           model="chat", adapter="alpha",
+                           slo=SLOSpec(ttft_s=2.0)),
+                TenantSpec(name="bolt", share=1.0, model="chat",
+                           adapter="beta", slo=SLOSpec(ttft_s=2.0)),
+                TenantSpec(name="cava", share=1.0, model="code",
+                           slo=SLOSpec(ttft_s=2.0)),
+            )),
+        slo=SLOSpec(ttft_s=2.0),
+        seed=17)
+
+
 def scale_stream() -> Scenario:
     """Diurnal-trace streaming sessions — the million-session scale base
     cell (``fig_scale`` sweeps ``num_sessions`` at fixed qps, so session
@@ -241,7 +298,7 @@ PRESETS: Dict[str, Callable[[], Scenario]] = {
     fn.__name__: fn
     for fn in (cluster_scaling, autoscale_burst, hetero_mix,
                distributed_parity, elastic_tier_parity, crash_recovery,
-               chaos_spot, scale_stream)
+               chaos_spot, fleet_mix, scale_stream)
 }
 
 

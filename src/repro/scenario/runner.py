@@ -111,6 +111,14 @@ class ScenarioResult:
     requests_failed: int = 0
     # (fault_time, respawn_time) per recovered replica, virtual seconds
     recovery_times: List[Tuple[float, float]] = field(default_factory=list)
+    # fleet plane (repro.fleet): per-tenant / per-pool rollups.  ``tenants``
+    # maps tenant name -> metrics row (submitted/completed/failed counts,
+    # attainment against the tenant's own SLO, goodput); ``pools`` maps
+    # model pool name -> its sub-run summary; ``fairness`` is Jain's index
+    # over per-tenant attainment.  All None outside fleet runs.
+    tenants: Optional[Dict[str, dict]] = None
+    pools: Optional[Dict[str, dict]] = None
+    fairness: Optional[float] = None
 
     @property
     def mean_recovery_s(self) -> float:
@@ -133,6 +141,17 @@ class ScenarioResult:
     def tiers_added(self) -> List[Optional[str]]:
         """Tier of every autoscaler-provisioned replica, join order."""
         return [t for _, t in self.scaleups]
+
+    def tenant_attainment(self) -> Optional[float]:
+        """Submission-weighted aggregate SLO attainment across tenants
+        (each tenant judged against its own SLO); None outside fleet runs."""
+        if not self.tenants:
+            return None
+        total = sum(t["submitted"] for t in self.tenants.values())
+        if not total:
+            return 0.0
+        return sum(t["attainment"] * t["submitted"]
+                   for t in self.tenants.values()) / total
 
     def slo_attainment(self, slo_ttft_s: Optional[float] = None,
                        slo_tpot_s: Optional[float] = None) -> float:
@@ -185,6 +204,11 @@ class ScenarioResult:
                     self.session_ttft.p50 * 1e3, 1)
         if self.scaleups:
             row["tiers_added"] = ",".join(t or "?" for t in self.tiers_added)
+        if self.tenants:
+            row["tenants"] = len(self.tenants)
+            row["fleet_attainment"] = round(self.tenant_attainment(), 4)
+            if self.fairness is not None:
+                row["fairness"] = round(self.fairness, 4)
         if self.faults_injected:
             row["faults"] = len(self.faults_injected)
             row["requeued"] = self.requests_requeued
@@ -284,7 +308,8 @@ def _session_stats(groups: Dict[int, List[tuple]]):
 def _run_emulated(scenario: Scenario, wiring: _Wiring, backend: str,
                   timeout: float, audit: str = "full",
                   transport: Optional[str] = None,
-                  label: Optional[str] = None) -> ScenarioResult:
+                  label: Optional[str] = None,
+                  workload_override: Optional[list] = None) -> ScenarioResult:
     from repro.cluster import Autoscaler, build_cluster
     from repro.core.clock import ManualWallSource
     from repro.serving.benchmark import BenchmarkRunner
@@ -327,8 +352,12 @@ def _run_emulated(scenario: Scenario, wiring: _Wiring, backend: str,
     if scenario.faults:
         from repro.cluster.faults import FaultInjector
         injector = FaultInjector(cluster, scenario.faults)
-    workload = scenario.workload.materialize(scenario.seed)
-    closed = scenario.workload.kind == "sessions"
+    # the fleet plane pre-splits one materialized stream across pools and
+    # passes each pool its (tenant-tagged) slice directly
+    workload = (list(workload_override) if workload_override is not None
+                else scenario.workload.materialize(scenario.seed))
+    closed = (scenario.workload.kind == "sessions"
+              and workload_override is None)
     try:
         res = BenchmarkRunner(cluster, workload,
                               transport=cluster.transport,
@@ -399,7 +428,8 @@ def _run_emulated(scenario: Scenario, wiring: _Wiring, backend: str,
 
 
 def _run_des(scenario: Scenario, wiring: _Wiring,
-             timeout: float, audit: str = "full") -> ScenarioResult:
+             timeout: float, audit: str = "full",
+             workload_override: Optional[list] = None) -> ScenarioResult:
     from repro.cluster.router import make_router
     from repro.des.simulator import DESConfig, DiscreteEventSimulator
     from repro.metrics import StreamingMetrics
@@ -420,8 +450,10 @@ def _run_des(scenario: Scenario, wiring: _Wiring,
         tier_predictors=wiring.tier_predictors,
         tier_specs=wiring.tier_specs,
         faults=scenario.faults)
-    workload = scenario.workload.materialize(scenario.seed)
-    closed = scenario.workload.kind == "sessions"
+    workload = (list(workload_override) if workload_override is not None
+                else scenario.workload.materialize(scenario.seed))
+    closed = (scenario.workload.kind == "sessions"
+              and workload_override is None)
     initial_replicas = pool.replicas
 
     if audit != "full":
@@ -573,6 +605,9 @@ def run(scenario: Scenario, backend: str = "thread", *,
     if audit not in AUDIT_MODES:
         raise SpecError(f"audit: invalid value {audit!r} "
                         f"(choose from {sorted(AUDIT_MODES)})")
+    if scenario.fleet is not None:
+        from repro.fleet.runner import run_fleet
+        return run_fleet(scenario, backend, timeout=timeout, audit=audit)
     wiring = _Wiring(scenario)
     if base == "des":
         if scenario.routing.policy == "pd_pool":
@@ -709,8 +744,17 @@ def compare(scenario: Scenario,
     backends = tuple(backends)
     if len(backends) < 2:
         raise SpecError("compare needs at least two backends")
-    wiring = _Wiring(scenario)
-    step = slow_step_s if slow_step_s is not None else wiring.slow_step_s()
+    if scenario.fleet is not None:
+        # fleet slow-step: the coarsest predictor step over *all* model
+        # pools (the parity unit must bound every pool's discretization)
+        scenario.validate()
+        from repro.fleet.runner import fleet_slow_step_s
+        step = (slow_step_s if slow_step_s is not None
+                else fleet_slow_step_s(scenario))
+    else:
+        wiring = _Wiring(scenario)
+        step = (slow_step_s if slow_step_s is not None
+                else wiring.slow_step_s())
 
     if jobs > 1:
         ctx = multiprocessing.get_context("spawn")

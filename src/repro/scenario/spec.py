@@ -149,13 +149,30 @@ def _decode(typ, value, path: str):
     raise AssertionError(f"unsupported spec field type {typ} at {path}")
 
 
+def _type_hints(cls):
+    """``typing.get_type_hints`` with the fleet extension specs in scope.
+
+    ``Scenario.fleet`` is annotated as a *forward reference* to
+    :class:`repro.fleet.FleetSpec` so the import stays one-directional
+    (``repro.fleet.spec`` imports the codec from this module).  Resolving
+    the hints therefore needs the fleet names injected into the lookup
+    namespace — lazily, at decode time, to avoid the cycle.
+    """
+    import sys
+    globalns = dict(getattr(sys.modules.get(cls.__module__), "__dict__", {}))
+    if "FleetSpec" not in globalns:
+        from repro.fleet.spec import FleetSpec
+        globalns["FleetSpec"] = FleetSpec
+    return typing.get_type_hints(cls, globalns=globalns)
+
+
 def _decode_dataclass(cls, value, path: str):
     if isinstance(value, cls):
         return value
     if not isinstance(value, dict):
         raise SpecError(f"{path}: expected an object for {cls.__name__}, "
                         f"got {value!r}")
-    hints = typing.get_type_hints(cls)
+    hints = _type_hints(cls)
     names = [f.name for f in dataclasses.fields(cls)]
     kwargs = {}
     for key, v in value.items():
@@ -512,6 +529,10 @@ class Scenario(_SpecBase):
     autoscale: Optional[AutoscaleSpec] = None
     slo: SLOSpec = field(default_factory=SLOSpec)
     faults: Tuple[FaultSpec, ...] = ()    # chaos schedule (virtual times)
+    # multi-model / multi-tenant extension (repro.fleet): when set, the
+    # fleet's per-model pools replace the top-level pool/routing/autoscale
+    # (which are ignored) and tenants split the open-loop workload
+    fleet: Optional["FleetSpec"] = None
     seed: int = 0
 
     def validate(self, *, path: str = "") -> None:
@@ -537,6 +558,25 @@ class Scenario(_SpecBase):
                     "sessions workload (a failed turn would strand its "
                     "session's follow-ups and the run would never complete); "
                     "use on_crash='requeue'")
+        if self.fleet is not None:
+            self.fleet.validate(path=f"{dot}fleet")
+            if self.workload.kind != "open":
+                raise SpecError(
+                    f"{dot}fleet: needs workload.kind='open' (the ingress "
+                    "splits one open-loop stream across tenants; sessions "
+                    "are per-pool concerns)")
+            if self.workload.streaming:
+                raise SpecError(f"{dot}fleet: streaming workloads are not "
+                                "supported on the fleet path yet")
+            if self.faults:
+                raise SpecError(f"{dot}faults: fault injection composes at "
+                                "pool level, not fleet level (run the pool's "
+                                "scenario with faults instead)")
+            if self.autoscale is not None:
+                raise SpecError(
+                    f"{dot}autoscale: a fleet scales per model pool "
+                    "(fleet.models[i].autoscale); top-level autoscale "
+                    "must be null")
         if self.autoscale is not None:
             self.autoscale.validate(path=f"{dot}autoscale")
             a = self.autoscale
@@ -602,7 +642,7 @@ def _replace_path(node, parts, value, *, path: str):
     if name not in fields_by_name:
         raise SpecError(f"{path}: unknown key (valid keys: "
                         f"{', '.join(fields_by_name)})")
-    hints = typing.get_type_hints(type(node))
+    hints = _type_hints(type(node))
     if len(parts) == 1:
         new = _decode(hints[name], value, path)
         return dataclasses.replace(node, **{name: new})

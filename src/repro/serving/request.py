@@ -37,6 +37,12 @@ class Request:
     session_id: Optional[int] = None
     turn_index: int = 0
 
+    # fleet-plane identity (repro.fleet): the tenant the ingress assigned
+    # this request to, and the LoRA adapter it must be served with (None =
+    # base model).  Routing keys only — the engine never branches on them.
+    tenant: Optional[str] = None
+    adapter: Optional[str] = None
+
     # progress
     state: RequestState = RequestState.WAITING
     num_prefilled: int = 0            # prompt tokens processed so far

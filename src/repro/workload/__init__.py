@@ -3,7 +3,7 @@
 - :mod:`repro.workload.arrival` — pluggable arrival processes (Poisson,
   gamma/bursty, on/off spikes, diurnal rate-trace replay).
 - :mod:`repro.workload.synth` — open-loop request synthesis + trace replay
-  (the former ``repro.serving.workload``, which remains as a compat shim).
+  (the former ``repro.serving.workload``; the compat shim is gone).
 - :mod:`repro.workload.session` — closed-loop multi-turn sessions whose
   follow-ups carry the prior turn's tokens (drives the emulator *and* the
   DES through one object).

@@ -26,7 +26,7 @@ from repro.core.predictor import StaticPredictor
 from repro.des.simulator import DESConfig, DiscreteEventSimulator
 from repro.serving.benchmark import BenchmarkRunner
 from repro.serving.scheduler import EngineConfig
-from repro.serving.workload import WorkloadConfig, synthesize
+from repro.workload import WorkloadConfig, synthesize
 
 MODEL = get_reduced_config("qwen2_5_3b")
 DT = 5e-3                               # StaticPredictor step duration
@@ -128,7 +128,7 @@ def test_pd_pool_splits_and_routes():
 def test_make_router_registry():
     assert set(ROUTER_POLICIES) == {
         "round_robin", "least_outstanding_tokens", "cost_normalized_load",
-        "prefix_affinity", "pd_pool"}
+        "prefix_affinity", "pd_pool", "adapter_affinity"}
     with pytest.raises(ValueError):
         make_router("nope", 2)
 

@@ -37,6 +37,37 @@ def test_config_module_surface(arch):
 
 
 @pytest.mark.parametrize("arch", ALL_IDS)
+def test_config_round_trips_into_fleet_pool(arch):
+    """Every config id must survive the declarative path end to end:
+    config id -> PoolSpec inside a FleetSpec -> strict JSON round trip ->
+    engine construction (``build_cluster`` from the decoded pool)."""
+    from repro.fleet import FleetSpec, ModelPoolSpec, TenantSpec
+    from repro.scenario import PoolSpec, Scenario
+
+    s = Scenario(
+        name=f"fleet-{arch}",
+        fleet=FleetSpec(
+            models=(ModelPoolSpec(
+                name="m",
+                pool=PoolSpec(model=arch, reduced=True, replicas=1,
+                              max_num_seqs=4, max_batched_tokens=64,
+                              block_size=4, num_blocks=4096,
+                              enable_prefix_caching=False,
+                              step_time_s=5e-3)),),
+            tenants=(TenantSpec(name="t", model="m"),)))
+    assert Scenario.from_dict(s.to_dict()) == s
+    mp = s.fleet.models[0]
+    cluster = build_cluster(mp.pool.model_config(), mp.pool.engine_config(),
+                            mp.pool.replicas, policy=mp.routing.policy,
+                            predictor=StaticPredictor(5e-3),
+                            backend="thread")
+    try:
+        assert len(cluster.replicas) == 1
+    finally:
+        cluster.shutdown()
+
+
+@pytest.mark.parametrize("arch", ALL_IDS)
 def test_config_serves_one_replica_scenario(arch):
     cfg = get_reduced_config(arch)
     engine = EngineConfig(policy="vllm", max_num_seqs=4,

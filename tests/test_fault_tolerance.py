@@ -23,7 +23,7 @@ from repro.serving.engine import LLMEngine
 from repro.serving.model_runner import TimeWarpModelRunner
 from repro.serving.scheduler import EngineConfig
 from repro.serving.stack import build_stack
-from repro.serving.workload import WorkloadConfig, synthesize
+from repro.workload import WorkloadConfig, synthesize
 from repro.configs import get_reduced_config
 
 

@@ -15,7 +15,7 @@ from repro.core.predictor import StaticPredictor
 from repro.serving.benchmark import BenchmarkRunner, compare_distributions
 from repro.serving.scheduler import EngineConfig
 from repro.serving.stack import build_stack
-from repro.serving.workload import WorkloadConfig, synthesize
+from repro.workload import WorkloadConfig, synthesize
 
 MODEL = get_reduced_config("qwen2_5_3b")
 

@@ -130,12 +130,6 @@ def test_synthesize_deterministic_across_calls():
         assert x.max_new_tokens == y.max_new_tokens
 
 
-def test_serving_shim_still_importable():
-    from repro.serving.workload import WorkloadConfig as W2
-    from repro.serving.workload import synthesize as s2
-    assert W2 is WorkloadConfig and s2 is synthesize
-
-
 def test_bursty_workload_through_config():
     reqs = synthesize(WorkloadConfig(num_requests=200, qps=4.0, seed=1,
                                      arrival="gamma",
@@ -233,30 +227,13 @@ def test_session_synthesis_deterministic(seed):
 
 
 # =========================================================================
-# compat shim deprecation
+# compat shim removal
 # =========================================================================
 
-def test_serving_workload_shim_warns_deprecation_once():
-    """The repro.serving.workload shim must emit exactly one
-    DeprecationWarning at import time — and none on re-import (module
-    cache), so legacy call sites are nudged without being spammed."""
+def test_serving_workload_shim_is_gone():
+    """The deprecated ``repro.serving.workload`` shim was removed after its
+    deprecation cycle; the canonical surface lives in ``repro.workload``."""
     import importlib
-    import sys
-    import warnings
 
-    sys.modules.pop("repro.serving.workload", None)
-    with warnings.catch_warnings(record=True) as rec:
-        warnings.simplefilter("always")
-        import repro.serving.workload as shim
-    dep = [w for w in rec if issubclass(w.category, DeprecationWarning)
-           and "repro.workload" in str(w.message)]
-    assert len(dep) == 1, f"expected exactly one warning, got {len(dep)}"
-
-    with warnings.catch_warnings(record=True) as rec2:
-        warnings.simplefilter("always")
-        import repro.serving.workload  # noqa: F401  (cached: no new warning)
-    assert not [w for w in rec2 if issubclass(w.category, DeprecationWarning)]
-
-    # the shim still re-exports the moved surface
-    assert shim.WorkloadConfig is WorkloadConfig
-    assert shim.synthesize is synthesize
+    with pytest.raises(ModuleNotFoundError):
+        importlib.import_module("repro.serving.workload")

@@ -4,7 +4,7 @@ Every PR that touches the emulation fast path lands one ``BENCH_<pr>.json``
 at the repo root (written by a ``benchmarks/fig_*`` script), so emulation
 speed is a *tracked series* rather than a one-off claim — the paper's 5–17×
 headline is only credible here if every change appends a comparable point.
-Each artifact declares its kind via ``bench``; two kinds exist:
+Each artifact declares its kind via ``bench``; three kinds exist:
 
 ``bench: "emu_speed"`` (``benchmarks/fig_emu_speed.py``) — raw coordination
 and end-to-end emulation throughput.  Schema (``schema_version`` 1)::
@@ -79,6 +79,36 @@ the session sweep; validation *enforces* ``rss_ratio <= rss_flat_within``
 point.  The comparability floor is >= 3 distinct sampled session counts on
 the thread backend and >= 2 on process.
 
+``bench: "fleet"`` (``benchmarks/fig_fleet.py``) — the fleet plane's
+multiplexed-vs-partitioned consolidation claim::
+
+    {
+      "bench": "fleet",
+      "pr": 10, "schema_version": 1, "mode": ..., "host": {...},
+      "cells": [
+        {"variant": "multiplexed" | "partitioned",
+         "backend": str, "models": int, "tenants": int,
+         "requests": int, "attainment": float, "fairness": float,
+         "replica_seconds": float, "goodput_rps": float,
+         "wall_s": float, "virtual_s": float}, ...
+      ],
+      "parity": {"backends": "thread,des", "max_err_steps": float,
+                 "decisions_equal": bool, "completed_equal": bool},
+      "summary": {"replica_seconds_saving": float,   # 1 - mux/part
+                  "attainment_multiplexed": float,
+                  "attainment_partitioned": float,
+                  "min_fairness": float,
+                  "saving_floor": float,             # gate: saving >= floor
+                  "attainment_epsilon": float}       # gate: mux >= part-eps
+    }
+
+Validation *enforces* the headline the same way scale enforces flat
+memory: ``replica_seconds_saving >= saving_floor`` and
+``attainment_multiplexed >= attainment_partitioned - attainment_epsilon``
+— a committed artifact where consolidation stopped paying is a
+regression, not a data point.  The comparability floor is at least one
+cell of each variant.
+
 Stdlib only (CI validates artifacts with no repo imports)::
 
     python tools/bench_trajectory.py validate BENCH_6.json
@@ -89,8 +119,9 @@ Stdlib only (CI validates artifacts with no repo imports)::
 ``compare`` diffs two artifacts of the same kind cell by cell (cells are
 keyed by what identifies them: (actors, mode) for coordination rows,
 (transport, replicas) for wire rows, (backend, transport, replicas) for
-end-to-end, (backend, sessions, audit)
-for scale) on their primary throughput metric, prints per-cell deltas, and
+end-to-end, (backend, sessions, audit) for scale, (variant, backend,
+tenants) for fleet) on their primary throughput metric, prints per-cell
+deltas, and
 — with ``--gate`` — exits non-zero when any shared cell regressed by more
 than the given percentage.  Cells present on only one side are listed but
 never gate: a new transport axis or replica count is growth, not a
@@ -116,6 +147,9 @@ _E2E_REQUIRED = ("backend", "replicas", "events", "wall_s", "virtual_s",
 _SCALE_REQUIRED = ("backend", "sessions", "requests", "audit", "qps",
                    "wall_s", "virtual_s", "sessions_per_s", "requests_per_s",
                    "virtual_per_wall", "peak_rss_mb")
+_FLEET_REQUIRED = ("variant", "backend", "models", "tenants", "requests",
+                   "attainment", "fairness", "replica_seconds",
+                   "goodput_rps", "wall_s", "virtual_s")
 
 
 def _is_num(v) -> bool:
@@ -141,9 +175,11 @@ def validate(doc: dict, *, min_replica_counts: int = 3) -> List[str]:
         problems += _validate_emu_speed(doc, min_replica_counts)
     elif kind == "scale":
         problems += _validate_scale(doc)
+    elif kind == "fleet":
+        problems += _validate_fleet(doc)
     else:
-        problems.append(f"bench: expected 'emu_speed' or 'scale', "
-                        f"got {kind!r}")
+        problems.append(f"bench: expected 'emu_speed', 'scale', or "
+                        f"'fleet', got {kind!r}")
     return problems
 
 
@@ -283,6 +319,84 @@ def _validate_scale(doc: dict) -> List[str]:
     return problems
 
 
+def _validate_fleet(doc: dict) -> List[str]:
+    """Floor: at least one multiplexed and one partitioned cell, plus the
+    consolidation gates ``replica_seconds_saving >= saving_floor`` and
+    ``attainment_multiplexed >= attainment_partitioned - epsilon``."""
+    problems: List[str] = []
+    cells = doc.get("cells")
+    if not isinstance(cells, list) or not cells:
+        problems.append("cells: missing or empty")
+        cells = []
+    variants: set = set()
+    for i, row in enumerate(cells):
+        for k in _FLEET_REQUIRED:
+            if k not in row:
+                problems.append(f"cells[{i}].{k}: missing")
+            elif k not in ("variant", "backend") and not _is_num(row[k]):
+                problems.append(f"cells[{i}].{k}: not a number")
+        v = row.get("variant")
+        if v not in ("multiplexed", "partitioned"):
+            problems.append(f"cells[{i}].variant: expected "
+                            f"multiplexed|partitioned, got {v!r}")
+        else:
+            variants.add(v)
+        att = row.get("attainment")
+        if _is_num(att) and not 0.0 <= att <= 1.0:
+            problems.append(f"cells[{i}].attainment: {att} outside [0, 1]")
+        fair = row.get("fairness")
+        if _is_num(fair) and not 0.0 < fair <= 1.0:
+            problems.append(f"cells[{i}].fairness: {fair} outside (0, 1]")
+    for v in ("multiplexed", "partitioned"):
+        if cells and v not in variants:
+            problems.append(f"cells: no {v!r} cell — the consolidation "
+                            f"claim needs both sides of the comparison")
+
+    parity = doc.get("parity")
+    if not isinstance(parity, dict):
+        problems.append("parity: missing")
+    else:
+        if not _is_num(parity.get("max_err_steps")):
+            problems.append("parity.max_err_steps: missing or not a number")
+        elif parity["max_err_steps"] > 1.0:
+            problems.append(f"parity.max_err_steps: "
+                            f"{parity['max_err_steps']} exceeds the "
+                            f"one-slow-step bar")
+        for k in ("decisions_equal", "completed_equal"):
+            if not isinstance(parity.get(k), bool):
+                problems.append(f"parity.{k}: missing or not a bool")
+            elif not parity[k]:
+                problems.append(f"parity.{k}: false — fleet backends "
+                                f"diverged")
+
+    summary = doc.get("summary")
+    if not isinstance(summary, dict):
+        problems.append("summary: missing")
+        return problems
+    for k in ("replica_seconds_saving", "attainment_multiplexed",
+              "attainment_partitioned", "min_fairness", "saving_floor",
+              "attainment_epsilon"):
+        if not _is_num(summary.get(k)):
+            problems.append(f"summary.{k}: missing or not a number")
+    saving = summary.get("replica_seconds_saving")
+    floor = summary.get("saving_floor")
+    if _is_num(saving) and _is_num(floor) and saving < floor:
+        problems.append(
+            f"summary.replica_seconds_saving: {saving} below the "
+            f"consolidation gate ({floor}) — multiplexing must keep "
+            f"beating static partitioning on replica-seconds")
+    mux = summary.get("attainment_multiplexed")
+    part = summary.get("attainment_partitioned")
+    eps = summary.get("attainment_epsilon")
+    if (_is_num(mux) and _is_num(part) and _is_num(eps)
+            and mux < part - eps):
+        problems.append(
+            f"summary.attainment_multiplexed: {mux} fell more than "
+            f"{eps} below partitioned ({part}) — consolidation is "
+            f"paying for its savings with SLO misses")
+    return problems
+
+
 def write_bench(doc: dict, path: Path) -> Path:
     """Validate then write one trajectory point (refuses malformed docs —
     a broken artifact in the series is worse than a missing one)."""
@@ -335,6 +449,13 @@ def _cmd_validate(args) -> int:
               f"rss_ratio_thread={s['rss_ratio_thread']} "
               f"rss_ratio_process={s['rss_ratio_process']} "
               f"(gate <= {s['rss_flat_within']})")
+    elif doc["bench"] == "fleet":
+        print(f"{head} "
+              f"replica_seconds_saving={s['replica_seconds_saving']} "
+              f"(gate >= {s['saving_floor']}) "
+              f"attainment={s['attainment_multiplexed']} vs "
+              f"partitioned={s['attainment_partitioned']} "
+              f"min_fairness={s['min_fairness']}")
     else:
         print(f"{head} "
               f"batched_speedup_at_8={s['batched_speedup_at_8']}x "
@@ -350,6 +471,7 @@ def _cmd_show(args) -> int:
         return 0
     speed = [d for d in points if d.get("bench") == "emu_speed"]
     scale = [d for d in points if d.get("bench") == "scale"]
+    fleet = [d for d in points if d.get("bench") == "fleet"]
     if speed:
         print(f"{'pr':>4}  {'mode':<6} {'batched@8':>10}  "
               f"{'max_events/s':>13}  {'max_virt/wall':>13}")
@@ -371,6 +493,18 @@ def _cmd_show(args) -> int:
                   f"{s.get('max_sessions_per_s', float('nan')):>10.0f}  "
                   f"{s.get('rss_ratio_thread', float('nan')):>9.2f}x  "
                   f"{s.get('rss_ratio_process', float('nan')):>8.2f}x")
+    if fleet:
+        if speed or scale:
+            print()
+        print(f"{'pr':>4}  {'mode':<6} {'rs_saving':>9}  "
+              f"{'attain_mux':>10}  {'attain_part':>11}  {'fairness':>8}")
+        for doc in fleet:
+            s = doc.get("summary", {})
+            print(f"{doc.get('pr', '?'):>4}  {doc.get('mode', '?'):<6} "
+                  f"{s.get('replica_seconds_saving', float('nan')):>9.3f}  "
+                  f"{s.get('attainment_multiplexed', float('nan')):>10.4f}  "
+                  f"{s.get('attainment_partitioned', float('nan')):>11.4f}  "
+                  f"{s.get('min_fairness', float('nan')):>8.4f}")
     return 0
 
 
@@ -402,6 +536,10 @@ def cells_of(doc: dict) -> dict:
         for row in doc.get("cells", []):
             cells[("scale", row.get("backend"), row.get("sessions"),
                    row.get("audit"))] = row.get("sessions_per_s")
+    elif kind == "fleet":
+        for row in doc.get("cells", []):
+            cells[("fleet", row.get("variant"), row.get("backend"),
+                   row.get("tenants"))] = row.get("goodput_rps")
     return cells
 
 
